@@ -1,0 +1,48 @@
+"""Benchmark utilities: timing, CSV emission, v5e roofline model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12  # v5e bf16 per chip
+HBM_BW = 819e9
+
+rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.2f},{derived}"
+    rows.append(line)
+    print(line, flush=True)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time in us of a jitted callable (blocks on ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def v5e_time_model(flops: float, hbm_bytes: float) -> float:
+    """Roofline step time (s) on one v5e chip."""
+    return max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+
+
+def mx_bytes(m, k, n, elem_bits, block_size, acc_bytes=4, both_mx=True):
+    """HBM bytes for an MX matmul: compact operands + accumulator output."""
+    a = m * k * elem_bits / 8 + m * (k // block_size)
+    b = k * n * elem_bits / 8 + n * (k // block_size)
+    if not both_mx:
+        a = m * k * 2  # wide bf16 activations
+    return a + b + m * n * acc_bytes
+
+
+def wide_bytes(m, k, n, elem_bytes=4, acc_bytes=4):
+    return (m * k + k * n) * elem_bytes + m * n * acc_bytes

@@ -1,0 +1,47 @@
+"""Framework-level benchmark: per-arch train/decode step on CPU (reduced
+configs) across quantization policies. Measures the *software structure*
+cost of MX integration (quantize ops in-graph, QAT custom-vjp) — the TPU
+performance story lives in §Roofline and the dry-run JSONs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import WIDE
+from repro.nn import model
+from repro.train import OptimConfig, init_state, make_train_step
+
+from .common import emit, time_fn
+
+ARCHS = ["gemma2-2b", "mixtral-8x22b", "mamba2-780m", "deepseek-v2-lite-16b"]
+
+
+def run():
+    for arch in ARCHS:
+        for policy in ("wide", "mxfp8_qat", "mxfp8_weight_only"):
+            cfg = get_reduced(arch)
+            if policy == "wide":
+                cfg = cfg.replace(quant=WIDE)
+            elif policy == "mxfp8_weight_only":
+                cfg = cfg.replace(quant=cfg.quant.replace(quantize_acts=False))
+            state, _ = init_state(jax.random.PRNGKey(0), cfg)
+            step = jax.jit(make_train_step(cfg, OptimConfig()))
+            if cfg.family == "vlm":
+                batch = {"embeds": jnp.zeros((2, 32, cfg.d_model)),
+                         "labels": jnp.zeros((2, 32), jnp.int32)}
+            elif cfg.num_codebooks > 1:
+                batch = {"tokens": jnp.zeros((2, 32, cfg.num_codebooks), jnp.int32),
+                         "labels": jnp.zeros((2, 32, cfg.num_codebooks), jnp.int32)}
+            else:
+                batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                         "labels": jnp.zeros((2, 32), jnp.int32)}
+            us = time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                         iters=3, warmup=1)
+            emit(f"e2e/train_step/{arch}/{policy}", us, "reduced_config")
+
+
+if __name__ == "__main__":
+    run()

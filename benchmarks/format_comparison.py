@@ -1,0 +1,42 @@
+"""Paper Table III analogue: format comparison on the TPU roofline.
+
+The paper compares VMXDOTP against SoA MX engines on GFLOPS/mm^2 and
+GFLOPS/W — silicon axes with no CPU analogue (noted in DESIGN.md). The
+TPU-meaningful comparison is effective throughput per format under the
+roofline at serving- and training-like shapes, plus weight-storage
+compression (the deployment axis the formats actually buy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import PEAK_FLOPS, emit, mx_bytes, v5e_time_model, wide_bytes
+
+
+def run():
+    shapes = {"decode_like": (16, 4096, 14336), "train_like": (4096, 4096, 4096)}
+    for tag, (m, k, n) in shapes.items():
+        flops = 2.0 * m * k * n
+        rows = {
+            "fp32": v5e_time_model(flops, wide_bytes(m, k, n, 4)),
+            "bf16": v5e_time_model(flops, wide_bytes(m, k, n, 2)),
+            "fp8_dense": v5e_time_model(flops, wide_bytes(m, k, n, 1)),
+            "mxfp8": v5e_time_model(flops, mx_bytes(m, k, n, 8, 32)),
+            "mxfp8_k8": v5e_time_model(flops, mx_bytes(m, k, n, 8, 8)),
+            "mxfp4": v5e_time_model(flops, mx_bytes(m, k, n, 4, 32)),
+            "mxfp8_weight_only": v5e_time_model(
+                flops, mx_bytes(m, k, n, 8, 32, both_mx=False)),
+        }
+        base = rows["bf16"]
+        for name, t in rows.items():
+            emit(f"table3/{tag}/{name}", t * 1e6,
+                 f"eff_gflops={flops / t / 1e9:.0f};vs_bf16={base / t:.2f}x;"
+                 f"util={flops / PEAK_FLOPS / t:.3f}")
+    # weight storage (deployment axis)
+    for fmt, bits in (("bf16", 16), ("mxfp8", 8.25), ("mxfp4", 4.25)):
+        emit(f"table3/weight_bytes_per_param/{fmt}", 0.0,
+             f"bits={bits};vs_bf16={16 / bits:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV. Roofline (§Roofline) is separate:
+``python -m benchmarks.roofline`` (it needs the dry-run JSONs).
+"""
+from __future__ import annotations
+
+import traceback
+
+from . import (block_size_sweep, common, e2e_step, emulation_breakdown,
+               format_comparison, speedup, throughput_sweep)
+
+SUITES = [
+    ("fig2_emulation_breakdown", emulation_breakdown.run),
+    ("fig5a_speedup", speedup.run),
+    ("fig5bc_throughput_sweep", throughput_sweep.run),
+    ("table1_block_size_sweep", block_size_sweep.run),
+    ("table3_format_comparison", format_comparison.run),
+    ("e2e_step", e2e_step.run),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in SUITES:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serve a small model with MX-compressed weights and batched requests.
+
+  PYTHONPATH=src python examples/serve_mx.py
+"""
+from repro.launch import serve as serve_launcher
+
+serve_launcher.main([
+    "--arch", "recurrentgemma-2b", "--reduced", "--batch", "4",
+    "--prompt-len", "12", "--new-tokens", "24",
+    "--quant", "mxfp8", "--quantize-kv",
+])

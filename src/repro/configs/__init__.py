@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned configs + the paper's own bench.
+
+``get_config(name)`` returns the full ModelConfig; ``get_reduced(name)`` a
+CPU-smoke-sized config of the same family; ``--arch <id>`` in the launchers
+resolves through :data:`ARCHS`.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "gemma2-2b": "gemma2_2b",
+    "gemma2-9b": "gemma2_9b",
+    "phi4-mini-3.8b": "phi4_mini",
+    "granite-8b": "granite_8b",
+    "mamba2-780m": "mamba2_780m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+from .shapes import SHAPES, ShapeSpec, shape_applicable  # noqa: E402
+
+
+def _module(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[name]}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_reduced(name: str):
+    return _module(name).reduced()
+
+
+def list_archs():
+    return sorted(ARCHS)

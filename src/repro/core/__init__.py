@@ -1,0 +1,26 @@
+"""Core MX (microscaling) library: formats, quantization, dot products.
+
+The paper's contribution — native block-scaled dot products with
+software-defined block sizes — lives here as a composable JAX module.
+"""
+from . import formats
+from .dot import MODES, fake_quant, mx_dot, qat_matmul
+from .mx_tensor import MXTensor
+from .policy import MXFP4, MXFP8, WIDE, QuantConfig
+from .quantize import dequantize, quantize, quantize_value
+
+__all__ = [
+    "formats",
+    "MXTensor",
+    "QuantConfig",
+    "WIDE",
+    "MXFP8",
+    "MXFP4",
+    "quantize",
+    "dequantize",
+    "quantize_value",
+    "mx_dot",
+    "qat_matmul",
+    "fake_quant",
+    "MODES",
+]

@@ -1,0 +1,253 @@
+"""Element and scale formats of the OCP Microscaling (MX) specification v1.0.
+
+This module defines the *numerics* of the formats used by VMXDOTP:
+
+  * element formats: FP8 E4M3 (``float8_e4m3fn``), FP8 E5M2 (``float8_e5m2``)
+    and FP4 E2M1 (2-per-byte nibble packing),
+  * the shared-scale format E8M0 (8-bit biased power-of-two exponent,
+    bias 127, ``0xFF`` reserved for NaN).
+
+All casts are round-to-nearest-even with saturation (OCP MX spec §5.2.1 /
+microxcaling default), implemented in pure ``jnp`` so they run identically
+under jit, shard_map and Pallas interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+E8M0_BIAS = 127
+E8M0_NAN = 255  # 0xFF encodes NaN per the MX spec.
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementFormat:
+    """Static description of an MX element format."""
+
+    name: str
+    bits: int
+    exp_bits: int
+    mantissa_bits: int
+    emax: int  # largest unbiased exponent of a finite value
+    max: float  # largest finite magnitude
+    storage_dtype: object  # jnp dtype used to store encoded elements
+
+    @property
+    def packed(self) -> bool:
+        """True if two elements are packed per storage byte (FP4)."""
+        return self.bits == 4
+
+    @property
+    def eps(self) -> float:
+        """Machine epsilon of the element format (2^-mantissa_bits)."""
+        return 2.0 ** (-self.mantissa_bits)
+
+
+FP8_E4M3 = ElementFormat(
+    name="fp8_e4m3",
+    bits=8,
+    exp_bits=4,
+    mantissa_bits=3,
+    emax=8,
+    max=448.0,
+    storage_dtype=jnp.float8_e4m3fn,
+)
+
+FP8_E5M2 = ElementFormat(
+    name="fp8_e5m2",
+    bits=8,
+    exp_bits=5,
+    mantissa_bits=2,
+    emax=15,
+    max=57344.0,
+    storage_dtype=jnp.float8_e5m2,
+)
+
+FP4_E2M1 = ElementFormat(
+    name="fp4_e2m1",
+    bits=4,
+    exp_bits=2,
+    mantissa_bits=1,
+    emax=2,
+    max=6.0,
+    storage_dtype=jnp.uint8,  # two E2M1 nibbles per byte
+)
+
+FORMATS = {f.name: f for f in (FP8_E4M3, FP8_E5M2, FP4_E2M1)}
+
+# Positive representable magnitudes of FP4 E2M1, in encoding order. Index i
+# is the nibble value i (sign bit cleared).
+_FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+# Midpoints between consecutive grid values, used for round-to-nearest.
+_FP4_MID = (_FP4_GRID[:-1] + _FP4_GRID[1:]) / 2.0
+
+
+def get_format(fmt) -> ElementFormat:
+    if isinstance(fmt, ElementFormat):
+        return fmt
+    return FORMATS[fmt]
+
+
+# ---------------------------------------------------------------------------
+# E8M0 scale format
+# ---------------------------------------------------------------------------
+
+
+def e8m0_from_amax(amax: jnp.ndarray, fmt: ElementFormat) -> jnp.ndarray:
+    """Biased E8M0 shared exponent for a block with absolute maximum ``amax``.
+
+    Following the OCP spec / microxcaling: ``shared_exp = floor(log2(amax)) -
+    emax_elem`` so the largest block element maps near the top of the element
+    format's range. Uses frexp for an exact floor(log2).
+    """
+    amax = amax.astype(jnp.float32)
+    _, exp = jnp.frexp(amax)  # amax = m * 2^exp with m in [0.5, 1)
+    e_amax = exp - 1  # floor(log2(amax)) exactly
+    biased = e_amax - fmt.emax + E8M0_BIAS
+    biased = jnp.where(amax > 0, biased, 0)
+    return jnp.clip(biased, 0, 254).astype(jnp.uint8)
+
+
+def e8m0_to_scale(e_biased: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Decode a biased E8M0 exponent to its power-of-two scale value.
+
+    Uses the paper's integer-shift construction (Listing 1: ``vsll.vi 23``):
+    placing the biased exponent directly into the FP32 exponent field is
+    exact, whereas ``exp2`` is not guaranteed to be (XLA lowers it via
+    ``exp(x*ln2)``). ``e == 0`` decodes to the subnormal 2^-127.
+    """
+    import jax
+
+    e = e_biased.astype(jnp.uint32)
+    bits = jnp.where(e > 0, e << 23, jnp.uint32(0x00400000))
+    scale = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return scale.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Element casts (value space): f32 -> f32 snapped to the format grid
+# ---------------------------------------------------------------------------
+
+
+def _cast_fp8_value(x: jnp.ndarray, fmt: ElementFormat) -> jnp.ndarray:
+    x = jnp.clip(x, -fmt.max, fmt.max)  # saturating cast
+    return x.astype(fmt.storage_dtype).astype(jnp.float32)
+
+
+def cast_fp4_value(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest-even saturating cast to the FP4 E2M1 value grid."""
+    sign = jnp.sign(x)
+    mag = jnp.clip(jnp.abs(x), 0.0, 6.0)
+    mid = jnp.asarray(_FP4_MID)
+    grid = jnp.asarray(_FP4_GRID)
+    idx = jnp.searchsorted(mid, mag, side="left")  # ties resolve to lower here
+    # Resolve exact ties to the even-mantissa neighbour: grid indices with an
+    # even mantissa bit are 0, 2, 4, 6 — i.e. ties between grid[i], grid[i+1]
+    # round to i when i is even, else i+1. A tie at mag == mid[idx] sits
+    # between grid[idx] and grid[idx+1].
+    t = jnp.clip(idx, 0, 6)
+    is_tie = (mag == mid[t]) & (idx == t)
+    tie_idx = jnp.where(t % 2 == 0, t, t + 1)
+    idx = jnp.where(is_tie, tie_idx, idx)
+    return sign * grid[idx]
+
+
+def cast_to_format_value(x: jnp.ndarray, fmt) -> jnp.ndarray:
+    """Cast to the element format and back to f32 (the quantization grid)."""
+    fmt = get_format(fmt)
+    x = x.astype(jnp.float32)
+    if fmt.name == "fp4_e2m1":
+        return cast_fp4_value(x)
+    return _cast_fp8_value(x, fmt)
+
+
+# ---------------------------------------------------------------------------
+# FP4 nibble encode/decode (storage space)
+# ---------------------------------------------------------------------------
+
+
+def fp4_encode(x: jnp.ndarray) -> jnp.ndarray:
+    """Encode f32 values to E2M1 nibbles (uint8 in [0, 15]), RNE + saturate."""
+    v = cast_fp4_value(x.astype(jnp.float32))
+    sign_bit = (v < 0) | ((v == 0) & (jnp.signbit(x)))
+    mag = jnp.abs(v)
+    grid = jnp.asarray(_FP4_GRID)
+    # mag is exactly a grid value; index == encoding of the magnitude.
+    code = jnp.searchsorted(grid, mag, side="left").astype(jnp.uint8)
+    return jnp.where(sign_bit, code | 0x8, code).astype(jnp.uint8)
+
+
+def fp4_decode(code: jnp.ndarray) -> jnp.ndarray:
+    """Decode E2M1 nibbles (uint8 in [0, 15]) to f32 values."""
+    grid = jnp.asarray(_FP4_GRID)
+    mag = grid[(code & 0x7).astype(jnp.int32)]
+    sign = jnp.where((code & 0x8) != 0, -1.0, 1.0)
+    return (sign * mag).astype(jnp.float32)
+
+
+def fp4_pack(nibbles: jnp.ndarray) -> jnp.ndarray:
+    """Pack pairs of nibbles along the last axis: (..., 2n) -> (..., n).
+
+    Element ``2i`` goes to the low nibble, ``2i+1`` to the high nibble,
+    matching little-endian byte-lane packing on TPU.
+    """
+    if nibbles.shape[-1] % 2 != 0:
+        raise ValueError("fp4_pack needs an even-sized last axis")
+    lo = nibbles[..., 0::2]
+    hi = nibbles[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def fp4_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`fp4_pack`: (..., n) -> (..., 2n) nibbles."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+# ---------------------------------------------------------------------------
+# Storage encode/decode for any format
+# ---------------------------------------------------------------------------
+
+
+def encode_elements(x: jnp.ndarray, fmt) -> jnp.ndarray:
+    """float values -> storage array (fp8 dtype, or packed-uint8 for FP4).
+
+    Dtype-preserving for the FP8 clip (bf16 in, bf16 clip, fp8 out) so the
+    in-graph quantizer doesn't materialize f32 copies of bf16 activations.
+    """
+    fmt = get_format(fmt)
+    if fmt.name == "fp4_e2m1":
+        return fp4_pack(fp4_encode(x))
+    work = x if x.dtype in (jnp.float32, jnp.bfloat16) else x.astype(jnp.float32)
+    return jnp.clip(work, -fmt.max, fmt.max).astype(fmt.storage_dtype)
+
+
+def decode_elements(stored: jnp.ndarray, fmt, dtype=jnp.float32) -> jnp.ndarray:
+    """Storage array -> values in ``dtype`` (last axis doubles for FP4)."""
+    fmt = get_format(fmt)
+    if fmt.name == "fp4_e2m1":
+        return fp4_decode(fp4_unpack(stored)).astype(dtype)
+    return stored.astype(dtype)
+
+
+def storage_bits_per_element(fmt) -> int:
+    return get_format(fmt).bits
+
+
+def numpy_cast_oracle(x: np.ndarray, fmt) -> np.ndarray:
+    """ml_dtypes-based cast oracle (tests cross-check against this)."""
+    fmt = get_format(fmt)
+    x = np.asarray(x, np.float32)
+    if fmt.name == "fp4_e2m1":
+        x = np.clip(x, -fmt.max, fmt.max)
+        return x.astype(ml_dtypes.float4_e2m1fn).astype(np.float32)
+    x = np.clip(x, -fmt.max, fmt.max)
+    dt = {"fp8_e4m3": ml_dtypes.float8_e4m3fn, "fp8_e5m2": ml_dtypes.float8_e5m2}[
+        fmt.name
+    ]
+    return x.astype(dt).astype(np.float32)

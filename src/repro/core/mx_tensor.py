@@ -1,0 +1,92 @@
+"""MXTensor: a pytree container for block-scaled (microscaling) arrays.
+
+An ``MXTensor`` stores an array quantized along one axis in blocks of
+``block_size`` elements. Per the OCP MX spec each block carries one shared
+E8M0 scale; elements are stored in a narrow FP format (FP8 dtypes, or
+nibble-packed uint8 for FP4).
+
+The quantized axis is always stored as the *last* axis internally; ``axis``
+records where it lives logically so ``dequantize`` can restore the layout.
+Keeping the blocked axis contiguous mirrors the paper's column-major-B layout
+("elements of the same MX block are stored contiguously in memory",
+§IV-D) and is what the Pallas kernel's BlockSpecs assume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MXTensor:
+    """Block-scaled tensor: ``elements`` (narrow FP) + E8M0 ``scales``.
+
+    Attributes:
+      elements: storage array; shape (..., K) for FP8, (..., K//2) for FP4
+        (two nibbles per byte). The blocked (contraction) axis is last.
+      scales: uint8 biased E8M0 exponents, shape (..., K // block_size).
+      fmt_name: element format name ("fp8_e4m3" | "fp8_e5m2" | "fp4_e2m1").
+      block_size: software-defined MX block size k (paper: any multiple of
+        the hardware block; here any k that divides K).
+      axis: logical position of the blocked axis in the dequantized array.
+      shape: logical (dequantized) shape.
+    """
+
+    elements: jnp.ndarray
+    scales: jnp.ndarray
+    fmt_name: str = "fp8_e4m3"
+    block_size: int = 32
+    axis: int = -1
+    shape: tuple = ()
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.elements, self.scales), (
+            self.fmt_name,
+            self.block_size,
+            self.axis,
+            self.shape,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        elements, scales = children
+        fmt_name, block_size, axis, shape = aux
+        return cls(elements, scales, fmt_name, block_size, axis, shape)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def fmt(self) -> F.ElementFormat:
+        return F.get_format(self.fmt_name)
+
+    @property
+    def k(self) -> int:
+        """Logical length of the blocked axis."""
+        return self.shape[self.axis]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k // self.block_size
+
+    @property
+    def nbytes(self) -> int:
+        """Storage footprint in bytes (elements + scales)."""
+        return self.elements.size * self.elements.dtype.itemsize + self.scales.size
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Reconstruct the wide array: ``elements * 2^(scales - 127)``."""
+        vals = F.decode_elements(self.elements, self.fmt, jnp.float32)
+        blocked = vals.reshape(*vals.shape[:-1], self.num_blocks, self.block_size)
+        scale = F.e8m0_to_scale(self.scales)[..., None]
+        wide = (blocked * scale).reshape(vals.shape)
+        if self.axis not in (-1, wide.ndim - 1):
+            wide = jnp.moveaxis(wide, -1, self.axis)
+        return wide.astype(dtype)
+
+    def astype_acc(self, dtype):  # convenience used by serving code
+        return self.dequantize(dtype)

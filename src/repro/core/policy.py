@@ -1,0 +1,59 @@
+"""Quantization policy: which tensors are MX-quantized, how, and where.
+
+This is the framework-level surface of the paper's technique: a single
+config object threaded through every layer, selecting element format,
+software-defined block size (paper design goal: not fixed to 32), execution
+mode, accumulator precision, and which tensor classes participate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """MX quantization policy for a model.
+
+    Attributes:
+      enabled: master switch; False means wide (bf16/f32) everywhere.
+      fmt: element format for weights ("fp8_e4m3" | "fp8_e5m2" | "fp4_e2m1").
+      act_fmt: element format for activations (defaults to ``fmt``; E5M2 is
+        the usual choice for gradients/activations due to range).
+      block_size: software-defined MX block size k (divides contraction dims).
+      quantize_acts: quantize activations entering matmuls (vector-vector
+        variant) or keep them wide (vector-scalar variant, weight-only).
+      mode: execution mode ("emulated" | "fused" | "pallas").
+      acc_dtype: accumulator precision (f32 per spec, bf16 compact option).
+      quantize_kv_cache: store the serving KV cache in MX format.
+      quantize_grads: MX-compress cross-pod gradient all-reduce (training).
+      mx_weight_gather: perform the FSDP weight all-gather on the MX
+        representation (fp8 elements + E8M0 scales ~= 1.06 B/param) instead
+        of wide masters — the paper's compact-operand insight applied to
+        the collective fabric (beyond-paper; §Perf iteration 5).
+    """
+
+    enabled: bool = True
+    fmt: str = "fp8_e4m3"
+    act_fmt: Optional[str] = None
+    block_size: int = 32
+    quantize_acts: bool = True
+    mode: str = "fused"
+    acc_dtype: object = jnp.float32
+    quantize_kv_cache: bool = False
+    quantize_grads: bool = False
+    mx_weight_gather: bool = True
+
+    @property
+    def activation_format(self) -> str:
+        return self.act_fmt or self.fmt
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+WIDE = QuantConfig(enabled=False)
+MXFP8 = QuantConfig(fmt="fp8_e4m3", act_fmt="fp8_e5m2")
+MXFP4 = QuantConfig(fmt="fp4_e2m1", act_fmt="fp8_e5m2")

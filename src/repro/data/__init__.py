@@ -1,0 +1,4 @@
+"""Data pipelines: deterministic synthetic + byte-level corpus."""
+from .pipeline import CorpusDataset, DataConfig, SyntheticLMDataset
+
+__all__ = ["CorpusDataset", "DataConfig", "SyntheticLMDataset"]

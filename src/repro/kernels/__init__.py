@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical MX compute hot-spots.
+
+  mx_matmul.py   fused MX matmul (VMXDOTP analogue): vv + weight-only
+  mx_quantize.py fused block quantization (amax + E8M0 + RNE cast)
+  ops.py         jit'd public wrappers (MXTensor-aware)
+  ref.py         pure-jnp oracles defining exact semantics
+"""
+from . import ref
+from .mx_attention import mx_attention_decode
+from .mx_matmul import mx_matmul_dgrad
+from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
+
+__all__ = ["mx_attention_decode", "mx_matmul", "mx_matmul_dgrad",
+           "mx_matmul_trainable", "quantize_pallas", "ref"]

@@ -1,0 +1,101 @@
+"""Pallas decode-attention kernel over an MX-quantized KV cache.
+
+The serving-side application of VMXDOTP's insight: decode attention is
+HBM-bandwidth-bound on the KV cache, so the cache is stored block-scaled
+(fp8 elements + E8M0 scales along head_dim) and decoded **in-register** —
+the wide K/V never exist in HBM. This is the vector-scalar instruction
+family (`vmxdotp.*f`): one wide query operand against compact MX operands.
+
+Per grid cell (batch b, kv-head h): load the query group (G, D) wide, the
+K/V cache tiles (T, D) compact, fold scales in VREGs, run the (G, T) logits
+matmul + masked f32 softmax + (G, D) output matmul. T tiles fit VMEM
+(32k x 128 fp8 = 4 MiB); longer caches tile over T with running
+(max, sum, acc) online-softmax state.
+
+Layouts:
+  q        (B, KVH, G, D)    bf16/f32 (G = query heads per kv head)
+  k_elems  (B, KVH, T, D)    fp8   k_scales (B, KVH, T, D//k) u8
+  v_elems  (B, KVH, T, D)    fp8   v_scales (B, KVH, T, D//k) u8
+  kpos     (T,)              i32 (absolute positions; -1 = empty slot)
+  out      (B, KVH, G, D)    f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .mx_matmul import _decode_e8m0, _decode_tile
+
+NEG_INF = -2.0e38
+
+
+def _dequant_rows(elems, scales, block_size: int):
+    """(T, D) stored elements + (T, D//k) scales -> (T, D) f32."""
+    t, d_store = elems.shape
+    vals = _decode_tile(elems, "fp8_e4m3" if elems.dtype != jnp.uint8
+                        else "fp4_e2m1")
+    d = vals.shape[-1]
+    nb = d // block_size
+    s = _decode_e8m0(scales)  # (T, nb)
+    return (vals.reshape(t, nb, block_size) * s[:, :, None]).reshape(t, d)
+
+
+def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
+                    pos_ref, o_ref, *, block_size: int, softcap):
+    """One (batch, kv_head) cell: full-T attention with masked f32 softmax."""
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = _dequant_rows(ke_ref[0, 0], ks_ref[0, 0], block_size)  # (T, D)
+    v = _dequant_rows(ve_ref[0, 0], vs_ref[0, 0], block_size)
+    d = q.shape[-1]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (d ** -0.5)  # (G, T)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    kpos = kpos_ref[...]
+    pos = pos_ref[0]
+    mask = (kpos <= pos) & (kpos >= 0)
+    logits = jnp.where(mask[None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (out / denom).astype(o_ref.dtype)
+
+
+def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
+                        *, block_size: int = 32, softcap=None,
+                        interpret: bool | None = None):
+    """Decode attention against an MX-quantized cache. Returns (B,KVH,G,D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, kvh, g, d = q.shape
+    t = k_elems.shape[2]
+    nb = k_scales.shape[-1]
+    kernel = functools.partial(_mx_attn_kernel, block_size=block_size,
+                               softcap=softcap)
+    ed = k_elems.shape[-1]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, ed), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, nb), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, ed), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, nb), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((t,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, k_elems, k_scales, v_elems, v_scales, kpos,
+      jnp.asarray(pos, jnp.int32)[None])

@@ -1,0 +1,283 @@
+"""Pallas TPU kernel for fused MX matmul — the VMXDOTP analogue.
+
+The paper's VMXDOTP instruction computes, per accumulator element,
+``vd[i] += X(A) * X(B) * sum_j A[j] * B[ki+j]`` with scales applied in
+hardware and no wide intermediate leaving the datapath. The TPU-native
+reading (DESIGN.md §2) is a tiled matmul kernel where:
+
+  * MX elements and E8M0 scales stream HBM -> VMEM in *compact* form
+    (fp8 bytes, fp4 packed nibbles, uint8 scales) — this is the bandwidth
+    win; no dequantized tensor ever exists in HBM;
+  * decode + scale application happen in-register (VREG) on VMEM tiles:
+    scales are folded into the operand tiles per MX block (exact — scales
+    are powers of two), which is the kernel form of the paper's insight
+    that an MX dot decomposes into sub-dot-products reusing block scales;
+  * the MXU then runs a full-depth (bk >= 128) contraction at full systolic
+    utilization — unlike a literal port of the 8-wide RVV instruction,
+    which would starve a 128x128 systolic array (see DESIGN.md assumption
+    deltas);
+  * accumulation is f32 (spec) or bf16 (compact option) in the output tile,
+    revisited across the K grid dimension.
+
+Layouts (blocked/contraction axis last — the paper's column-major B):
+  a_elems (M, K) fp8 | (M, K//2) packed fp4      a_scales (M, K/k) uint8
+  b_elems (N, K) fp8 | (N, K//2) packed fp4      b_scales (N, K/k) uint8
+  out     (M, N) acc_dtype
+
+Software-defined block size: any k with k | bk (bk = K-tile). Validated
+against ``ref.py`` in interpret mode; targets TPU MXU when compiled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats as F
+
+# ---------------------------------------------------------------------------
+# In-kernel decode helpers (pure jnp: lower on TPU and in interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _decode_e8m0(e: jnp.ndarray) -> jnp.ndarray:
+    """E8M0 -> f32 scale via exponent-field bitcast (paper's shift trick)."""
+    e32 = e.astype(jnp.uint32)
+    bits = jnp.where(e32 > 0, e32 << 23, jnp.uint32(0x00400000))
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _decode_fp4_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    """Arithmetic E2M1 decode of 4-bit codes (no gather/table lookup)."""
+    c = codes.astype(jnp.int32)
+    sign = jnp.where((c & 0x8) != 0, -1.0, 1.0).astype(jnp.float32)
+    e = (c >> 1) & 0x3
+    m = (c & 0x1).astype(jnp.float32)
+    pow2 = jnp.left_shift(1, jnp.maximum(e - 1, 0)).astype(jnp.float32)
+    mag = jnp.where(e == 0, 0.5 * m, pow2 * (1.0 + 0.5 * m))
+    return sign * mag
+
+
+def _unpack_fp4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) packed bytes -> (..., 2n) f32 values (low nibble first)."""
+    lo = _decode_fp4_codes(packed & 0xF)
+    hi = _decode_fp4_codes((packed >> 4) & 0xF)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def _decode_tile(tile: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
+    """Decode a VMEM tile of stored elements to f32 (in-register upcast)."""
+    if fmt_name == "fp4_e2m1":
+        return _unpack_fp4(tile)
+    return tile.astype(jnp.float32)
+
+
+def _fold_scales(vals: jnp.ndarray, scales_e8m0: jnp.ndarray, block_size: int):
+    """Fold per-block power-of-two scales into decoded element rows (exact)."""
+    r, bk = vals.shape
+    nb = bk // block_size
+    s = _decode_e8m0(scales_e8m0)  # (r, nb)
+    return (vals.reshape(r, nb, block_size) * s[:, :, None]).reshape(r, bk)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+
+def _mx_matmul_kernel(
+    a_ref, as_ref, b_ref, bs_ref, o_ref, *, fmt_name: str, block_size: int
+):
+    """Vector-vector variant: both operands MX (paper Eq. (2))."""
+    kk = pl.program_id(2)
+    a = _fold_scales(_decode_tile(a_ref[...], fmt_name), as_ref[...], block_size)
+    b = _fold_scales(_decode_tile(b_ref[...], fmt_name), bs_ref[...], block_size)
+    partial = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial.astype(o_ref.dtype)
+
+
+def _mx_matmul_wo_kernel(
+    a_ref, b_ref, bs_ref, o_ref, *, fmt_name: str, block_size: int
+):
+    """Vector-scalar variant (`vmxdotp.*f`): wide A x MX B (weight-only)."""
+    kk = pl.program_id(2)
+    a = a_ref[...].astype(jnp.float32)
+    b = _fold_scales(_decode_tile(b_ref[...], fmt_name), bs_ref[...], block_size)
+    partial = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+
+def _elem_tile(bk: int, fmt_name: str) -> int:
+    return bk // 2 if fmt_name == "fp4_e2m1" else bk
+
+
+def mx_matmul_vv(
+    a_elems,
+    a_scales,
+    b_elems,
+    b_scales,
+    *,
+    fmt_name: str = "fp8_e4m3",
+    block_size: int = 32,
+    acc_dtype=jnp.float32,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Tiled MX x MX matmul. Shapes per module docstring; returns (M, N)."""
+    m = a_scales.shape[0]
+    n = b_scales.shape[0]
+    kb = a_scales.shape[1]
+    k = kb * block_size
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk or bk % block_size:
+        raise ValueError(f"tiling mismatch: {(m, n, k)} vs {(bm, bn, bk)}/{block_size}")
+    ebk = _elem_tile(bk, fmt_name)
+    nb = bk // block_size
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _mx_matmul_kernel, fmt_name=fmt_name, block_size=block_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, ebk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, nb), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, ebk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, nb), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_elems, a_scales, b_elems, b_scales)
+
+
+def mx_matmul_wo(
+    a,
+    b_elems,
+    b_scales,
+    *,
+    fmt_name: str = "fp8_e4m3",
+    block_size: int = 32,
+    acc_dtype=jnp.float32,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Tiled wide-A x MX-B matmul (weight-only). Returns (M, N)."""
+    m, k = a.shape
+    n = b_scales.shape[0]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk or bk % block_size:
+        raise ValueError(f"tiling mismatch: {(m, n, k)} vs {(bm, bn, bk)}/{block_size}")
+    ebk = _elem_tile(bk, fmt_name)
+    nb = bk // block_size
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _mx_matmul_wo_kernel, fmt_name=fmt_name, block_size=block_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, ebk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, nb), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b_elems, b_scales)
+
+
+# ---------------------------------------------------------------------------
+# dgrad: dx = dy @ W^T with MX weights (training backward, weight-only path)
+# ---------------------------------------------------------------------------
+
+
+def _mx_dgrad_kernel(dy_ref, b_ref, bs_ref, o_ref, *, fmt_name: str,
+                     block_size: int):
+    """dx tile = dy (bm, bn) @ dequant(stored (bn, bk)). Accumulate over n."""
+    nn = pl.program_id(2)
+    dy = dy_ref[...].astype(jnp.float32)
+    s = _fold_scales(_decode_tile(b_ref[...], fmt_name), bs_ref[...],
+                     block_size)  # (bn, bk) dequantized W^T tile
+    partial = jax.lax.dot_general(
+        dy, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(nn == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial.astype(o_ref.dtype)
+
+
+def mx_matmul_dgrad(
+    dy,
+    b_elems,
+    b_scales,
+    *,
+    fmt_name: str = "fp8_e4m3",
+    block_size: int = 32,
+    out_dtype=jnp.float32,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """dx (M, K) = dy (M, N) @ dequant(W)^T for W stored (N, K) MX-blocked
+    along K (the forward weight layout — no transposition needed: the
+    stored layout IS W^T)."""
+    m, n = dy.shape
+    kb = b_scales.shape[1]
+    k = kb * block_size
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk or bk % block_size:
+        raise ValueError(f"tiling mismatch: {(m, n, k)} vs {(bm, bn, bk)}")
+    ebk = _elem_tile(bk, fmt_name)
+    nb = bk // block_size
+    grid = (m // bm, k // bk, n // bn)
+    kernel = functools.partial(_mx_dgrad_kernel, fmt_name=fmt_name,
+                               block_size=block_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, nn: (i, nn)),
+            pl.BlockSpec((bn, ebk), lambda i, j, nn: (nn, j)),
+            pl.BlockSpec((bn, nb), lambda i, j, nn: (nn, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, nn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(dy, b_elems, b_scales)

@@ -1,0 +1,107 @@
+"""Pallas kernel for fused MX block quantization.
+
+Computes, per block of ``block_size`` elements along the last axis: the
+block amax, the E8M0 shared exponent (floor(log2(amax)) - emax via FP32
+exponent-field extraction — no transcendentals), and the RNE+saturate cast
+of the scaled elements to the target format. One pass over the data: the
+wide input is read once, compact elements + scales are written.
+
+This is the producer side of the VMXDOTP story: on-the-fly activation
+quantization feeding the vector-vector MX matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats as F
+
+
+def _floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for normal positive f32 via exponent-field extraction."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return (jnp.right_shift(bits, 23) & 0xFF).astype(jnp.int32) - 127
+
+
+def _encode_fp4_codes(v: jnp.ndarray) -> jnp.ndarray:
+    """Arithmetic RNE+saturate encode of f32 to E2M1 codes (no gather).
+
+    jnp.round implements round-half-to-even, so each regime below inherits
+    correct tie behaviour; regime boundaries coincide with grid points.
+    """
+    sign = jnp.signbit(v)
+    mag = jnp.clip(jnp.abs(v), 0.0, 6.0)
+    r1 = jnp.round(mag * 2.0) * 0.5  # grid {0, .5, 1, 1.5, 2}
+    r2 = jnp.round(mag)  # grid {2, 3, 4}
+    r3 = jnp.round(mag * 0.5) * 2.0  # grid {4, 6}
+    val = jnp.where(mag <= 1.75, r1, jnp.where(mag <= 3.5, r2, r3))
+    code = jnp.where(val < 2.0, val * 2.0, jnp.where(val < 4.0, val + 2.0, val * 0.5 + 4.0))
+    code = code.astype(jnp.uint8)
+    return jnp.where(sign, code | jnp.uint8(0x8), code)
+
+
+def _pack_fp4(codes: jnp.ndarray) -> jnp.ndarray:
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _mx_quantize_kernel(x_ref, q_ref, e_ref, *, fmt: F.ElementFormat, block_size: int):
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    bm, bk = x.shape
+    nb = bk // block_size
+    blocked = x.reshape(bm, nb, block_size)
+    amax = jnp.max(jnp.abs(blocked), axis=-1)  # (bm, nb)
+    e_unb = _floor_log2(amax) - fmt.emax + F.E8M0_BIAS
+    e = jnp.clip(jnp.where(amax > 0, e_unb, 0), 0, 254).astype(jnp.uint8)
+    e32 = e.astype(jnp.uint32)
+    scale_bits = jnp.where(e32 > 0, e32 << 23, jnp.uint32(0x00400000))
+    scale = jax.lax.bitcast_convert_type(scale_bits, jnp.float32)
+    ratio = jnp.where(scale[:, :, None] > 0, blocked / scale[:, :, None], 0.0)
+    ratio = jnp.clip(ratio, -fmt.max, fmt.max).reshape(bm, bk)
+    if fmt.name == "fp4_e2m1":
+        q_ref[...] = _pack_fp4(_encode_fp4_codes(ratio))
+    else:
+        q_ref[...] = ratio.astype(fmt.storage_dtype)
+    e_ref[...] = e
+
+
+def mx_quantize(
+    x,
+    *,
+    fmt_name: str = "fp8_e4m3",
+    block_size: int = 32,
+    bm: int = 256,
+    bk: int = 2048,
+    interpret: bool = False,
+):
+    """Quantize ``x (M, K)`` along K. Returns (elements, e8m0_scales)."""
+    fmt = F.get_format(fmt_name)
+    m, k = x.shape
+    bm, bk = min(bm, m), min(bk, k)
+    if m % bm or k % bk or bk % block_size:
+        raise ValueError(f"tiling mismatch: {(m, k)} vs {(bm, bk)}/{block_size}")
+    ebk = bk // 2 if fmt.packed else bk
+    ek = k // 2 if fmt.packed else k
+    nb = bk // block_size
+    grid = (m // bm, k // bk)
+    kernel = functools.partial(_mx_quantize_kernel, fmt=fmt, block_size=block_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, ebk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, nb), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, ek), fmt.storage_dtype),
+            jax.ShapeDtypeStruct((m, k // block_size), jnp.uint8),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles defining exact MX kernel semantics.
+
+These implement Eq. (1)/(2) of the paper literally: per MX block, an f32 dot
+product of decoded elements, multiplied by the product of the two E8M0 block
+scales, summed over blocks (and accumulated into ``acc_dtype``). Every Pallas
+kernel is validated against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+
+
+def decode_scaled(elems, scales, fmt, block_size):
+    """Decode (..., K)-stored MX data to blocked f32: (..., KB, k) + scales."""
+    vals = F.decode_elements(elems, fmt, jnp.float32)
+    kb = scales.shape[-1]
+    blocked = vals.reshape(*vals.shape[:-1], kb, block_size)
+    return blocked, F.e8m0_to_scale(scales)
+
+
+def mx_matmul_ref(
+    a_elems,
+    a_scales,
+    b_elems,
+    b_scales,
+    *,
+    fmt="fp8_e4m3",
+    block_size: int = 32,
+    acc_dtype=jnp.float32,
+):
+    """MX x MX matmul oracle (vector-vector variant, paper Eq. (2)).
+
+    Layout contract (matches MXTensor with the blocked axis last):
+      a_elems: (M, K) storage, a_scales: (M, KB)
+      b_elems: (N, K) storage ("column-major B", §IV-D), b_scales: (N, KB)
+    Returns C: (M, N) = sum_b sA[m,b] * sB[n,b] * <A[m,b,:], B[n,b,:]>.
+    """
+    A, sA = decode_scaled(a_elems, a_scales, fmt, block_size)  # (M,KB,k)
+    B, sB = decode_scaled(b_elems, b_scales, fmt, block_size)  # (N,KB,k)
+    partial = jnp.einsum("mbk,nbk->mnb", A, B, preferred_element_type=jnp.float32)
+    scaled = partial * sA[:, None, :] * sB[None, :, :]
+    return jnp.sum(scaled, axis=-1).astype(acc_dtype)
+
+
+def mx_matmul_wo_ref(
+    a,
+    b_elems,
+    b_scales,
+    *,
+    fmt="fp8_e4m3",
+    block_size: int = 32,
+    acc_dtype=jnp.float32,
+):
+    """Weight-only oracle (vector-scalar variant): wide A x MX B."""
+    B, sB = decode_scaled(b_elems, b_scales, fmt, block_size)
+    kb = sB.shape[-1]
+    A = a.astype(jnp.float32).reshape(*a.shape[:-1], kb, block_size)
+    partial = jnp.einsum("mbk,nbk->mnb", A, B, preferred_element_type=jnp.float32)
+    return jnp.sum(partial * sB[None, :, :], axis=-1).astype(acc_dtype)
+
+
+def mx_quantize_ref(x, *, fmt="fp8_e4m3", block_size: int = 32):
+    """Block-quantization oracle: returns (elements_storage, e8m0_scales)."""
+    fmt_i = F.get_format(fmt)
+    k = x.shape[-1]
+    blocked = x.astype(jnp.float32).reshape(*x.shape[:-1], k // block_size, block_size)
+    amax = jnp.max(jnp.abs(blocked), axis=-1)
+    e = F.e8m0_from_amax(amax, fmt_i)
+    scale = F.e8m0_to_scale(e)[..., None]
+    ratio = jnp.where(scale > 0, blocked / scale, 0.0).reshape(x.shape)
+    return F.encode_elements(ratio, fmt_i), e
+
+
+def mx_attention_decode_ref(q, k_elems, k_scales, v_elems, v_scales, kpos,
+                            pos, *, fmt="fp8_e4m3", block_size: int = 32,
+                            softcap=None):
+    """Oracle for the MX-KV-cache decode attention kernel.
+
+    q: (B, KVH, G, D); cache: (B, KVH, T, D) stored + (B, KVH, T, D//k)
+    scales; kpos (T,), pos scalar. Returns (B, KVH, G, D) f32.
+    """
+    def deq(elems, scales):
+        vals = F.decode_elements(elems, fmt, jnp.float32)
+        nb = scales.shape[-1]
+        k = vals.shape[-1] // nb
+        blocked = vals.reshape(*vals.shape[:-1], nb, k)
+        return (blocked * F.e8m0_to_scale(scales)[..., None]).reshape(
+            vals.shape)
+
+    k = deq(k_elems, k_scales)  # (B,KVH,T,D)
+    v = deq(v_elems, v_scales)
+    d = q.shape[-1]
+    logits = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32), k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = (kpos <= pos) & (kpos >= 0)
+    logits = jnp.where(mask[None, None, None, :], logits, -2.0e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v,
+                      preferred_element_type=jnp.float32)

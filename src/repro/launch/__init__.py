@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, dry-run driver, train/serve entry points."""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

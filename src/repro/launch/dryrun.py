@@ -1,0 +1,197 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the appropriate step (train_step / prefill /
+serve_step) against the production mesh with full-size ShapeDtypeStruct
+inputs (no allocation), compiles it, and records:
+
+  * memory_analysis()      — per-device argument/output/temp bytes,
+  * cost_analysis()        — HLO FLOPs and bytes accessed,
+  * collective traffic     — parsed from the optimized HLO text,
+
+into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``, which §Roofline
+reads. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.nn import model
+from repro.parallel import (batch_shardings, cache_shardings, replicated,
+                            tree_shardings)
+from repro.parallel.ctx import use_mesh
+from repro.train import OptimConfig, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = S.input_specs(cfg, shape)
+
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            state, axes = spec["state"], spec["axes"]
+            state_sh = tree_shardings(mesh, state, axes)
+            batch_sh = batch_shardings(mesh, spec["batch"])
+            step = make_train_step(cfg, OptimConfig(),
+                                   num_microbatches=cfg.train_microbatches,
+                                   param_shardings=state_sh["params"])
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, replicated(mesh)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, spec["batch"])
+        elif shape.kind == "prefill":
+            params, axes = spec["params"], spec["axes"]
+            p_sh = tree_shardings(mesh, params, axes)
+            batch_sh = batch_shardings(mesh, spec["batch"])
+
+            def prefill_step(params, batch):
+                return model.prefill(
+                    params, cfg, tokens=batch.get("tokens"),
+                    embeds=batch.get("embeds"), max_seq=shape.seq_len)
+
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(params, spec["batch"])
+        else:  # decode
+            params, axes = spec["params"], spec["axes"]
+            p_sh = tree_shardings(mesh, params, axes)
+            cache = spec["cache"]
+            cache_sh = cache_shardings(mesh, cache, shape.global_batch)
+            tok_sh = batch_shardings(mesh, spec["tokens"])
+
+            def serve_step(params, cache, tokens, pos):
+                return model.decode_step(
+                    params, cfg, cache, tokens=tokens.get("tokens"),
+                    embeds=tokens.get("embeds"), pos=pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, cache_sh, tok_sh, replicated(mesh)),
+                out_shardings=(replicated(mesh), cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, cache, spec["tokens"], spec["pos"])
+        compiled = lowered.compile()
+    return lowered, compiled, mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, save_hlo=False):
+    t0 = time.time()
+    multi = mesh_kind == "multi"
+    lowered, compiled, mesh = _lower_cell(arch, shape_name, multi)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    walk = analyze(hlo)  # loop-trip-aware accounting (hlo_analysis.py)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "devices": int(len(mesh.devices.flat)),
+        "compile_s": round(time.time() - t0, 1),
+        # per-device, loop-aware (the roofline inputs):
+        "dot_flops": walk["dot_flops"],
+        "hbm_bytes": walk["hbm_bytes"],
+        "collectives": {
+            "bytes_by_op": walk["collective_bytes"],
+            "counts": walk["collective_counts"],
+            "total_bytes": walk["collective_total"],
+        },
+        "loops": walk["loops"],
+        # raw XLA aggregates (loop bodies counted ONCE — kept for reference):
+        "xla_cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    print(f"[dryrun] OK {arch} {shape_name} {mesh_kind}: "
+          f"dotF={rec['dot_flops']:.3e} hbmB={rec['hbm_bytes']:.3e} "
+          f"collB={walk['collective_total']:.3e} "
+          f"temp={mem.temp_size_in_bytes:.3e} ({rec['compile_s']}s)")
+    return rec
+
+
+def cells(mesh_kinds=("single", "multi")):
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape):
+                continue
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    mesh_kinds = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    todo = (list(cells(mesh_kinds)) if args.all
+            else [(args.arch, args.shape, mk) for mk in mesh_kinds])
+    failures = []
+    for arch, shape_name, mk in todo:
+        path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mk}.json")
+        if args.skip_done and os.path.exists(path):
+            print(f"[dryrun] skip (done) {arch} {shape_name} {mk}")
+            continue
+        try:
+            run_cell(arch, shape_name, mk, save_hlo=args.save_hlo)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape_name, mk, repr(e)))
+            print(f"[dryrun] FAIL {arch} {shape_name} {mk}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

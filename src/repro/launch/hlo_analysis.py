@@ -1,0 +1,373 @@
+"""Optimized-HLO cost walker with loop-trip-count accounting.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, which
+undercounts scanned-layer models by ~num_layers x (verified in
+EXPERIMENTS.md §Dry-run). This walker parses the optimized HLO text into
+computations, recovers each while loop's trip count from its condition's
+compare-against-constant, propagates multiplicities through nested loops,
+and then accounts, per device:
+
+  * dot FLOPs           (2 * prod(result dims) * prod(contracting dims)),
+  * HBM traffic         (operand + result bytes of every top-level op in
+                         entry/loop-body computations; fusions count as one
+                         op — the standard XLA bytes-accessed model),
+  * collective traffic  (ring-model bytes by op type and replica-group size).
+
+This is the substrate for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e8m0fnu": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f4e2m1fn": 0.5,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"^(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(%[\w\.\-]+)\s*\(.*->.*\{\s*$")
+_ENTRY_RE = re.compile(r"^ENTRY\s+(%[\w\.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=([%\w\.\-]+),\s*body=([%\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_OP_RE = re.compile(r"^(\w+)\[")
+
+
+def _dtype_bytes(dt: str) -> float:
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0.0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES and not dt.startswith(("f", "s", "u", "b", "p")):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _dtype_bytes(dt)
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+    whiles: List[tuple]  # (cond_name, body_name)
+
+    def operand_read_bytes(self, comps: "Dict[str, Computation]",
+                           operand_names, shapes) -> float:
+        """Effective read traffic of this *fusion call*'s operands.
+
+        A fusion parameter consumed only through ``dynamic-slice`` inside
+        the fused computation reads just the slice, not the buffer (scan
+        reading its stacked xs). Likewise an operand that is only the
+        target of an in-place ``dynamic-update-slice`` touches only the
+        update region. Everything else reads its full shape.
+        """
+        params = [op for op in self.ops if op.opcode == "parameter"]
+        by_index = {}
+        for op in params:
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                by_index[int(m.group(1))] = op.name
+        total = 0.0
+        for i, oname in enumerate(operand_names):
+            full = shape_bytes(shapes.get(oname, ""))
+            pname = by_index.get(i)
+            if pname is None:
+                total += full
+                continue
+            uses = [op for op in self.ops if pname in op.operands]
+            if uses and all(u.opcode == "dynamic-slice" and
+                            u.operands and u.operands[0] == pname
+                            for u in uses):
+                total += sum(shape_bytes(u.result_type) for u in uses)
+            elif uses and all(u.opcode == "dynamic-update-slice" and
+                              u.operands and u.operands[0] == pname
+                              for u in uses):
+                # in-place update: write counted at result; read ~ update
+                total += sum(shape_bytes(shapes.get(u.operands[1], ""))
+                             if len(u.operands) > 1 else 0.0 for u in uses)
+            else:
+                total += full
+        return total
+
+    def write_bytes(self) -> float:
+        """Effective write traffic of this fusion's result (in-place DUS
+        roots write the update region, not the whole aliased buffer)."""
+        root = self.ops[-1] if self.ops else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            shapes = {op.name: op.result_type for op in self.ops}
+            if len(root.operands) > 1:
+                return shape_bytes(shapes.get(root.operands[1], ""))
+        return -1.0  # sentinel: use result shape
+
+    def dot_flops_recursive(self, comps: "Dict[str, Computation]",
+                            seen=frozenset()) -> float:
+        """Dot FLOPs in this computation including called fusions.
+
+        XLA (CPU especially) fuses dots into kLoop/kOutput fusion
+        computations; flops must be attributed through the ``calls=`` edge.
+        Traffic is NOT recursed — fusions read/write only at their boundary.
+        """
+        if self.name in seen:
+            return 0.0
+        shapes = {op.name: op.result_type for op in self.ops}
+        total = 0.0
+        for op in self.ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, shapes)
+            m = re.search(r"calls=(%[\w\.\-]+)", op.line)
+            if m and op.opcode == "fusion":
+                callee = comps.get(m.group(1).lstrip("%"))
+                if callee is not None:
+                    total += callee.dot_flops_recursive(
+                        comps, seen | {self.name})
+        return total
+
+
+def _opcode_of(rhs: str) -> str:
+    """Extract the opcode from an HLO def right-hand side."""
+    m = re.match(r"(?:\([^)]*\)|\S+)\s+([\w\-]+)\(", rhs)
+    return m.group(1) if m else ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        em = _ENTRY_RE.match(line)
+        hdr = em or _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            name = hdr.group(1)
+            if em:
+                entry = name
+            current = Computation(name=name.lstrip("%"), ops=[], whiles=[])
+            comps[current.name] = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.groups()
+        opcode = _opcode_of(rhs)
+        tm = re.match(r"(\([^)]*\)|\S+)", rhs)
+        result_type = tm.group(1) if tm else ""
+        operands = re.findall(r"(%[\w\.\-]+)", rhs[rhs.find("("):])
+        current.ops.append(OpInfo(name.lstrip("%"), result_type, opcode,
+                                  [o.lstrip("%") for o in operands], line))
+        wm = _WHILE_RE.search(line)
+        if wm:
+            current.whiles.append((wm.group(1).lstrip("%"),
+                                   wm.group(2).lstrip("%")))
+    if entry:
+        comps["__entry__"] = comps[entry.lstrip("%")]
+    return comps
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip bound from the loop condition's compare-vs-constant."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        for m in _CONST_RE.finditer(op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def multiplicities(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Effective execution count per computation (nested loops multiply)."""
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(comp: Computation, m: float, seen):
+        if comp.name in seen:  # guard against cycles
+            return
+        mult[comp.name] += m
+        for cond_name, body_name in comp.whiles:
+            t = trip_count(comps, cond_name)
+            body = comps.get(body_name)
+            if body is not None:
+                visit(body, m * t, seen | {comp.name})
+
+    if entry is not None:
+        visit(entry, 1.0, frozenset())
+    return dict(mult)
+
+
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convert", "copy", "transpose", "reshape", "broadcast",
+    "dynamic-update-slice", "dynamic-slice", "slice", "concatenate", "pad",
+    "reduce", "reduce-window", "select-and-scatter", "gather", "scatter",
+    "iota", "compare", "select", "add", "multiply", "subtract", "divide",
+    "exponential", "tanh", "rsqrt", "sort", "bitcast-convert",
+    "custom-call",
+}
+
+
+def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m:
+        return 0.0
+    lhs_type = shapes.get(op.operands[0], "") if op.operands else ""
+    sm = _SHAPE_RE.match(lhs_type)
+    if not sm:
+        return 0.0
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    for idx in m.group(1).split(","):
+        if idx:
+            contract *= lhs_dims[int(idx)]
+    rm = _SHAPE_RE.match(op.result_type)
+    if not rm:
+        return 0.0
+    out = 1
+    for d in rm.group(2).split(","):
+        if d:
+            out *= int(d)
+    return 2.0 * out * contract
+
+
+def _collective_traffic(op: OpInfo, shapes=None) -> Optional[tuple]:
+    opcode = op.opcode.replace("-start", "")
+    if opcode not in _COLL_OPS or op.opcode.endswith("-done"):
+        return None
+    size = shape_bytes(op.result_type)
+    # XLA:CPU emulates bf16 dots in f32, so reductions of bf16 values show
+    # up as f32 collectives fed by convert fusions. On the TPU target the
+    # collective runs at the source width; charge bf16 bytes when every
+    # operand is a convert-from-narrower fusion (name carries "convert").
+    if shapes is not None and "f32[" in op.result_type and op.operands:
+        if all("convert" in o for o in op.operands
+               if not o.startswith(("constant", "iota"))):
+            size *= 0.5
+    g = re.search(r"replica_groups=\{\{([^}]*)\}", op.line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+        n = int(g2.group(2)) if g2 else 2
+    n = max(n, 2)
+    if opcode == "all-reduce":
+        traffic = 2 * size * (n - 1) / n
+    elif opcode == "all-gather":
+        traffic = size * (n - 1) / n
+    elif opcode == "reduce-scatter":
+        traffic = size * (n - 1)
+    elif opcode == "all-to-all":
+        traffic = size * (n - 1) / n
+    else:
+        traffic = size
+    return opcode, traffic
+
+
+def analyze(hlo_text: str, top_k: int = 0) -> dict:
+    """Full analysis: loop-aware flops / traffic / collectives per device.
+
+    ``top_k`` > 0 additionally returns the largest individual collective
+    and HBM-traffic contributors (op line head + effective bytes) — the
+    profile view the perf iteration loop reads.
+    """
+    comps = parse_hlo(hlo_text)
+    mult = multiplicities(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    coll_n = defaultdict(float)
+    loops = []
+    top_coll = []
+    top_hbm = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        if cname == "__entry__":
+            continue
+        shapes = {op.name: op.result_type for op in comp.ops}
+        is_body_or_entry = (m > 0)
+        if not is_body_or_entry:
+            continue
+        # only walk entry + while bodies (fusions are accounted as single
+        # ops by their callers; their internals must not be double counted)
+        is_entry = comp is comps["__entry__"]
+        called_as_body = any(
+            cname == b for c in comps.values() for (_, b) in c.whiles)
+        if not (is_entry or called_as_body):
+            continue
+        flops += m * comp.dot_flops_recursive(comps)
+        for op in comp.ops:
+            ct = _collective_traffic(op, shapes)
+            if ct:
+                coll[ct[0]] += m * ct[1]
+                coll_n[ct[0]] += m
+                if top_k:
+                    top_coll.append((m * ct[1], m,
+                                     op.line.strip()[:160]))
+            if op.opcode in _TRAFFIC_OPS or op.opcode.replace("-start", "") in _COLL_OPS:
+                out_b = shape_bytes(op.result_type)
+                in_b = None
+                if op.opcode == "fusion":
+                    mm = re.search(r"calls=(%[\w\.\-]+)", op.line)
+                    callee = comps.get(mm.group(1).lstrip("%")) if mm else None
+                    if callee is not None:
+                        in_b = callee.operand_read_bytes(comps, op.operands,
+                                                         shapes)
+                        wb = callee.write_bytes()
+                        if wb >= 0:
+                            out_b = wb
+                elif op.opcode == "dynamic-slice":
+                    in_b = out_b  # reads only the slice
+                elif op.opcode == "dynamic-update-slice":
+                    upd = (shape_bytes(shapes.get(op.operands[1], ""))
+                           if len(op.operands) > 1 else 0.0)
+                    in_b, out_b = upd, upd  # in-place slice write
+                if in_b is None:
+                    in_b = sum(shape_bytes(shapes.get(o, ""))
+                               for o in op.operands)
+                hbm += m * (out_b + in_b)
+                if top_k:
+                    top_hbm.append((m * (out_b + in_b), m,
+                                    op.opcode, op.result_type[:60]))
+        for cond_name, body_name in comp.whiles:
+            loops.append({"body": body_name,
+                          "trips": trip_count(comps, cond_name),
+                          "outer_mult": m})
+    out = {
+        "dot_flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll),
+        "collective_counts": dict(coll_n),
+        "collective_total": float(sum(coll.values())),
+        "loops": loops,
+        "num_computations": len(comps) - 1,
+    }
+    if top_k:
+        out["top_collectives"] = sorted(top_coll, reverse=True)[:top_k]
+        out["top_hbm"] = sorted(top_hbm, reverse=True)[:top_k]
+    return out

@@ -1,0 +1,40 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run forces 512 host devices via XLA_FLAGS before first jax init, while
+smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (dryrun.py does this)")
+    return jax.make_mesh(
+        shape, axes,
+        devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    dp = n // model_parallel
+    return jax.make_mesh(
+        (dp, model_parallel), ("data", "model"),
+        devices=jax.devices()[: dp * model_parallel],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Weak-type-correct, shardable stand-ins; nothing is allocated. ``train``
+shapes produce the train_step signature (state, batch); ``prefill`` the
+prompt-processing signature; ``decode`` the serve_step signature (one new
+token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.nn import model
+from repro.nn.config import ModelConfig
+from repro.train import loop as train_loop
+from repro.train import optim
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Training/prefill batch ShapeDtypeStructs for one arch."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if cfg.num_codebooks > 1:
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32),
+            "labels": jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def state_specs(cfg: ModelConfig):
+    """(train-state ShapeDtypeStructs, axes pytree) without allocating."""
+    def go(key):
+        state, _ = train_loop.init_state(key, cfg)
+        return state
+
+    shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
+    return shapes, train_loop.state_axes(model_axes(cfg))
+
+
+def model_axes(cfg: ModelConfig):
+    """Static axes pytree (no array work: init under eval_shape)."""
+    out = {}
+
+    def grab(key):
+        params, axes = model.init(key, cfg)
+        out["axes"] = axes
+        return params
+
+    jax.eval_shape(grab, jax.random.PRNGKey(0))
+    return out["axes"]
+
+
+def params_specs(cfg: ModelConfig):
+    shapes = jax.eval_shape(
+        lambda key: model.init(key, cfg)[0], jax.random.PRNGKey(0))
+    return shapes, model_axes(cfg)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Decode cache ShapeDtypeStructs (ring buffers bound windowed layers)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    if cfg.family == "vlm":
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                               jnp.bfloat16)}
+    if cfg.num_codebooks > 1:
+        return {"tokens": jax.ShapeDtypeStruct((b, 1, cfg.num_codebooks),
+                                               jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """All ShapeDtypeStructs for the step this shape lowers."""
+    if shape.kind == "train":
+        state, axes = state_specs(cfg)
+        return {"state": state, "axes": axes,
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        params, axes = params_specs(cfg)
+        return {"params": params, "axes": axes,
+                "batch": batch_specs(cfg, shape)}
+    params, axes = params_specs(cfg)
+    return {
+        "params": params, "axes": axes,
+        "cache": cache_specs(cfg, shape),
+        "tokens": decode_token_specs(cfg, shape),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

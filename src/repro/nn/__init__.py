@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo with first-class MX quantization."""
+from . import (attention, blocks, common, config, embedding, ffn, linear,
+               mla, model, moe, norms, rglru, rotary, ssd)
+from .config import BlockDef, ModelConfig
+
+__all__ = [
+    "attention", "blocks", "common", "config", "embedding", "ffn", "linear",
+    "mla", "model", "moe", "norms", "rglru", "rotary", "ssd",
+    "BlockDef", "ModelConfig",
+]

@@ -1,0 +1,240 @@
+"""Decoder block wiring: mixer (attn/mla/rglru/ssd) + channel mixer (ffn/moe).
+
+Pre-norm residual blocks, with optional gemma2-style post-norms. All mixers
+and FFNs inherit the MX quantization policy through ``linear.apply``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+from . import attention, common as C, ffn, linear, mla, moe, rglru, ssd
+from .config import BlockDef, ModelConfig
+from .norms import rmsnorm_apply, rmsnorm_init
+
+
+def _attn_cfg(cfg: ModelConfig, bd: BlockDef) -> attention.AttnConfig:
+    return attention.AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        window=bd.window,
+        softcap=cfg.attn_softcap,
+        query_chunk=cfg.query_chunk,
+    )
+
+
+def _mla_cfg(cfg: ModelConfig) -> mla.MLAConfig:
+    return mla.MLAConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        kv_lora=cfg.kv_lora,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        query_chunk=cfg.query_chunk,
+    )
+
+
+def _rglru_cfg(cfg: ModelConfig) -> rglru.RGLRUConfig:
+    return rglru.RGLRUConfig(
+        d_model=cfg.d_model, width=cfg.rnn_width or cfg.d_model,
+        conv_width=cfg.conv_width,
+    )
+
+
+def _ssd_cfg(cfg: ModelConfig) -> ssd.SSDConfig:
+    return ssd.SSDConfig(
+        d_model=cfg.d_model, d_inner=cfg.d_inner, headdim=cfg.headdim,
+        d_state=cfg.d_state, ngroups=cfg.ngroups, conv_width=cfg.conv_width,
+        chunk=cfg.ssd_chunk,
+    )
+
+
+def _moe_cfg(cfg: ModelConfig) -> moe.MoEConfig:
+    return moe.MoEConfig(
+        d_model=cfg.d_model, d_ff_expert=cfg.d_ff_expert,
+        num_experts=cfg.num_experts, top_k=cfg.top_k,
+        num_shared=cfg.num_shared,
+        d_ff_shared=cfg.num_shared * cfg.d_ff_expert,
+        ffn_kind=cfg.ffn_kind, aux_loss_weight=cfg.aux_loss_weight,
+        dispatch=cfg.moe_dispatch,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, bd: BlockDef, cfg: ModelConfig):
+    ks = C.split_keys(key, 4)
+    params, axes = {}, {}
+    p, a = rmsnorm_init(ks[0], cfg.d_model)
+    params["norm_mixer"], axes["norm_mixer"] = p, a
+    if bd.mixer == "attn":
+        p, a = attention.init(ks[1], _attn_cfg(cfg, bd))
+    elif bd.mixer == "mla":
+        p, a = mla.init(ks[1], _mla_cfg(cfg))
+    elif bd.mixer == "rglru":
+        p, a = rglru.init(ks[1], _rglru_cfg(cfg))
+    elif bd.mixer == "ssd":
+        p, a = ssd.init(ks[1], _ssd_cfg(cfg))
+    else:
+        raise ValueError(bd.mixer)
+    params["mixer"], axes["mixer"] = p, a
+
+    if bd.ffn != "none":
+        p, a = rmsnorm_init(ks[2], cfg.d_model)
+        params["norm_ffn"], axes["norm_ffn"] = p, a
+        if bd.ffn == "moe":
+            p, a = moe.init(ks[3], _moe_cfg(cfg))
+        else:
+            p, a = ffn.init(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+        params["ffn"], axes["ffn"] = p, a
+    if cfg.post_norms:
+        p, a = rmsnorm_init(ks[0], cfg.d_model)
+        params["postnorm_mixer"], axes["postnorm_mixer"] = p, a
+        if bd.ffn != "none":
+            p, a = rmsnorm_init(ks[2], cfg.d_model)
+            params["postnorm_ffn"], axes["postnorm_ffn"] = p, a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill-compute)
+# ---------------------------------------------------------------------------
+
+
+def _sp(h):
+    """Pin norm outputs to the sequence-parallel layout: the TP all-gather
+    then moves the bf16 output, not the norm's f32 internals (§Perf iter 6).
+    """
+    from repro.parallel.ctx import maybe_constrain
+
+    return maybe_constrain(h, "batch", "seq_model", None)
+
+
+def apply_train(params, x, positions, bd: BlockDef, cfg: ModelConfig):
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = _sp(rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps))
+    if bd.mixer == "attn":
+        h = attention.apply_train(params["mixer"], h, positions,
+                                  _attn_cfg(cfg, bd), quant, dt)
+    elif bd.mixer == "mla":
+        h = mla.apply_train(params["mixer"], h, positions, _mla_cfg(cfg),
+                            quant, dt)
+    elif bd.mixer == "rglru":
+        h = rglru.apply_train(params["mixer"], h, _rglru_cfg(cfg), quant, dt)
+    else:
+        h = ssd.apply_train(params["mixer"], h, _ssd_cfg(cfg), quant, dt)
+    if cfg.post_norms:
+        h = rmsnorm_apply(params["postnorm_mixer"], h, cfg.norm_eps)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if bd.ffn != "none":
+        h = _sp(rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps))
+        if bd.ffn == "moe":
+            h, aux = moe.apply(params["ffn"], h, _moe_cfg(cfg), quant, dt)
+        else:
+            h = ffn.apply(params["ffn"], h, quant, cfg.ffn_kind, dt)
+        if cfg.post_norms:
+            h = rmsnorm_apply(params["postnorm_ffn"], h, cfg.norm_eps)
+        x = x + h
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_seq: int, bd: BlockDef, cfg: ModelConfig):
+    if bd.mixer == "attn":
+        return attention.init_cache(batch, max_seq, _attn_cfg(cfg, bd), cfg.quant)
+    if bd.mixer == "mla":
+        return mla.init_cache(batch, max_seq, _mla_cfg(cfg), cfg.quant)
+    if bd.mixer == "rglru":
+        return rglru.init_state(batch, _rglru_cfg(cfg))
+    return ssd.init_state(batch, _ssd_cfg(cfg))
+
+
+def apply_decode(params, x, cache, pos, bd: BlockDef, cfg: ModelConfig):
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
+    if bd.mixer == "attn":
+        h, cache = attention.apply_decode(params["mixer"], h, cache, pos,
+                                          _attn_cfg(cfg, bd), quant, dt)
+    elif bd.mixer == "mla":
+        h, cache = mla.apply_decode(params["mixer"], h, cache, pos,
+                                    _mla_cfg(cfg), quant, dt)
+    elif bd.mixer == "rglru":
+        h, cache = rglru.apply_decode(params["mixer"], h, cache,
+                                      _rglru_cfg(cfg), quant, dt)
+    else:
+        h, cache = ssd.apply_decode(params["mixer"], h, cache,
+                                    _ssd_cfg(cfg), quant, dt)
+    if cfg.post_norms:
+        h = rmsnorm_apply(params["postnorm_mixer"], h, cfg.norm_eps)
+    x = x + h
+    if bd.ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            h, _ = moe.apply(params["ffn"], h, _moe_cfg(cfg), quant, dt)
+        else:
+            h = ffn.apply(params["ffn"], h, quant, cfg.ffn_kind, dt)
+        if cfg.post_norms:
+            h = rmsnorm_apply(params["postnorm_ffn"], h, cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+def prefill_block(params, x, positions, bd: BlockDef, cfg: ModelConfig,
+                  max_seq: int):
+    """Forward pass that also builds the block's cache. Returns (x, cache)."""
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = _sp(rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps))
+    if bd.mixer == "attn":
+        acfg = _attn_cfg(cfg, bd)
+        b, s, _ = h.shape
+        hh, kvh, d = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+        q = linear.apply(params["mixer"]["wq"], h, quant, dt).reshape(b, s, hh, d)
+        k = linear.apply(params["mixer"]["wk"], h, quant, dt).reshape(b, s, kvh, d)
+        v = linear.apply(params["mixer"]["wv"], h, quant, dt).reshape(b, s, kvh, d)
+        from .rotary import apply_rope
+
+        q = apply_rope(q, positions, acfg.rope_theta)
+        k = apply_rope(k, positions, acfg.rope_theta)
+        out = attention._attend_chunked(q, k, v, positions, positions, acfg)
+        h2 = linear.apply(params["mixer"]["wo"], out.reshape(b, s, hh * d),
+                          quant, dt)
+        cache = attention.prefill_cache(params["mixer"], h, positions, acfg,
+                                        quant, k, v, max_seq)
+    elif bd.mixer == "mla":
+        h2 = mla.apply_train(params["mixer"], h, positions, _mla_cfg(cfg),
+                             quant, dt)
+        cache = mla.prefill_cache(params["mixer"], h, positions, _mla_cfg(cfg),
+                                  quant, max_seq, dt)
+    elif bd.mixer == "rglru":
+        h2 = rglru.apply_train(params["mixer"], h, _rglru_cfg(cfg), quant, dt)
+        cache = rglru.prefill_state(params["mixer"], h, _rglru_cfg(cfg), quant, dt)
+    else:
+        h2, cache = ssd.prefill_state(params["mixer"], h, _ssd_cfg(cfg), quant, dt)
+    if cfg.post_norms:
+        h2 = rmsnorm_apply(params["postnorm_mixer"], h2, cfg.norm_eps)
+    x = x + h2
+    if bd.ffn != "none":
+        h = _sp(rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps))
+        if bd.ffn == "moe":
+            h, _ = moe.apply(params["ffn"], h, _moe_cfg(cfg), quant, dt)
+        else:
+            h = ffn.apply(params["ffn"], h, quant, cfg.ffn_kind, dt)
+        if cfg.post_norms:
+            h = rmsnorm_apply(params["postnorm_ffn"], h, cfg.norm_eps)
+        x = x + h
+    return x, cache

@@ -1,0 +1,77 @@
+"""Shared building blocks for the pure-JAX model zoo.
+
+Parameters are plain nested dicts of jnp arrays (f32 masters). Every init
+function returns ``(params, axes)`` where ``axes`` mirrors the params pytree
+with tuples of *logical axis names* — the sharding layer
+(``repro.parallel.sharding``) maps logical axes to mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis vocabulary (see parallel/sharding.py for the mesh mapping).
+BATCH = "batch"
+SEQ = "seq"
+LAYERS = "layers"  # scan-stacked layer axis: never sharded
+D_MODEL = "d_model"
+D_FF = "d_ff"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+VOCAB = "vocab"
+EXPERT = "expert"
+KV_LORA = "kv_lora"
+STATE = "state"
+RNN = "rnn"
+CONV = "conv"
+UNSHARDED = None
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    """Truncated-normal init with fan-in scaling (lecun-style)."""
+    stddev = scale / math.sqrt(max(shape[0], 1))
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in, d_out, axes, scale=1.0):
+    """A single projection weight + its logical axes."""
+    w = truncated_normal_init(key, (d_in, d_out), scale)
+    return {"w": w}, {"w": axes}
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def cast_compute(x, dtype):
+    """Cast params/activations to the compute dtype (bf16 on TPU)."""
+    if x.dtype in (jnp.float32, jnp.bfloat16, jnp.float16) and x.dtype != dtype:
+        return x.astype(dtype)
+    return x
+
+
+def stack_inits(init_fn, key, n):
+    """vmap ``init_fn(key) -> (params, axes)`` over ``n`` stacked copies.
+
+    Returns (stacked_params, axes) where params carry a leading ``layers``
+    axis and the axes pytree has LAYERS prepended to every entry.
+    """
+    keys = jnp.stack(split_keys(key, n))
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)  # structure only; throwaway values
+    return params, prepend_axis(axes)
+
+
+def prepend_axis(axes_tree, name=LAYERS):
+    """Prepend a logical axis name to every tuple in an axes pytree."""
+    return jax.tree_util.tree_map(
+        lambda t: (name, *t), axes_tree, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

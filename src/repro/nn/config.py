@@ -1,0 +1,104 @@
+"""Model configuration schema shared by all 10 assigned architectures.
+
+A model is: embedding -> [prologue blocks] -> num_groups x pattern (scanned)
+-> [epilogue blocks] -> final norm -> LM head. Heterogeneous layer stacks
+(gemma2 local/global alternation, recurrentgemma 2:1 recurrent:attention,
+deepseek dense-then-MoE) are expressed as a repeating ``pattern`` of
+BlockDefs plus optional unscanned prologue/epilogue — the scan keeps compile
+time O(pattern), not O(num_layers), which is what makes 56-layer dry-runs
+tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One decoder block: a sequence mixer + a channel mixer."""
+
+    mixer: str  # "attn" | "mla" | "rglru" | "ssd"
+    window: Optional[int] = None  # sliding window for attn mixers
+    ffn: str = "dense"  # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    vocab_size: int
+    # layer stack
+    pattern: Tuple[BlockDef, ...]
+    num_groups: int
+    prologue: Tuple[BlockDef, ...] = ()
+    epilogue: Tuple[BlockDef, ...] = ()
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None
+    query_chunk: int = 1024
+    # ffn
+    d_ff: int = 0
+    ffn_kind: str = "swiglu"
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared: int = 0
+    d_ff_expert: int = 0
+    aux_loss_weight: float = 0.01
+    moe_dispatch: str = "dense"  # "dense" | "sorted" (ragged_dot dropless)
+    train_microbatches: int = 1  # gradient-accumulation microbatches
+    # mla
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # rglru
+    rnn_width: int = 0
+    conv_width: int = 4
+    # ssd
+    d_inner: int = 0
+    headdim: int = 64
+    d_state: int = 128
+    ngroups: int = 1
+    ssd_chunk: int = 256
+    # embedding / head
+    tied_embeddings: bool = True
+    scale_embeds_by_sqrt_dim: bool = False
+    logit_softcap: Optional[float] = None
+    num_codebooks: int = 1  # musicgen: parallel codebook heads
+    post_norms: bool = False  # gemma2 sandwich norms
+    norm_eps: float = 1e-6
+    # numerics / policy
+    quant: QuantConfig = QuantConfig()
+    compute_dtype: object = jnp.bfloat16
+    remat: str = "full"  # "full" | "none"
+    # bookkeeping for the assignment sheet
+    source: str = ""
+    sub_quadratic: bool = False  # eligible for long_500k
+
+    @property
+    def num_layers(self) -> int:
+        return (
+            len(self.prologue)
+            + self.num_groups * len(self.pattern)
+            + len(self.epilogue)
+        )
+
+    def all_blocks(self) -> Tuple[BlockDef, ...]:
+        return (
+            *self.prologue,
+            *(self.pattern * self.num_groups),
+            *self.epilogue,
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

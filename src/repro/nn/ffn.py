@@ -1,0 +1,36 @@
+"""Gated feed-forward blocks (SwiGLU / GeGLU / GELU) over MX linears."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+from . import common as C
+from . import linear
+
+
+def init(key, d_model: int, d_ff: int, kind: str = "swiglu"):
+    ks = C.split_keys(key, 3)
+    gate, ga = linear.init(ks[0], d_model, d_ff, (C.D_MODEL, C.D_FF))
+    up, ua = linear.init(ks[1], d_model, d_ff, (C.D_MODEL, C.D_FF))
+    down, da = linear.init(ks[2], d_ff, d_model, (C.D_FF, C.D_MODEL))
+    params = {"gate": gate, "up": up, "down": down}
+    axes = {"gate": ga, "up": ua, "down": da}
+    if kind == "gelu":  # no gate branch
+        params.pop("gate")
+        axes.pop("gate")
+    return params, axes
+
+
+def apply(params, x, quant: QuantConfig, kind: str = "swiglu",
+          compute_dtype=jnp.bfloat16):
+    up = linear.apply(params["up"], x, quant, compute_dtype)
+    if kind == "gelu":
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(compute_dtype)
+    else:
+        gate = linear.apply(params["gate"], x, quant, compute_dtype)
+        g32 = gate.astype(jnp.float32)
+        act = jax.nn.silu(g32) if kind == "swiglu" else jax.nn.gelu(g32, approximate=True)
+        h = (act.astype(compute_dtype) * up)
+    return linear.apply(params["down"], h, quant, compute_dtype, tp_on="in")

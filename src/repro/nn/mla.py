@@ -1,0 +1,199 @@
+"""Multi-head Latent Attention (DeepSeek-V2), MX-quantized projections.
+
+V2-Lite configuration: KV jointly compressed to a 512-dim latent plus a
+64-dim decoupled RoPE key shared across heads; queries are full-rank
+(V2-Lite skips q compression). The decode cache stores only the latent +
+rope key — (kv_lora + rope_dim) per token instead of 2*H*D — which is the
+arch's own KV compression; the MX-quantized-cache option stacks on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, quantize
+from repro.core import formats as F
+
+from . import common as C
+from . import linear
+from .attention import NEG_INF, _mask
+from .norms import rmsnorm_apply, rmsnorm_init
+from .rotary import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    query_chunk: int = 1024
+
+
+def init(key, cfg: MLAConfig):
+    ks = C.split_keys(key, 6)
+    h = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    wq, aq = linear.init(ks[0], cfg.d_model, h * qd, (C.D_MODEL, C.HEADS))
+    # joint KV down-projection: latent + shared rope key
+    wkv_a, akva = linear.init(
+        ks[1], cfg.d_model, cfg.kv_lora + cfg.qk_rope_dim, (C.D_MODEL, C.KV_LORA)
+    )
+    wk_b, akb = linear.init(ks[2], cfg.kv_lora, h * cfg.qk_nope_dim,
+                            (C.KV_LORA, C.HEADS))
+    wv_b, avb = linear.init(ks[3], cfg.kv_lora, h * cfg.v_head_dim,
+                            (C.KV_LORA, C.HEADS))
+    wo, ao = linear.init(ks[4], h * cfg.v_head_dim, cfg.d_model,
+                         (C.HEADS, C.D_MODEL))
+    ln, lna = rmsnorm_init(ks[5], cfg.kv_lora)
+    params = {"wq": wq, "wkv_a": wkv_a, "wk_b": wk_b, "wv_b": wv_b,
+              "wo": wo, "kv_norm": ln}
+    axes = {"wq": aq, "wkv_a": akva, "wk_b": akb, "wv_b": avb,
+            "wo": ao, "kv_norm": lna}
+    return params, axes
+
+
+def _project_q(params, x, cfg, quant, dtype):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = linear.apply(params["wq"], x, quant, dtype)
+    q = q.reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+
+
+def _latent(params, x, cfg, quant, dtype):
+    kv = linear.apply(params["wkv_a"], x, quant, dtype)
+    c_kv = kv[..., : cfg.kv_lora]
+    k_rope = kv[..., cfg.kv_lora:]
+    c_kv = rmsnorm_apply(params["kv_norm"], c_kv)
+    return c_kv, k_rope
+
+
+def _attend_mla(q_nope, q_rope, k_nope, k_rope, v, qpos, kpos, cfg, dtype):
+    """Attention with decoupled rope/nope logits; k_rope shared per head."""
+    d_total = cfg.qk_nope_dim + cfg.qk_rope_dim
+    logits = (
+        jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * (d_total**-0.5)
+    mask = _mask(qpos, kpos, None)
+    while mask.ndim < logits.ndim:
+        mask = mask[..., None, :, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def apply_train(params, x, positions, cfg: MLAConfig, quant: QuantConfig,
+                compute_dtype=jnp.bfloat16):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _project_q(params, x, cfg, quant, compute_dtype)
+    c_kv, k_rope = _latent(params, x, cfg, quant, compute_dtype)
+    k_nope = linear.apply(params["wk_b"], c_kv, quant, compute_dtype)
+    k_nope = k_nope.reshape(b, s, h, cfg.qk_nope_dim)
+    v = linear.apply(params["wv_b"], c_kv, quant, compute_dtype)
+    v = v.reshape(b, s, h, cfg.v_head_dim)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    cs = cfg.query_chunk
+    if s > cs and s % cs == 0:
+        nc = s // cs
+
+        def body(args):
+            qn, qr, pi = args
+            return _attend_mla(qn, qr, k_nope, k_rope, v, pi, positions,
+                               cfg, compute_dtype)
+
+        qn = q_nope.reshape(b, nc, cs, h, -1).swapaxes(0, 1)
+        qr = q_rope.reshape(b, nc, cs, h, -1).swapaxes(0, 1)
+        pc = positions.reshape(b, nc, cs).swapaxes(0, 1)
+        out = jax.lax.map(body, (qn, qr, pc)).swapaxes(0, 1).reshape(b, s, h, -1)
+    else:
+        out = _attend_mla(q_nope, q_rope, k_nope, k_rope, v, positions,
+                          positions, cfg, compute_dtype)
+    return linear.apply(params["wo"], out.reshape(b, s, -1), quant,
+                        compute_dtype, tp_on="in")
+
+
+# -- latent cache -----------------------------------------------------------
+
+
+def init_cache(batch: int, max_seq: int, cfg: MLAConfig, quant: QuantConfig):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora), jnp.bfloat16),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), jnp.bfloat16),
+        "kpos": jnp.full((max_seq,), -1, jnp.int32),
+    }
+
+
+def apply_decode(params, x, cache, pos, cfg: MLAConfig, quant: QuantConfig,
+                 compute_dtype=jnp.bfloat16):
+    """Single-token decode in the *absorbed* MLA form (DeepSeek-V2 §2.1.2):
+
+    Instead of re-expanding the whole latent cache through wk_b/wv_b every
+    step (O(T * kv_lora * H * D) per layer), the per-step query is projected
+    into latent space (q_eff = q_nope @ wk_b) and attention runs directly
+    against the compressed cache; the value path un-absorbs afterwards.
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope = _project_q(params, x, cfg, quant, compute_dtype)
+    c_new, kr_new = _latent(params, x, cfg, quant, compute_dtype)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    kr_new = apply_rope(kr_new[..., None, :], posv, cfg.rope_theta)[..., 0, :]
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    cache["kpos"] = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.asarray(pos, jnp.int32)[None], (pos,))
+    c_kv = cache["c_kv"].astype(compute_dtype)
+    k_rope = cache["k_rope"].astype(compute_dtype)
+
+    wk_b = params["wk_b"]["w"].astype(compute_dtype).reshape(
+        cfg.kv_lora, h, cfg.qk_nope_dim)
+    wv_b = params["wv_b"]["w"].astype(compute_dtype).reshape(
+        cfg.kv_lora, h, cfg.v_head_dim)
+    # absorb: query into latent space
+    q_eff = jnp.einsum("bshd,lhd->bshl", q_nope, wk_b)
+    d_total = cfg.qk_nope_dim + cfg.qk_rope_dim
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_eff, c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * (d_total**-0.5)
+    mask = _mask(posv, cache["kpos"][None], None)
+    while mask.ndim < logits.ndim:
+        mask = mask[..., None, :, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+    out_lat = jnp.einsum("bhst,btl->bshl", probs, c_kv)
+    out = jnp.einsum("bshl,lhd->bshd", out_lat, wv_b)  # un-absorb values
+    y = linear.apply(params["wo"], out.reshape(b, 1, -1), quant,
+                     compute_dtype, tp_on="in")
+    return y, cache
+
+
+def prefill_cache(params, x, positions, cfg: MLAConfig, quant: QuantConfig,
+                  max_seq: int, compute_dtype=jnp.bfloat16):
+    b, s = positions.shape
+    cache = init_cache(b, max_seq, cfg, quant)
+    c_kv, k_rope = _latent(params, x, cfg, quant, compute_dtype)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    cache["c_kv"] = cache["c_kv"].at[:, :s].set(c_kv.astype(jnp.bfloat16))
+    cache["k_rope"] = cache["k_rope"].at[:, :s].set(k_rope.astype(jnp.bfloat16))
+    cache["kpos"] = cache["kpos"].at[:s].set(positions[0])
+    return cache

@@ -1,0 +1,24 @@
+"""Normalization layers (RMSNorm with gemma-style (1+w) option)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def rmsnorm_init(key, dim: int):
+    del key
+    return {"scale": jnp.zeros((dim,), jnp.float32)}, {"scale": (C.D_MODEL,)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6, plus_one: bool = True):
+    """RMSNorm in f32 (norm stats must not be quantized — paper keeps
+    normalization wide; only matmuls go through MX)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    norm = x32 * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    w = (1.0 + scale) if plus_one else scale
+    return (norm * w).astype(dtype)

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin), with temporal conv.
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is
+diagonal and associative, so training/prefill uses
+``jax.lax.associative_scan`` (log-depth, sequence-shardable); decode is a
+single-step state update — this is what makes the 500k-token shape
+tractable for this arch (state is O(width), not O(seq)).
+
+Projections route through ``linear.apply`` -> MX policy applies; the
+recurrence itself stays f32 (tiny FLOP share, numerically stateful —
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+from . import common as C
+from . import linear
+
+_C_RGLRU = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    width: int  # lru width (recurrentgemma: == d_model)
+    conv_width: int = 4
+
+
+def init(key, cfg: RGLRUConfig):
+    ks = C.split_keys(key, 6)
+    w = cfg.width
+    px, ax = linear.init(ks[0], cfg.d_model, w, (C.D_MODEL, C.RNN))
+    pg, ag = linear.init(ks[1], cfg.d_model, w, (C.D_MODEL, C.RNN))
+    po, ao = linear.init(ks[2], w, cfg.d_model, (C.RNN, C.D_MODEL))
+    # RG-LRU gates: per-channel input projections
+    params = {
+        "proj_x": px,
+        "proj_gate": pg,
+        "proj_out": po,
+        "conv_w": C.truncated_normal_init(ks[3], (cfg.conv_width, w), 1.0),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": C.truncated_normal_init(ks[4], (w, w), 1.0),
+        "gate_x": C.truncated_normal_init(ks[5], (w, w), 1.0),
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_x_b": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c spans ~[0.9, 0.999]
+        "lam": jnp.linspace(0.9, 5.0, w, dtype=jnp.float32),
+    }
+    axes = {
+        "proj_x": ax,
+        "proj_gate": ag,
+        "proj_out": ao,
+        "conv_w": (C.CONV, C.RNN),
+        "conv_b": (C.RNN,),
+        "gate_a": (C.RNN, C.RNN),
+        "gate_x": (C.RNN, C.RNN),
+        "gate_a_b": (C.RNN,),
+        "gate_x_b": (C.RNN,),
+        "lam": (C.RNN,),
+    }
+    return params, axes
+
+
+def _gates(params, xc):
+    """Recurrence coefficients from conv output xc (f32)."""
+    r = jax.nn.sigmoid(xc @ params["gate_a"] + params["gate_a_b"])
+    i = jax.nn.sigmoid(xc @ params["gate_x"] + params["gate_x_b"])
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lam"]) * r  # (B,S,W) or (B,W)
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1 - a^2), computed via log for stability
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * xc
+
+
+def _conv_full(params, x):
+    """Causal temporal conv over (B, S, W) with width-4 kernel."""
+    w = params["conv_w"].astype(jnp.float32)  # (CW, W)
+    cw = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (cw - 1 - i, 0), (0, 0)))[:, : x.shape[1]]
+        # tap i sees x at offset -(cw-1-i)
+        out = out + shifted * w[i]
+    return out + params["conv_b"].astype(jnp.float32)
+
+
+def apply_train(params, x, cfg: RGLRUConfig, quant: QuantConfig,
+                compute_dtype=jnp.bfloat16):
+    """Full-sequence recurrent branch: conv -> RG-LRU scan -> gated merge."""
+    b, s, _ = x.shape
+    xr = linear.apply(params["proj_x"], x, quant, compute_dtype).astype(jnp.float32)
+    gate = linear.apply(params["proj_gate"], x, quant, compute_dtype)
+    xc = _conv_full(params, xr)
+    a, b_term = _gates(params, xc)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    merged = h.astype(compute_dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32), approximate=True
+    ).astype(compute_dtype)
+    return linear.apply(params["proj_out"], merged, quant, compute_dtype,
+                        tp_on="in")
+
+
+def init_state(batch: int, cfg: RGLRUConfig):
+    return {
+        "h": jnp.zeros((batch, cfg.width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.width), jnp.float32),
+    }
+
+
+def apply_decode(params, x, state, cfg: RGLRUConfig, quant: QuantConfig,
+                 compute_dtype=jnp.bfloat16):
+    """Single-token step. x: (B, 1, d_model)."""
+    b = x.shape[0]
+    xr = linear.apply(params["proj_x"], x, quant, compute_dtype)
+    xr = xr.astype(jnp.float32)[:, 0]  # (B, W)
+    gate = linear.apply(params["proj_gate"], x, quant, compute_dtype)[:, 0]
+    w = params["conv_w"].astype(jnp.float32)
+    hist = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # (B,CW,W)
+    xc = jnp.einsum("bcw,cw->bw", hist, w) + params["conv_b"]
+    a, b_term = _gates(params, xc)
+    h = a * state["h"] + b_term
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    merged = h.astype(compute_dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32), approximate=True
+    ).astype(compute_dtype)
+    out = linear.apply(params["proj_out"], merged[:, None], quant,
+                       compute_dtype, tp_on="in")
+    return out, new_state
+
+
+def prefill_state(params, x, cfg: RGLRUConfig, quant: QuantConfig,
+                  compute_dtype=jnp.bfloat16):
+    """Run the full sequence and return the final recurrent + conv state."""
+    b, s, _ = x.shape
+    xr = linear.apply(params["proj_x"], x, quant, compute_dtype).astype(jnp.float32)
+    xc = _conv_full(params, xr)
+    a, b_term = _gates(params, xc)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    cw = cfg.conv_width
+    conv_state = xr[:, s - (cw - 1):, :] if s >= cw - 1 else jnp.pad(
+        xr, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+    return {"h": h[:, -1], "conv": conv_state}

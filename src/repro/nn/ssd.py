@@ -1,0 +1,232 @@
+"""Mamba2 SSD (state-space duality) block, chunked-scan implementation.
+
+Training/prefill uses the quadratic-within-chunk / linear-across-chunk SSD
+algorithm (Mamba2 paper, Listing 1): intra-chunk attention-like einsums +
+a cross-chunk state recurrence expressed with segment-sum decays. Decode is
+the O(1) recurrent update on the (B, H, P, N) state — attention-free, which
+is why this arch runs the 500k decode shape.
+
+in/out/conv projections route through the MX linear layer; the SSD scan
+itself stays f32 (stateful recurrence, small FLOP share vs projections).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+
+from . import common as C
+from . import linear
+from .norms import rmsnorm_apply, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_inner: int  # expand * d_model
+    headdim: int = 64  # P
+    d_state: int = 128  # N
+    ngroups: int = 1  # G
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def nheads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ngroups * self.d_state
+
+
+def init(key, cfg: SSDConfig):
+    ks = C.split_keys(key, 4)
+    h = cfg.nheads
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ngroups * cfg.d_state + h
+    wi, ai = linear.init(ks[0], cfg.d_model, d_in_proj, (C.D_MODEL, C.RNN))
+    wo, ao = linear.init(ks[1], cfg.d_inner, cfg.d_model, (C.RNN, C.D_MODEL))
+    nrm, nrma = rmsnorm_init(ks[2], cfg.d_inner)
+    params = {
+        "in_proj": wi,
+        "out_proj": wo,
+        "norm": nrm,
+        "conv_w": C.truncated_normal_init(ks[3], (cfg.conv_width, cfg.conv_dim), 1.0),
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+    }
+    axes = {
+        "in_proj": ai,
+        "out_proj": ao,
+        "norm": nrma,
+        "conv_w": (C.CONV, C.RNN),
+        "conv_b": (C.RNN,),
+        "A_log": (C.HEADS,),
+        "dt_bias": (C.HEADS,),
+        "D": (C.HEADS,),
+    }
+    return params, axes
+
+
+def _segsum(x):
+    """(..., L) -> (..., L, L) lower-tri segment sums: S[i,j]=sum_{j<k<=i}."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(t)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, d, NEG_INF)
+
+
+def _ssd_scan(x, dt, A, B, Cm, cfg: SSDConfig, init_state=None):
+    """Chunked SSD. x: (b,l,h,p) f32, dt: (b,l,h), A: (h,), B/C: (b,l,g,n).
+
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(cfg.chunk, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    nc = l // q
+    rep = h // g  # heads per group
+
+    xd = x * dt[..., None]  # discretized input
+    Ad = A[None, None, :] * dt  # (b,l,h)
+
+    # chunked views
+    xc = xd.reshape(b, nc, q, h, p)
+    Ac = Ad.reshape(b, nc, q, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = Cm.reshape(b, nc, q, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,c,q,h,n) — g broadcast to heads
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    A_cumsum = jnp.cumsum(Ac, axis=-1)  # (b,h,c,q)
+    L = jnp.exp(_segsum(Ac))  # (b,h,c,q,q)
+
+    # 1) intra-chunk (quadratic, attention-like)
+    y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp", Ch, Bh, L, xc)
+
+    # 2) chunk-end states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)  # (b,h,c,q)
+    states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn", Bh, decay_states, xc)
+
+    # 3) cross-chunk recurrence via decay matrix over chunk sums
+    chunk_sum = A_cumsum[..., -1]  # (b,h,c)
+    padded = jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))  # (b,h,c+1,c+1)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states_all = jnp.concatenate([init_state[:, None], states], axis=1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states_all)
+    prev_states = new_states[:, :-1]  # state entering each chunk
+    final_state = new_states[:, -1]
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(A_cumsum)  # (b,h,c,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def _conv_full(params, u):
+    """Causal conv over (B, S, conv_dim), silu activation."""
+    w = params["conv_w"].astype(jnp.float32)
+    cw = w.shape[0]
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        shifted = jnp.pad(u, ((0, 0), (cw - 1 - i, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
+
+
+def _split_proj(zxbcdt, cfg: SSDConfig):
+    di, g, n, h = cfg.d_inner, cfg.ngroups, cfg.d_state, cfg.nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + cfg.conv_dim]
+    dt_raw = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt_raw
+
+
+def _post(params, y, z, cfg, quant, compute_dtype):
+    gated = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    normed = rmsnorm_apply(params["norm"], gated.astype(compute_dtype))
+    return linear.apply(params["out_proj"], normed, quant, compute_dtype,
+                        tp_on="in")
+
+
+def apply_train(params, xin, cfg: SSDConfig, quant: QuantConfig,
+                compute_dtype=jnp.bfloat16, init_state=None, return_state=False):
+    b, s, _ = xin.shape
+    h, p, g, n = cfg.nheads, cfg.headdim, cfg.ngroups, cfg.d_state
+    zxbcdt = linear.apply(params["in_proj"], xin, quant, compute_dtype)
+    z, xbc, dt_raw = _split_proj(zxbcdt.astype(jnp.float32), cfg)
+    xbc = _conv_full(params, xbc)
+    x = xbc[..., : cfg.d_inner].reshape(b, s, h, p)
+    B = xbc[..., cfg.d_inner: cfg.d_inner + g * n].reshape(b, s, g, n)
+    Cm = xbc[..., cfg.d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])  # (b,s,h)
+    A = -jnp.exp(params["A_log"])  # (h,)
+    y, state = _ssd_scan(x, dt, A, B, Cm, cfg, init_state)
+    y = y + params["D"][None, None, :, None] * x
+    out = _post(params, y.reshape(b, s, -1), z, cfg, quant, compute_dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_state(batch: int, cfg: SSDConfig):
+    return {
+        "h": jnp.zeros((batch, cfg.nheads, cfg.headdim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), jnp.float32),
+    }
+
+
+def apply_decode(params, xin, state, cfg: SSDConfig, quant: QuantConfig,
+                 compute_dtype=jnp.bfloat16):
+    """Single-token recurrent step. xin: (B, 1, d_model)."""
+    b = xin.shape[0]
+    h, p, g, n = cfg.nheads, cfg.headdim, cfg.ngroups, cfg.d_state
+    zxbcdt = linear.apply(params["in_proj"], xin, quant, compute_dtype)
+    z, xbc_new, dt_raw = _split_proj(zxbcdt.astype(jnp.float32)[:, 0], cfg)
+    w = params["conv_w"].astype(jnp.float32)
+    hist = jnp.concatenate([state["conv"], xbc_new[:, None]], axis=1)
+    xbc = jax.nn.silu(
+        jnp.einsum("bcw,cw->bw", hist, w) + params["conv_b"].astype(jnp.float32)
+    )
+    x = xbc[..., : cfg.d_inner].reshape(b, h, p)
+    B = xbc[..., cfg.d_inner: cfg.d_inner + g * n].reshape(b, g, n)
+    Cm = xbc[..., cfg.d_inner + g * n:].reshape(b, g, n)
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])  # (b,h)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(A[None] * dt)  # (b,h)
+    hs = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x * dt[..., None], Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", hs, Ch) + params["D"][None, :, None] * x
+    out = _post(params, y.reshape(b, 1, -1), z[:, None], cfg, quant, compute_dtype)
+    return out, {"h": hs, "conv": hist[:, 1:]}
+
+
+def prefill_state(params, xin, cfg: SSDConfig, quant: QuantConfig,
+                  compute_dtype=jnp.bfloat16):
+    """Run the full sequence, return (last-token logits input, state)."""
+    b, s, _ = xin.shape
+    out, ssd_state = apply_train(params, xin, cfg, quant, compute_dtype,
+                                 return_state=True)
+    zxbcdt = linear.apply(params["in_proj"], xin, quant, compute_dtype)
+    _, xbc, _ = _split_proj(zxbcdt.astype(jnp.float32), cfg)
+    cw = cfg.conv_width
+    conv_state = xbc[:, s - (cw - 1):, :] if s >= cw - 1 else jnp.pad(
+        xbc, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+    return out, {"h": ssd_state, "conv": conv_state}

@@ -1,0 +1,4 @@
+"""Serving: MX-compressed weights, batched prefill/decode engine."""
+from .engine import ServeConfig, ServeEngine, make_serve_step
+
+__all__ = ["ServeConfig", "ServeEngine", "make_serve_step"]

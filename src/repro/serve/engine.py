@@ -1,0 +1,80 @@
+"""Serving engine: MX-compressed weights, batched prefill + decode loop.
+
+The inference-side payoff of the paper's technique: weights (and optionally
+the KV cache) live in MX format — decode is bandwidth-bound, so compact
+weights translate directly into step-time via the roofline memory term.
+
+``ServeEngine`` keeps a fixed batch of slots (continuous-batching-lite):
+``generate`` runs prefill once and a jitted decode loop; sampling is greedy
+or temperature-based with a per-call PRNG key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import model
+from repro.nn.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: Optional[int] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, cfg, tokens=toks,
+                                          max_seq=serve_cfg.max_seq))
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: model.decode_step(
+                p, cfg, cache, tokens=tok, pos=pos))
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1].astype(jnp.float32)
+        if self.serve_cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve_cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 key=None) -> np.ndarray:
+        """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s0 = prompts.shape
+        logits, cache = self._prefill(self.params, prompts)
+        out = [prompts]
+        tok = self._sample(logits, key)
+        for i in range(max_new_tokens):
+            out.append(tok[:, None])
+            if i == max_new_tokens - 1:
+                break
+            pos = jnp.asarray(s0 + i, jnp.int32)
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+            tok = self._sample(logits, sub)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def make_serve_step(cfg: ModelConfig):
+    """The (cache, token, pos) -> (logits, cache) step used by the dry-run.
+
+    This is what ``decode_*`` shapes lower: one new token against a KV cache
+    of seq_len, global_batch requests in flight.
+    """
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cfg, cache, tokens=tokens, pos=pos)
+
+    return serve_step

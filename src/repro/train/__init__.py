@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, step builder, checkpointing, fault tolerance."""
+from . import checkpoint, fault, loop, metrics, optim
+from .loop import init_state, make_train_step, state_axes
+from .optim import OptimConfig
+
+__all__ = ["checkpoint", "fault", "loop", "metrics", "optim", "init_state",
+           "make_train_step", "state_axes", "OptimConfig"]

@@ -1,0 +1,116 @@
+"""Training step builder: grad accumulation, MX gradient compression, pjit.
+
+``make_train_step(cfg, optim_cfg, ...)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from ``repro.parallel``. Features:
+
+  * microbatched gradient accumulation via ``lax.scan`` (sequential
+    microbatches bound activation memory; the collective for microbatch i
+    overlaps compute of i+1 under XLA's latency-hiding scheduler),
+  * optional MX block-quantized gradient compression before the cross-pod
+    reduction (``QuantConfig.quantize_grads``) — E5M2 with stochastic-free
+    RNE is the paper-faithful format choice for gradients,
+  * deterministic loss/metric averaging in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize_value
+from repro.nn import model
+from repro.nn.config import ModelConfig
+
+from . import optim
+
+
+def _compress_grads(grads, cfg: ModelConfig):
+    """MX-compress gradients (distributed-optimization trick, DESIGN §5).
+
+    Fake-quantize to MXFP8-E5M2 blocks before the optimizer: on a real
+    multi-pod deployment the cross-DCN all-reduce runs on the compact
+    representation (quantize -> reduce -> dequantize); in-graph we model
+    the numerics so convergence effects are testable.
+    """
+
+    def q(g):
+        if g.ndim == 0 or g.size % 32 != 0:
+            return g
+        return quantize_value(g.astype(jnp.float32), "fp8_e5m2", 32)
+
+    return jax.tree_util.tree_map(q, grads)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptimConfig,
+                    num_microbatches: int = 1, param_shardings=None):
+    """Build the jittable train step.
+
+    ``param_shardings``: optional NamedSharding tree matching params. Grads
+    are pinned to it before the optimizer, so XLA lowers the gradient
+    reduction as reduce-scatter to the ZeRO shard and the global-norm clip
+    runs on shards + a scalar reduce — instead of full f32 all-reduces of
+    every weight gradient (§Perf iteration 7, measured on mixtral).
+    """
+
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0]
+            mb = b // num_microbatches
+            return x.reshape(num_microbatches, mb, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, metrics, grads = single(params, mb)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), metrics
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_g), micro)
+        inv = 1.0 / num_microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads_sum)
+        last_metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum * inv, last_metrics, grads
+
+    def train_step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        if num_microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        if cfg.quant.enabled and cfg.quant.quantize_grads:
+            grads = _compress_grads(grads, cfg)
+        if param_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, param_shardings)
+        new_params, new_opt, opt_metrics = optim.apply(
+            opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(key, cfg: ModelConfig):
+    params, axes = model.init(key, cfg)
+    return {"params": params, "opt": optim.init(params)}, axes
+
+
+def state_axes(axes):
+    """Axes pytree for the full train state (opt state mirrors params)."""
+    return {
+        "params": axes,
+        "opt": {"m": axes, "v": axes, "step": ()},
+    }

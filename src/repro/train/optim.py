@@ -1,0 +1,93 @@
+"""Hand-rolled sharded AdamW + LR schedules + global-norm clipping.
+
+Optimizer state mirrors the parameter pytree (m, v in f32), so it inherits
+the exact FSDP/TP sharding of the params — ZeRO-3 by construction. All ops
+are elementwise except the global-norm reduction, which XLA lowers to one
+fused all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"  # "cosine" | "linear" | "constant"
+
+
+def lr_at(cfg: OptimConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - t)
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply(cfg: OptimConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1**step.astype(jnp.float32))
+        vhat = v / (1 - b2**step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

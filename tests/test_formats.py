@@ -1,0 +1,130 @@
+"""Unit + property tests for MX element/scale formats (OCP MX spec v1.0)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import formats as F
+
+FMTS = ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"]
+
+
+# ---------------------------------------------------------------------------
+# E8M0 scale format
+# ---------------------------------------------------------------------------
+
+
+def test_e8m0_roundtrip_powers_of_two():
+    exps = np.arange(-126, 127, dtype=np.int32)
+    amax = np.exp2(exps.astype(np.float64)).astype(np.float32)
+    for fmt in (F.FP8_E4M3, F.FP8_E5M2, F.FP4_E2M1):
+        e = np.asarray(F.e8m0_from_amax(jnp.asarray(amax), fmt))
+        expected = np.clip(exps - fmt.emax + F.E8M0_BIAS, 0, 254)
+        np.testing.assert_array_equal(e, expected.astype(np.uint8))
+
+
+def test_e8m0_zero_amax():
+    e = F.e8m0_from_amax(jnp.zeros((4,)), F.FP8_E4M3)
+    np.testing.assert_array_equal(np.asarray(e), 0)
+
+
+def test_e8m0_scale_decode_exact():
+    """Scale decode must be bit-exact powers of two (shift-based, Listing 1)."""
+    e = np.arange(0, 255, dtype=np.uint8)
+    s = np.asarray(F.e8m0_to_scale(jnp.asarray(e)))
+    expected = np.exp2(e.astype(np.float64) - 127.0).astype(np.float32)
+    np.testing.assert_array_equal(s, expected)
+
+
+@given(st.floats(min_value=1e-30, max_value=1e30, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_e8m0_amax_maps_into_format_range(amax):
+    """After scaling, |amax/scale| must round into <= 2^(emax+1)."""
+    for fmt in (F.FP8_E4M3, F.FP8_E5M2, F.FP4_E2M1):
+        e = F.e8m0_from_amax(jnp.asarray([amax], dtype=jnp.float32), fmt)
+        scale = float(F.e8m0_to_scale(e)[0])
+        ratio = amax / scale
+        assert ratio < 2.0 ** (fmt.emax + 1) * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Element casts vs ml_dtypes oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_cast_matches_ml_dtypes(fmt):
+    rng = np.random.default_rng(42)
+    info = F.get_format(fmt)
+    x = np.concatenate(
+        [
+            rng.normal(size=2048).astype(np.float32) * info.max / 3,
+            rng.uniform(-info.max * 1.5, info.max * 1.5, size=2048).astype(
+                np.float32
+            ),
+            np.array([0.0, -0.0, info.max, -info.max], dtype=np.float32),
+        ]
+    )
+    ours = np.asarray(F.cast_to_format_value(jnp.asarray(x), fmt))
+    oracle = F.numpy_cast_oracle(x, fmt)
+    np.testing.assert_array_equal(ours, oracle)
+
+
+def test_fp4_tie_to_even():
+    # midpoints and their RNE results (even mantissa neighbour)
+    ties = {0.25: 0.0, 0.75: 1.0, 1.25: 1.0, 1.75: 2.0, 2.5: 2.0, 3.5: 4.0, 5.0: 4.0}
+    x = jnp.asarray(list(ties.keys()), dtype=jnp.float32)
+    got = np.asarray(F.cast_fp4_value(x))
+    np.testing.assert_array_equal(got, np.asarray(list(ties.values()), np.float32))
+    got_neg = np.asarray(F.cast_fp4_value(-x))
+    np.testing.assert_array_equal(got_neg, -np.asarray(list(ties.values()), np.float32))
+
+
+def test_fp4_saturation():
+    x = jnp.asarray([7.0, 100.0, -9.5], dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(F.cast_fp4_value(x)), [6.0, 6.0, -6.0])
+
+
+# ---------------------------------------------------------------------------
+# FP4 nibble pack/unpack
+# ---------------------------------------------------------------------------
+
+
+@given(
+    hnp.arrays(
+        np.float32,
+        st.integers(min_value=1, max_value=16).map(lambda n: (n, 8)),
+        elements=st.floats(-8, 8, width=32),
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_fp4_pack_roundtrip(x):
+    xj = jnp.asarray(x)
+    nib = F.fp4_encode(xj)
+    packed = F.fp4_pack(nib)
+    assert packed.shape == (*x.shape[:-1], x.shape[-1] // 2)
+    unpacked = F.fp4_unpack(packed)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(nib))
+    decoded = np.asarray(F.fp4_decode(unpacked))
+    np.testing.assert_array_equal(decoded, np.asarray(F.cast_fp4_value(xj)))
+
+
+def test_fp4_encode_is_4bit():
+    x = jnp.asarray(np.linspace(-10, 10, 101), dtype=jnp.float32)
+    nib = np.asarray(F.fp4_encode(x))
+    assert nib.max() <= 15
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_encode_decode_elements_roundtrip(fmt):
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(8, 32)).astype(np.float32)
+    stored = F.encode_elements(jnp.asarray(x), fmt)
+    back = np.asarray(F.decode_elements(stored, fmt))
+    expected = np.asarray(F.cast_to_format_value(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(back, expected)
+    bits = F.storage_bits_per_element(fmt)
+    assert stored.size * stored.dtype.itemsize * 8 == x.size * bits

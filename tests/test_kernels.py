@@ -1,0 +1,206 @@
+"""Pallas kernel validation: shape/dtype/block-size sweeps vs ref.py oracles.
+
+All kernels run in interpret mode on CPU (the TPU target is exercised by the
+lowering dry-run). assert_allclose tolerances reflect f32 accumulation-order
+differences only — the MX math itself is exact in both paths.
+"""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quantize
+from repro.kernels import mx_matmul, mx_matmul_trainable, quantize_pallas
+from repro.kernels import ref as R
+
+FMTS = ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"]
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# mx_matmul vector-vector (MX x MX)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 32, 8),  # single-tile minimum
+        (16, 64, 128),
+        (128, 256, 64),
+        (256, 1024, 128),  # multi-tile in every grid dim
+        (64, 512, 96),  # non-128 N
+    ],
+)
+def test_mx_matmul_vv_shapes(fmt, m, k, n):
+    x, w = _rand((m, k), 2.0), _rand((k, n), 0.5)
+    xq, wq = quantize(x, fmt, 32), quantize(w, fmt, 32, axis=0)
+    got = np.asarray(mx_matmul(xq, wq))
+    want = np.asarray(
+        R.mx_matmul_ref(xq.elements, xq.scales, wq.elements, wq.scales,
+                        fmt=fmt, block_size=32)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_size", [8, 16, 32, 64, 128])
+def test_mx_matmul_software_defined_block_sizes(block_size):
+    """Paper design goal: block size is software-defined, not fixed to 32."""
+    x, w = _rand((32, 256)), _rand((256, 32))
+    xq = quantize(x, "fp8_e4m3", block_size)
+    wq = quantize(w, "fp8_e4m3", block_size, axis=0)
+    got = np.asarray(mx_matmul(xq, wq))
+    want = np.asarray(
+        R.mx_matmul_ref(xq.elements, xq.scales, wq.elements, wq.scales,
+                        fmt="fp8_e4m3", block_size=block_size)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_mx_matmul_bf16_accumulation(fmt):
+    """Paper Table I: BF16 accumulator variants (vmxdotp.ww/qq)."""
+    x, w = _rand((32, 128)), _rand((128, 32))
+    xq, wq = quantize(x, fmt, 32), quantize(w, fmt, 32, axis=0)
+    got = mx_matmul(xq, wq, acc_dtype=jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    want = R.mx_matmul_ref(
+        xq.elements, xq.scales, wq.elements, wq.scales, fmt=fmt, block_size=32
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=0.05, atol=0.5
+    )
+
+
+def test_mx_matmul_batched_lead_dims():
+    x = _rand((2, 4, 8, 64))
+    w = _rand((64, 32))
+    xq = quantize(x, "fp8_e4m3", 32)
+    wq = quantize(w, "fp8_e4m3", 32, axis=0)
+    got = mx_matmul(xq, wq)
+    assert got.shape == (2, 4, 8, 32)
+    flat = mx_matmul(
+        quantize(x.reshape(-1, 64), "fp8_e4m3", 32), wq
+    ).reshape(2, 4, 8, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(flat), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mx_matmul weight-only (vector-scalar variant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("m,k,n", [(8, 64, 8), (64, 512, 96), (128, 256, 128)])
+def test_mx_matmul_wo_shapes(fmt, m, k, n):
+    x, w = _rand((m, k)), _rand((k, n))
+    wq = quantize(w, fmt, 32, axis=0)
+    got = np.asarray(mx_matmul(x, wq))
+    want = np.asarray(
+        R.mx_matmul_wo_ref(x, wq.elements, wq.scales, fmt=fmt, block_size=32)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_mx_matmul_trainable_grads():
+    x, w = _rand((16, 64)), _rand((64, 16))
+    wq = quantize(w, "fp8_e4m3", 32, axis=0)
+
+    def loss(x):
+        return jnp.sum(mx_matmul_trainable(x, wq, "fp8_e4m3", 32, jnp.float32) ** 2)
+
+    g = jax.grad(loss)(x)
+    y = mx_matmul(x, wq)
+    expect = 2.0 * np.asarray(y) @ np.asarray(wq.dequantize()).T
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantize_pallas vs oracle (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("shape", [(8, 32), (64, 256), (4, 8, 128), (256, 2048)])
+def test_quantize_pallas_bit_exact(fmt, shape):
+    x = _rand(shape, 3.0)
+    got = quantize_pallas(x, fmt, 32)
+    want_e, want_s = R.mx_quantize_ref(x.reshape(-1, shape[-1]), fmt=fmt, block_size=32)
+    np.testing.assert_array_equal(
+        np.asarray(got.scales).reshape(want_s.shape), np.asarray(want_s)
+    )
+    ge = np.asarray(got.elements).reshape(np.asarray(want_e).shape)
+    if fmt == "fp4_e2m1":
+        np.testing.assert_array_equal(ge, np.asarray(want_e))
+    else:
+        np.testing.assert_array_equal(
+            ge.astype(np.float32), np.asarray(want_e).astype(np.float32)
+        )
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_quantize_pallas_roundtrip_through_matmul(fmt):
+    """End-to-end: pallas quantize -> pallas matmul == core quantize -> ref."""
+    x, w = _rand((32, 128)), _rand((128, 32))
+    xq = quantize_pallas(x, fmt, 32)
+    wq = quantize(w, fmt, 32, axis=0)
+    got = np.asarray(mx_matmul(xq, wq))
+    xq2 = quantize(x, fmt, 32)
+    want = np.asarray(
+        R.mx_matmul_ref(xq2.elements, xq2.scales, wq.elements, wq.scales,
+                        fmt=fmt, block_size=32)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+
+@given(
+    fmt=st.sampled_from(FMTS),
+    block_size=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    scale_exp=st.integers(-8, 8),
+)
+@settings(max_examples=15, deadline=None)
+def test_kernel_scale_homogeneity(fmt, block_size, seed, scale_exp):
+    """MX-DP is exactly homogeneous under power-of-two input scaling
+    (paper Eq. (1): scales multiply out front)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    s = float(2.0**scale_exp)
+    y1 = np.asarray(
+        mx_matmul(quantize(x * s, fmt, block_size), quantize(w, fmt, block_size, axis=0))
+    )
+    y0 = np.asarray(
+        mx_matmul(quantize(x, fmt, block_size), quantize(w, fmt, block_size, axis=0))
+    )
+    np.testing.assert_allclose(y1, y0 * s, rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_kernel_linearity_in_blocks(seed):
+    """Zeroing one MX block must subtract exactly that block's contribution."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    wq = quantize(jnp.asarray(w), "fp8_e4m3", 32, axis=0)
+    full = np.asarray(mx_matmul(quantize(jnp.asarray(x), "fp8_e4m3", 32), wq))
+    x0 = x.copy()
+    x0[:, 32:] = 0.0
+    head = np.asarray(mx_matmul(quantize(jnp.asarray(x0), "fp8_e4m3", 32), wq))
+    x1 = x.copy()
+    x1[:, :32] = 0.0
+    tail = np.asarray(mx_matmul(quantize(jnp.asarray(x1), "fp8_e4m3", 32), wq))
+    np.testing.assert_allclose(full, head + tail, rtol=1e-5, atol=1e-5)

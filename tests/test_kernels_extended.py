@@ -1,0 +1,122 @@
+"""Extended kernel coverage: MX-KV-cache decode attention + dgrad kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize
+from repro.kernels import ref as R
+from repro.kernels.mx_attention import mx_attention_decode
+from repro.kernels.mx_matmul import mx_matmul_dgrad
+
+RNG = np.random.default_rng(77)
+
+
+def _rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# mx_attention_decode (serving: wide q x MX cache, vector-scalar family)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2"])
+@pytest.mark.parametrize("b,kvh,g,d,t", [(1, 2, 1, 32, 64), (2, 4, 3, 64, 128),
+                                         (1, 8, 2, 128, 256)])
+def test_mx_attention_decode_vs_oracle(fmt, b, kvh, g, d, t):
+    q = _rand((b, kvh, g, d))
+    kq = quantize(_rand((b, kvh, t, d)), fmt, 32)
+    vq = quantize(_rand((b, kvh, t, d)), fmt, 32)
+    valid = t - 7
+    kpos = jnp.where(jnp.arange(t) < valid, jnp.arange(t), -1).astype(jnp.int32)
+    pos = valid - 1
+    got = mx_attention_decode(q, kq.elements, kq.scales, vq.elements,
+                              vq.scales, kpos, pos, block_size=32)
+    want = R.mx_attention_decode_ref(q, kq.elements, kq.scales, vq.elements,
+                                     vq.scales, kpos, pos, fmt=fmt,
+                                     block_size=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mx_attention_decode_masks_empty_and_future_slots():
+    """Changing masked-out cache slots must not change the output."""
+    b, kvh, g, d, t = 1, 2, 2, 32, 64
+    q = _rand((b, kvh, g, d))
+    k = np.asarray(_rand((b, kvh, t, d)))
+    v = np.asarray(_rand((b, kvh, t, d)))
+    kpos = jnp.where(jnp.arange(t) < 20, jnp.arange(t), -1).astype(jnp.int32)
+    pos = 19
+
+    def run(karr, varr):
+        kq = quantize(jnp.asarray(karr), "fp8_e4m3", 32)
+        vq = quantize(jnp.asarray(varr), "fp8_e4m3", 32)
+        return np.asarray(mx_attention_decode(
+            q, kq.elements, kq.scales, vq.elements, vq.scales, kpos, pos))
+
+    base = run(k, v)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 20:] = 99.0  # garbage in empty slots
+    v2[:, :, 20:] = -99.0
+    np.testing.assert_allclose(run(k2, v2), base, rtol=1e-6, atol=1e-6)
+
+
+def test_mx_attention_softcap():
+    b, kvh, g, d, t = 1, 1, 1, 32, 32
+    q = _rand((b, kvh, g, d), 5.0)
+    kq = quantize(_rand((b, kvh, t, d), 5.0), "fp8_e4m3", 32)
+    vq = quantize(_rand((b, kvh, t, d)), "fp8_e4m3", 32)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    got = mx_attention_decode(q, kq.elements, kq.scales, vq.elements,
+                              vq.scales, kpos, t - 1, softcap=50.0)
+    want = R.mx_attention_decode_ref(q, kq.elements, kq.scales, vq.elements,
+                                     vq.scales, kpos, t - 1, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mx_matmul_dgrad (training backward through MX weights)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"])
+@pytest.mark.parametrize("m,k,n", [(8, 64, 32), (64, 512, 96),
+                                   (128, 256, 128)])
+def test_mx_dgrad_vs_dequant_reference(fmt, m, k, n):
+    w = _rand((k, n))
+    dy = _rand((m, n))
+    wq = quantize(w, fmt, 32, axis=0)
+    got = np.asarray(mx_matmul_dgrad(dy, wq.elements, wq.scales,
+                                     fmt_name=fmt, interpret=True))
+    want = np.asarray(dy) @ np.asarray(wq.dequantize()).T
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_size", [8, 32, 64])
+def test_mx_dgrad_block_sizes(block_size):
+    w = _rand((256, 64))
+    dy = _rand((32, 64))
+    wq = quantize(w, "fp8_e4m3", block_size, axis=0)
+    got = np.asarray(mx_matmul_dgrad(dy, wq.elements, wq.scales,
+                                     fmt_name="fp8_e4m3",
+                                     block_size=block_size, interpret=True))
+    want = np.asarray(dy) @ np.asarray(wq.dequantize()).T
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_trainable_path_uses_native_dgrad_end_to_end():
+    from repro.kernels import mx_matmul, mx_matmul_trainable
+
+    x = _rand((16, 64))
+    wq = quantize(_rand((64, 16)), "fp8_e4m3", 32, axis=0)
+
+    def loss(x):
+        return jnp.sum(
+            mx_matmul_trainable(x, wq, "fp8_e4m3", 32, jnp.float32) ** 2)
+
+    g = jax.grad(loss)(x)
+    y = mx_matmul(x, wq)
+    expect = 2.0 * np.asarray(y) @ np.asarray(wq.dequantize()).T
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,207 @@
+"""Model-zoo behaviour tests: train step, decode==forward, MX integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXFP4, MXFP8, WIDE, QuantConfig
+from repro.nn import BlockDef, ModelConfig, model
+
+
+def tiny(mixer="attn", ffn="dense", **kw):
+    base = dict(
+        name="tiny", family="dense", d_model=64, vocab_size=256,
+        pattern=(BlockDef(mixer=mixer, ffn=ffn),), num_groups=2,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        num_experts=4, top_k=2, d_ff_expert=64,
+        rnn_width=64, d_inner=128, headdim=16, d_state=32, ssd_chunk=8,
+        kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        quant=QuantConfig(enabled=False),
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+KEY = jax.random.PRNGKey(0)
+MIXERS = ["attn", "mla", "rglru", "ssd"]
+
+
+@pytest.mark.parametrize("mixer", MIXERS)
+def test_forward_and_grads_finite(mixer):
+    cfg = tiny(mixer, ffn="none" if mixer == "ssd" else "dense")
+    params, axes = model.init(KEY, cfg)
+    assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(
+        axes, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    logits, aux = model.forward(params, cfg, tokens)
+    assert logits.shape == (2, 16, 256)
+    assert bool(jnp.isfinite(logits).all())
+    (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, cfg, {"tokens": tokens, "labels": tokens})
+    assert bool(jnp.isfinite(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(g).all())
+
+
+@pytest.mark.parametrize(
+    "mixer,kw",
+    [
+        ("attn", {}),
+        ("attn", dict(pattern=(BlockDef("attn", window=8),))),  # ring buffer
+        ("rglru", {}),
+        ("ssd", {}),
+    ],
+)
+def test_decode_matches_forward_exactly(mixer, kw):
+    """Teacher-forced prefill+decode must reproduce full-forward logits."""
+    cfg = tiny(mixer, **kw)
+    params, _ = model.init(KEY, cfg)
+    S = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, 256)
+    full_logits, _ = model.forward(params, cfg, tokens)
+    half = S // 2
+    pf, cache = model.prefill(params, cfg, tokens[:, :half], max_seq=S)
+    np.testing.assert_allclose(
+        np.asarray(pf[:, 0]), np.asarray(full_logits[:, half - 1]),
+        rtol=1e-5, atol=1e-5)
+    for t in range(half, S - 1):
+        step, cache = model.decode_step(
+            params, cfg, cache, tokens=tokens[:, t:t + 1],
+            pos=jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(step[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_forward_mla_tolerance():
+    """MLA decode uses the absorbed form + bf16 latent cache: small tol."""
+    cfg = tiny("mla")
+    params, _ = model.init(KEY, cfg)
+    S = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, 256)
+    full_logits, _ = model.forward(params, cfg, tokens)
+    _, cache = model.prefill(params, cfg, tokens[:, :8], max_seq=S)
+    step, cache = model.decode_step(params, cfg, cache,
+                                    tokens=tokens[:, 8:9],
+                                    pos=jnp.asarray(8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full_logits[:, 8]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_windowed_decode_beyond_window():
+    """Ring-buffer cache keeps matching forward after position > window."""
+    cfg = tiny("attn", pattern=(BlockDef("attn", window=4),))
+    params, _ = model.init(KEY, cfg)
+    S = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, 256)
+    full_logits, _ = model.forward(params, cfg, tokens)
+    _, cache = model.prefill(params, cfg, tokens[:, :6], max_seq=S)
+    for t in range(6, S - 1):
+        step, cache = model.decode_step(params, cfg, cache,
+                                        tokens=tokens[:, t:t + 1],
+                                        pos=jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(step[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quant", [MXFP8, MXFP4], ids=["mxfp8", "mxfp4"])
+def test_mx_quantized_training(quant):
+    """MX-quantized (QAT) train step: finite loss + grads, loss near wide."""
+    quant = quant.replace(block_size=16)
+    cfg = tiny("attn", quant=quant)
+    params, _ = model.init(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    batch = {"tokens": tokens, "labels": tokens}
+    (loss_q, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    cfg_w = tiny("attn", quant=WIDE)
+    (loss_w, _) = model.loss_fn(params, cfg_w, batch)[0], None
+    assert bool(jnp.isfinite(loss_q))
+    assert abs(float(loss_q) - float(loss_w[0] if isinstance(loss_w, tuple) else loss_w)) < 1.0
+    for g in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(g).all())
+
+
+def test_mx_quantized_kv_cache_decode():
+    """MX-quantized KV cache: decode stays close to wide-cache decode."""
+    q = MXFP8.replace(block_size=16, quantize_kv_cache=True, quantize_acts=False)
+    cfg = tiny("attn", quant=q)
+    cfg_wide = tiny("attn", quant=q.replace(quantize_kv_cache=False))
+    params, _ = model.init(KEY, cfg)
+    S = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, 256)
+    _, cache_q = model.prefill(params, cfg, tokens[:, :8], max_seq=S)
+    _, cache_w = model.prefill(params, cfg_wide, tokens[:, :8], max_seq=S)
+    assert cache_q["groups"][0]["k_elems"].dtype == jnp.float8_e4m3fn
+    sq, _ = model.decode_step(params, cfg, cache_q, tokens=tokens[:, 8:9],
+                              pos=jnp.asarray(8, jnp.int32))
+    sw, _ = model.decode_step(params, cfg_wide, cache_w, tokens=tokens[:, 8:9],
+                              pos=jnp.asarray(8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sw), rtol=0.2, atol=0.5)
+
+
+def test_moe_routing_properties():
+    cfg = tiny("attn", ffn="moe")
+    params, _ = model.init(KEY, cfg)
+    from repro.nn import moe as moe_mod
+    from repro.nn.blocks import _moe_cfg
+
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 64), jnp.bfloat16)
+    mcfg = _moe_cfg(cfg)
+    gp = jax.tree_util.tree_map(lambda p: p[0], params["groups"])
+    out, aux = moe_mod.apply(gp["block0"]["ffn"], x, mcfg, cfg.quant)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # E*<f,p> >= 1 by Cauchy-Schwarz
+    w, one_hot, _ = moe_mod._router(gp["block0"]["ffn"], x, mcfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(one_hot.sum(-1).max()) == 1  # top-k entries are distinct
+
+
+def test_musicgen_codebooks():
+    cfg = tiny("attn", num_codebooks=4, vocab_size=64)
+    params, _ = model.init(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8, 4), 0, 64)
+    logits, _ = model.forward(params, cfg, tokens)
+    assert logits.shape == (2, 8, 4, 64)
+    loss, _ = model.loss_fn(params, cfg, {"tokens": tokens, "labels": tokens})
+    assert bool(jnp.isfinite(loss))
+
+
+def test_embeds_input_stub():
+    """VLM/audio frontend stub: forward from precomputed embeddings."""
+    cfg = tiny("attn")
+    params, _ = model.init(KEY, cfg)
+    embeds = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 64))
+    logits, _ = model.forward(params, cfg, embeds=embeds)
+    assert logits.shape == (2, 8, 256)
+
+
+def test_prologue_epilogue_layers():
+    cfg = tiny("attn", prologue=(BlockDef("attn", ffn="dense"),),
+               epilogue=(BlockDef("rglru", ffn="dense"),))
+    params, _ = model.init(KEY, cfg)
+    assert "prologue0" in params and "epilogue0" in params
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 256)
+    logits, _ = model.forward(params, cfg, tokens)
+    assert bool(jnp.isfinite(logits).all())
+    # serving path covers prologue/epilogue caches too
+    _, cache = model.prefill(params, cfg, tokens[:, :4], max_seq=8)
+    step, _ = model.decode_step(params, cfg, cache, tokens=tokens[:, 4:5],
+                                pos=jnp.asarray(4, jnp.int32))
+    full, _ = model.forward(params, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(step[:, 0]), np.asarray(full[:, 4]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_query_chunked_attention_equivalence():
+    cfg_full = tiny("attn", query_chunk=1024)
+    cfg_chunk = tiny("attn", query_chunk=4)
+    params, _ = model.init(KEY, cfg_full)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    lf, _ = model.forward(params, cfg_full, tokens)
+    lc, _ = model.forward(params, cfg_chunk, tokens)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc), rtol=2e-4,
+                               atol=2e-4)

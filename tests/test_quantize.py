@@ -1,0 +1,190 @@
+"""Property tests for MX block quantization and the mx_dot execution modes."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import formats as F
+from repro.core import mx_dot, qat_matmul, quantize, quantize_value
+
+FMTS = ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"]
+
+
+def _error_bound(fmt, amax):
+    """Worst-case per-element error of MX quantization for block amax.
+
+    Two regimes: RNE half-ulp at the top binade, and spec-mandated
+    saturation when amax/scale lands in (fmt.max, 2^(emax+1)).
+    """
+    info = F.get_format(fmt)
+    scale = 2.0 ** (np.floor(np.log2(np.maximum(amax, 1e-38))) - info.emax)
+    half_ulp = scale * 2.0 ** (info.emax - info.mantissa_bits) / 2
+    sat = scale * max(2.0 ** (info.emax + 1) - info.max, 0.0)
+    return np.maximum(half_ulp, sat) * 1.0001 + 1e-12
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("block_size", [8, 16, 32, 64])
+def test_quantize_error_bound(fmt, block_size):
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 256)).astype(np.float32) * 10
+    t = quantize(jnp.asarray(x), fmt, block_size)
+    deq = np.asarray(t.dequantize())
+    blocked = x.reshape(4, -1, block_size)
+    amax = np.abs(blocked).max(-1, keepdims=True)
+    err = np.abs(deq.reshape(blocked.shape) - blocked)
+    bound = _error_bound(fmt, amax)
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_quantize_axis_handling(fmt):
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(32, 6, 10)).astype(np.float32)
+    t0 = quantize(jnp.asarray(x), fmt, 8, axis=0)
+    assert t0.shape == x.shape and t0.axis == 0
+    d0 = np.asarray(t0.dequantize())
+    assert d0.shape == x.shape
+    # blocking along axis 0 == blocking the transposed array along -1
+    t2 = quantize(jnp.asarray(np.moveaxis(x, 0, -1)), fmt, 8, axis=-1)
+    d2 = np.moveaxis(np.asarray(t2.dequantize()), -1, 0)
+    np.testing.assert_array_equal(d0, d2)
+
+
+def test_block_size_must_divide():
+    with pytest.raises(ValueError):
+        quantize(jnp.zeros((4, 30)), "fp8_e4m3", 32)
+
+
+@given(
+    st.sampled_from(FMTS),
+    st.sampled_from([8, 16, 32]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_idempotent(fmt, block_size, seed):
+    """Quantizing an already-quantized array is exact (grid fixpoint)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    q1 = quantize_value(x, fmt, block_size)
+    q2 = quantize_value(q1, fmt, block_size)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_scaling_invariance_power_of_two(seed):
+    """MX quantization commutes with power-of-two scaling of the input."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
+    a = np.asarray(quantize_value(x, "fp8_e4m3", 32)) * 4.0
+    b = np.asarray(quantize_value(x * 4.0, "fp8_e4m3", 32))
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_zero_block():
+    t = quantize(jnp.zeros((2, 64)), "fp8_e4m3", 32)
+    np.testing.assert_array_equal(np.asarray(t.dequantize()), 0.0)
+    np.testing.assert_array_equal(np.asarray(t.scales), 0)
+
+
+def test_nbytes_compression():
+    x = jnp.ones((128, 128))
+    t8 = quantize(x, "fp8_e4m3", 32)
+    t4 = quantize(x, "fp4_e2m1", 32)
+    assert t8.nbytes == 128 * 128 + 128 * 4
+    assert t4.nbytes == 128 * 128 // 2 + 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# mx_dot execution-mode equivalence (paper: all tiers compute the same MX-DP)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("block_size", [8, 32])
+def test_mode_equivalence(fmt, block_size):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    xq = quantize(x, fmt, block_size)
+    wq = quantize(w, fmt, block_size, axis=0)
+    y_em = np.asarray(mx_dot(xq, wq, mode="emulated"))
+    y_fu = np.asarray(mx_dot(xq, wq, mode="fused"))
+    # bf16-operand fused path is exact in value (fp8/fp4 values and
+    # power-of-two scales are representable); accumulation order may differ.
+    np.testing.assert_allclose(y_fu, y_em, rtol=2e-5, atol=2e-5)
+
+
+def test_weight_only_variant():
+    """Vector-scalar analogue: wide activations x MX weights.
+
+    Fused mode carries the wide operand in bf16 (TPU operand dtype), so the
+    reference casts x through bf16 too.
+    """
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    wq = quantize(w, "fp8_e4m3", 32, axis=0)
+    y = np.asarray(mx_dot(x, wq, mode="fused"))
+    xb = np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32))
+    ref = xb @ np.asarray(wq.dequantize())
+    np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-5)
+    # emulated mode keeps the wide operand in f32
+    y_em = np.asarray(mx_dot(x, wq, mode="emulated"))
+    ref_em = np.asarray(x) @ np.asarray(wq.dequantize())
+    np.testing.assert_allclose(y_em, ref_em, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_accumulation_mode():
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 8)).astype(np.float32))
+    xq, wq = quantize(x, "fp8_e4m3", 32), quantize(w, "fp8_e4m3", 32, axis=0)
+    y16 = mx_dot(xq, wq, mode="fused", acc_dtype=jnp.bfloat16)
+    y32 = mx_dot(xq, wq, mode="fused", acc_dtype=jnp.float32)
+    assert y16.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(y16, np.float32), np.asarray(y32), rtol=0.05, atol=0.5
+    )
+
+
+def test_qat_matmul_grads_match_ste():
+    """QAT backward == straight-through: dx = dy @ wq^T, dw = xq^T @ dy."""
+    rng = np.random.default_rng(19)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+
+    y, vjp = jax.vjp(lambda x, w: qat_matmul(x, w, "fp8_e4m3", 32), x, w)
+    dx, dw = vjp(dy)
+    xq = quantize_value(x, "fp8_e4m3", 32)
+    wq = quantize_value(w, "fp8_e4m3", 32, axis=0)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dy @ wq.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xq.T @ dy), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xq @ wq), rtol=1e-4, atol=1e-4)
+
+
+def test_quantization_sqnr_ordering():
+    """FP8 must beat FP4 everywhere; small blocks must help FP4 on
+    heavy-tailed data (paper ref [19] uses small blocks for FP4 training).
+
+    Note (validated experimentally): for near-Gaussian data FP8's 17-binade
+    element range makes block size nearly irrelevant, so the small-block
+    advantage is asserted only for the range-starved FP4 format on data with
+    outliers — this matches the regime ref [19] targets.
+    """
+    rng = np.random.default_rng(23)
+    base = rng.normal(size=(64, 256)).astype(np.float32)
+    outliers = np.where(rng.random(base.shape) < 0.02, 64.0, 1.0)
+    x = jnp.asarray(base * outliers)
+
+    def sqnr(fmt, k):
+        q = np.asarray(quantize_value(x, fmt, k))
+        xn = np.asarray(x)
+        return 10 * np.log10((xn**2).mean() / ((q - xn) ** 2).mean())
+
+    assert sqnr("fp8_e4m3", 32) > sqnr("fp4_e2m1", 32) + 5
+    assert sqnr("fp4_e2m1", 8) > sqnr("fp4_e2m1", 128)
