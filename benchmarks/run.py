@@ -8,7 +8,7 @@ from __future__ import annotations
 import traceback
 
 from . import (block_size_sweep, common, e2e_step, emulation_breakdown,
-               format_comparison, speedup, throughput_sweep)
+               format_comparison, serve_throughput, speedup, throughput_sweep)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -17,6 +17,7 @@ SUITES = [
     ("table1_block_size_sweep", block_size_sweep.run),
     ("table3_format_comparison", format_comparison.run),
     ("e2e_step", e2e_step.run),
+    ("serve_throughput", serve_throughput.run),
 ]
 
 

@@ -1,11 +1,15 @@
-"""Serve a small model with MX-compressed weights and batched requests.
+"""Serve a small model with continuous batching over a paged MX KV cache.
+
+Ragged prompt lengths + MX fp8 cache: requests enter and leave decode
+mid-stream, cache pages are allocated as tokens arrive and recycled at EOS.
 
   PYTHONPATH=src python examples/serve_mx.py
 """
 from repro.launch import serve as serve_launcher
 
 serve_launcher.main([
-    "--arch", "recurrentgemma-2b", "--reduced", "--batch", "4",
-    "--prompt-len", "12", "--new-tokens", "24",
-    "--quant", "mxfp8", "--quantize-kv",
+    "--arch", "recurrentgemma-2b", "--reduced", "--batch", "6",
+    "--max-slots", "3", "--prompt-len", "12", "--new-tokens", "24",
+    "--quant", "mxfp8", "--quantize-kv", "--ragged",
+    "--engine", "continuous", "--page-size", "8",
 ])

@@ -133,9 +133,35 @@ def e8m0_to_scale(e_biased: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def snap_to_fp8_grid(x: jnp.ndarray, fmt) -> jnp.ndarray:
+    """Exact RNE snap of finite values onto the FP8 grid (value space).
+
+    XLA's float8 casts double-round through bf16 on some backends (f32 ->
+    bf16 -> fp8 flips ties: 91.986 -> 92.0 -> 96 where direct RNE gives
+    88), which breaks agreement with the ml_dtypes oracle / OCP spec. This
+    computes the quantum 2^(e - mantissa_bits) from the exponent field
+    (bitcast, so it is exact and Pallas-safe) and rounds x/q with the
+    hardware's round-to-nearest-even. Caller clips to the finite range
+    first. Output dtype == input dtype (grid values are exact in bf16).
+    """
+    import jax
+
+    fmt = get_format(fmt)
+    xf = x.astype(jnp.float32)
+    ax = jnp.abs(xf)
+    bits = jax.lax.bitcast_convert_type(ax, jnp.uint32)
+    e = (bits >> 23).astype(jnp.int32) - 127  # floor(log2 ax) for normals
+    min_norm_exp = 2 - 2 ** (fmt.exp_bits - 1)  # e4m3: -6, e5m2: -14
+    e = jnp.maximum(e, min_norm_exp)
+    q_bits = ((e - fmt.mantissa_bits + 127) << 23).astype(jnp.uint32)
+    q = jax.lax.bitcast_convert_type(q_bits, jnp.float32)
+    y = jnp.round(xf / q) * q  # x/q exact (power-of-two), round is RNE
+    return jnp.where(ax == 0, xf, y).astype(x.dtype)
+
+
 def _cast_fp8_value(x: jnp.ndarray, fmt: ElementFormat) -> jnp.ndarray:
     x = jnp.clip(x, -fmt.max, fmt.max)  # saturating cast
-    return x.astype(fmt.storage_dtype).astype(jnp.float32)
+    return snap_to_fp8_grid(x, fmt)
 
 
 def cast_fp4_value(x: jnp.ndarray) -> jnp.ndarray:
@@ -224,7 +250,8 @@ def encode_elements(x: jnp.ndarray, fmt) -> jnp.ndarray:
     if fmt.name == "fp4_e2m1":
         return fp4_pack(fp4_encode(x))
     work = x if x.dtype in (jnp.float32, jnp.bfloat16) else x.astype(jnp.float32)
-    return jnp.clip(work, -fmt.max, fmt.max).astype(fmt.storage_dtype)
+    snapped = snap_to_fp8_grid(jnp.clip(work, -fmt.max, fmt.max), fmt)
+    return snapped.astype(fmt.storage_dtype)  # exact: value is on the grid
 
 
 def decode_elements(stored: jnp.ndarray, fmt, dtype=jnp.float32) -> jnp.ndarray:

@@ -6,9 +6,11 @@
   ref.py         pure-jnp oracles defining exact semantics
 """
 from . import ref
-from .mx_attention import mx_attention_decode
+from .mx_attention import (gather_kv_pages, mx_attention_decode,
+                           mx_attention_decode_paged)
 from .mx_matmul import mx_matmul_dgrad
 from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
-__all__ = ["mx_attention_decode", "mx_matmul", "mx_matmul_dgrad",
+__all__ = ["gather_kv_pages", "mx_attention_decode",
+           "mx_attention_decode_paged", "mx_matmul", "mx_matmul_dgrad",
            "mx_matmul_trainable", "quantize_pallas", "ref"]

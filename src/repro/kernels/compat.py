@@ -1,0 +1,13 @@
+"""JAX version compatibility for the Pallas TPU surface.
+
+The ``compiler_params`` dataclass was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` across JAX releases; resolve whichever this JAX has so
+the kernels import (and run in interpret mode) on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

@@ -1,4 +1,4 @@
-"""Pallas decode-attention kernel over an MX-quantized KV cache.
+"""Pallas decode-attention kernels over an MX-quantized KV cache.
 
 The serving-side application of VMXDOTP's insight: decode attention is
 HBM-bandwidth-bound on the KV cache, so the cache is stored block-scaled
@@ -6,18 +6,35 @@ HBM-bandwidth-bound on the KV cache, so the cache is stored block-scaled
 the wide K/V never exist in HBM. This is the vector-scalar instruction
 family (`vmxdotp.*f`): one wide query operand against compact MX operands.
 
+Two cache layouts are supported:
+
+  * **contiguous** (`mx_attention_decode`): one (T, D) tile per (batch,
+    kv-head), the fixed-slot serving layout. ``kpos``/``pos`` may be shared
+    across the batch or per-sequence (continuous batching decodes requests
+    at different positions in the same step).
+  * **paged** (`mx_attention_decode_paged`): the cache lives in a global
+    page pool (num_pages, page_size, KVH, D) and each sequence owns a list
+    of pages (its page-table row). `gather_kv_pages` is a Pallas kernel
+    whose BlockSpec index maps read the scalar-prefetched page table — the
+    DMA engine walks the page list directly, and the gathered operands stay
+    **compact** (fp8/fp4 + E8M0), so the bandwidth win survives paging.
+    Decode then reuses the contiguous kernel bit-for-bit, which is what
+    makes paged-vs-contiguous equivalence exact rather than approximate.
+
 Per grid cell (batch b, kv-head h): load the query group (G, D) wide, the
 K/V cache tiles (T, D) compact, fold scales in VREGs, run the (G, T) logits
-matmul + masked f32 softmax + (G, D) output matmul. T tiles fit VMEM
-(32k x 128 fp8 = 4 MiB); longer caches tile over T with running
-(max, sum, acc) online-softmax state.
+matmul + masked f32 softmax + (G, D) output matmul.
 
 Layouts:
   q        (B, KVH, G, D)    bf16/f32 (G = query heads per kv head)
   k_elems  (B, KVH, T, D)    fp8   k_scales (B, KVH, T, D//k) u8
   v_elems  (B, KVH, T, D)    fp8   v_scales (B, KVH, T, D//k) u8
-  kpos     (T,)              i32 (absolute positions; -1 = empty slot)
+  kpos     (T,) or (B, T)    i32 (absolute positions; -1 = empty slot)
+  pos      scalar or (B,)    i32 (last valid position per sequence)
   out      (B, KVH, G, D)    f32
+Paged pools: (NP, PS, KVH, D[/2]) elems, (NP, PS, KVH, D//k) scales,
+page_table (B, P) i32 (entries < 0 = unallocated; rows are masked out via
+seq_lens so garbage pages never contribute).
 """
 from __future__ import annotations
 
@@ -28,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
 from .mx_matmul import _decode_e8m0, _decode_tile
 
 NEG_INF = -2.0e38
@@ -56,7 +74,7 @@ def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
     ) * (d ** -0.5)  # (G, T)
     if softcap:
         logits = jnp.tanh(logits / softcap) * softcap
-    kpos = kpos_ref[...]
+    kpos = kpos_ref[0]
     pos = pos_ref[0]
     mask = (kpos <= pos) & (kpos >= 0)
     logits = jnp.where(mask[None, :], logits, NEG_INF)
@@ -71,12 +89,22 @@ def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
 def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
                         *, block_size: int = 32, softcap=None,
                         interpret: bool | None = None):
-    """Decode attention against an MX-quantized cache. Returns (B,KVH,G,D)."""
+    """Decode attention against an MX-quantized cache. Returns (B,KVH,G,D).
+
+    ``kpos`` may be (T,) shared or (B, T) per-sequence; ``pos`` a scalar or
+    (B,) per-sequence — the ragged-batch form continuous batching needs.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, kvh, g, d = q.shape
     t = k_elems.shape[2]
     nb = k_scales.shape[-1]
+    kpos = jnp.asarray(kpos, jnp.int32)
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (b, t))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos[None], (b,))
     kernel = functools.partial(_mx_attn_kernel, block_size=block_size,
                                softcap=softcap)
     ed = k_elems.shape[-1]
@@ -89,13 +117,97 @@ def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
             pl.BlockSpec((1, 1, t, nb), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, t, ed), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, t, nb), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((t,), lambda i, j: (0,)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(q, k_elems, k_scales, v_elems, v_scales, kpos,
-      jnp.asarray(pos, jnp.int32)[None])
+    )(q, k_elems, k_scales, v_elems, v_scales, kpos, pos)
+
+
+# ---------------------------------------------------------------------------
+# paged cache: page-table gather kernel + decode wrapper
+# ---------------------------------------------------------------------------
+
+
+def _gather_pages_kernel(pt_ref, ke_ref, ks_ref, ve_ref, vs_ref,
+                         oke_ref, oks_ref, ove_ref, ovs_ref):
+    """Copy one pool page tile into its contiguous slot (pure DMA shuffle).
+
+    The interesting part is outside the body: the *input* BlockSpec index
+    maps read the scalar-prefetched page table, so block (b, h, p) is DMA'd
+    straight from pool page ``page_table[b, p]`` — the kernel never touches
+    a wide value and never materializes an indirection on the compute units.
+    """
+    oke_ref[0, 0] = ke_ref[0, :, 0, :]
+    oks_ref[0, 0] = ks_ref[0, :, 0, :]
+    ove_ref[0, 0] = ve_ref[0, :, 0, :]
+    ovs_ref[0, 0] = vs_ref[0, :, 0, :]
+
+
+def gather_kv_pages(ke_pool, ks_pool, ve_pool, vs_pool, page_table,
+                    *, interpret: bool | None = None):
+    """Gather per-sequence K/V pages into contiguous compact caches.
+
+    Pools: (NP, PS, KVH, ED) elems + (NP, PS, KVH, NB) scales.
+    page_table: (B, P) int32, entries < 0 = unallocated (clamped to page 0;
+    callers mask those rows via seq_lens).
+    Returns (k_elems, k_scales, v_elems, v_scales) shaped (B, KVH, P*PS, ·).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    npages, ps, kvh, ed = ke_pool.shape
+    nb = ks_pool.shape[-1]
+    b, pmax = page_table.shape
+    t = pmax * ps
+    table = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, npages - 1)
+
+    def pool_spec(width):
+        return pl.BlockSpec((1, ps, 1, width),
+                            lambda i, j, p, pt: (pt[i, p], 0, j, 0))
+
+    def out_spec(width):
+        return pl.BlockSpec((1, 1, ps, width),
+                            lambda i, j, p, pt: (i, j, p, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, pmax),
+        in_specs=[pool_spec(ed), pool_spec(nb), pool_spec(ed), pool_spec(nb)],
+        out_specs=[out_spec(ed), out_spec(nb), out_spec(ed), out_spec(nb)],
+    )
+    return pl.pallas_call(
+        _gather_pages_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, t, ed), ke_pool.dtype),
+            jax.ShapeDtypeStruct((b, kvh, t, nb), ks_pool.dtype),
+            jax.ShapeDtypeStruct((b, kvh, t, ed), ve_pool.dtype),
+            jax.ShapeDtypeStruct((b, kvh, t, nb), vs_pool.dtype),
+        ],
+        interpret=interpret,
+    )(table, ke_pool, ks_pool, ve_pool, vs_pool)
+
+
+def mx_attention_decode_paged(q, ke_pool, ks_pool, ve_pool, vs_pool,
+                              page_table, seq_lens, *, block_size: int = 32,
+                              softcap=None, interpret: bool | None = None):
+    """Decode attention through a page table over an MX page pool.
+
+    q: (B, KVH, G, D); pools per :func:`gather_kv_pages`; seq_lens (B,) =
+    number of valid cache rows per sequence (query sits at seq_len - 1).
+    Returns (B, KVH, G, D) f32, bit-identical to `mx_attention_decode` on
+    the equivalent contiguous cache (same gather order, same kernel).
+    """
+    ke, ks, ve, vs = gather_kv_pages(ke_pool, ks_pool, ve_pool, vs_pool,
+                                     page_table, interpret=interpret)
+    t = ke.shape[2]
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                            (q.shape[0], t))
+    return mx_attention_decode(q, ke, ks, ve, vs, kpos, seq_lens - 1,
+                               block_size=block_size, softcap=softcap,
+                               interpret=interpret)

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 from repro.core import formats as F
 
 # ---------------------------------------------------------------------------
@@ -172,7 +174,7 @@ def mx_matmul_vv(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_elems, a_scales, b_elems, b_scales)
 
@@ -212,7 +214,7 @@ def mx_matmul_wo(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b_elems, b_scales)
 
@@ -277,7 +279,7 @@ def mx_matmul_dgrad(
         ],
         out_specs=pl.BlockSpec((bm, bk), lambda i, j, nn: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dy, b_elems, b_scales)

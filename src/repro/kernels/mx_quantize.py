@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 from repro.core import formats as F
 
 
@@ -66,7 +68,9 @@ def _mx_quantize_kernel(x_ref, q_ref, e_ref, *, fmt: F.ElementFormat, block_size
     if fmt.name == "fp4_e2m1":
         q_ref[...] = _pack_fp4(_encode_fp4_codes(ratio))
     else:
-        q_ref[...] = ratio.astype(fmt.storage_dtype)
+        # exact RNE snap before the storage cast: XLA's direct fp8 cast
+        # double-rounds via bf16 on some backends (see formats.py)
+        q_ref[...] = F.snap_to_fp8_grid(ratio, fmt).astype(fmt.storage_dtype)
     e_ref[...] = e
 
 
@@ -102,6 +106,6 @@ def mx_quantize(
             jax.ShapeDtypeStruct((m, ek), fmt.storage_dtype),
             jax.ShapeDtypeStruct((m, k // block_size), jnp.uint8),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x)

@@ -12,6 +12,16 @@ import math
 import jax
 
 
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across versions: older JAX has no ``axis_types``."""
+    try:
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -22,19 +32,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, found {len(devices)} — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import (dryrun.py does this)")
-    return jax.make_mesh(
-        shape, axes,
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     dp = n // model_parallel
-    return jax.make_mesh(
-        (dp, model_parallel), ("data", "model"),
-        devices=jax.devices()[: dp * model_parallel],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((dp, model_parallel), ("data", "model"),
+                      jax.devices()[: dp * model_parallel])

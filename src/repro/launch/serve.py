@@ -1,7 +1,12 @@
-"""Serving launcher: MX-compressed weights, batched generation.
+"""Serving launcher: MX weights + paged MX KV cache, continuous batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
-      --batch 4 --prompt-len 16 --new-tokens 32 --quant mxfp8
+      --batch 4 --prompt-len 16 --new-tokens 32 --quant mxfp8 --quantize-kv
+
+``--engine continuous`` (default) runs the paged continuous-batching
+engine with ragged arrivals; ``--engine fixed`` runs the fixed-slot
+reference loop. ``--ragged`` staggers prompt lengths so paging has
+something to win on.
 """
 from __future__ import annotations
 
@@ -14,9 +19,15 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.nn import model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import FixedSlotEngine, ServeConfig, ServeEngine
 
 log = logging.getLogger("repro.serve")
+
+
+def build_engine(cfg, serve_cfg, params, kind: str):
+    if kind == "fixed":
+        return FixedSlotEngine(params, cfg, serve_cfg)
+    return ServeEngine(params, cfg, serve_cfg)
 
 
 def main(argv=None):
@@ -30,6 +41,14 @@ def main(argv=None):
     ap.add_argument("--quant", default="",
                     choices=["", "wide", "mxfp8", "mxfp4"])
     ap.add_argument("--quantize-kv", action="store_true")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "fixed"])
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="decode slots for continuous batching "
+                         "(default: --batch)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across requests")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -44,11 +63,31 @@ def main(argv=None):
             quantize_kv_cache=args.quantize_kv))
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
     max_seq = args.prompt_len + args.new_tokens
-    engine = ServeEngine(params, cfg, ServeConfig(
-        max_seq=max_seq, temperature=args.temperature))
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    serve_cfg = ServeConfig(
+        max_seq=max_seq, temperature=args.temperature,
+        max_slots=args.max_slots or args.batch, page_size=args.page_size)
+    engine = build_engine(cfg, serve_cfg, params, args.engine)
+    rng = np.random.default_rng(0)
+
     t0 = time.perf_counter()
+    if args.engine == "continuous":
+        lens = (rng.integers(max(1, args.prompt_len // 2),
+                             args.prompt_len + 1, size=args.batch)
+                if args.ragged else [args.prompt_len] * args.batch)
+        ids = [engine.submit(
+            rng.integers(0, cfg.vocab_size, size=(int(s),)).astype(np.int32),
+            args.new_tokens) for s in lens]
+        results = engine.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(results[i]) for i in ids) - int(np.sum(lens))
+        stats = engine.cache_stats()
+        log.info("served %d requests in %.2fs (%.1f tok/s); peak pages %d "
+                 "(%.1f KiB paged cache), %d preemptions",
+                 len(ids), dt, toks / dt, stats["peak_pages"],
+                 stats["peak_paged_bytes"] / 1024, stats["preemptions"])
+        return results
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, args.new_tokens)
     dt = time.perf_counter() - t0
     toks = args.batch * args.new_tokens

@@ -44,6 +44,9 @@ class AttnConfig:
     softcap: Optional[float] = None
     query_chunk: int = 1024
     cache_dtype: object = jnp.bfloat16
+    # paged serving: don't clamp the cache to the window (no ring wraparound;
+    # decode slot == absolute position, so caches map 1:1 onto page pools)
+    no_ring: bool = False
 
 
 def init(key, cfg: AttnConfig):
@@ -143,7 +146,38 @@ def apply_train(params, x, positions, cfg: AttnConfig, quant: QuantConfig,
 
 
 def cache_len(cfg: AttnConfig, max_seq: int) -> int:
+    if cfg.no_ring:
+        return max_seq
     return min(cfg.window, max_seq) if cfg.window else max_seq
+
+
+def _cache_arrays(lead, cfg: AttnConfig, quant: QuantConfig):
+    """Zero cache leaves with leading dims ``lead`` + (KVH, ·) storage.
+
+    Single source of truth for the MX-vs-wide storage layout: the
+    contiguous per-slot caches and the paged pools must agree exactly,
+    since prefill caches reshape 1:1 into pool pages.
+    """
+    kvh, d = cfg.num_kv_heads, cfg.head_dim
+    if quant.quantize_kv_cache and quant.enabled:
+        bs = min(quant.block_size, d)
+        fmt = F.get_format(quant.fmt)
+        ed = d // 2 if fmt.packed else d
+        zeros_e = jnp.zeros((*lead, kvh, ed), fmt.storage_dtype)
+        zeros_s = jnp.zeros((*lead, kvh, d // bs), jnp.uint8)
+        return {
+            "k_elems": zeros_e, "k_scales": zeros_s,
+            "v_elems": zeros_e, "v_scales": zeros_s,
+        }
+    z = jnp.zeros((*lead, kvh, d), cfg.cache_dtype)
+    return {"k": z, "v": z}
+
+
+def _quantize_kv_token(k_new, v_new, cfg: AttnConfig, quant: QuantConfig):
+    """The MX cache-write quantization, shared by every write path."""
+    bs = min(quant.block_size, cfg.head_dim)
+    return (quantize(k_new.astype(jnp.float32), quant.fmt, bs),
+            quantize(v_new.astype(jnp.float32), quant.fmt, bs))
 
 
 def init_cache(batch: int, max_seq: int, cfg: AttnConfig,
@@ -151,22 +185,7 @@ def init_cache(batch: int, max_seq: int, cfg: AttnConfig,
     """Allocate an empty ring-buffer cache. ``kpos`` tracks absolute key
     positions (-1 = empty slot) so windowed wraparound masking is exact."""
     t = cache_len(cfg, max_seq)
-    kvh, d = cfg.num_kv_heads, cfg.head_dim
-    if quant.quantize_kv_cache and quant.enabled:
-        bs = min(quant.block_size, d)
-        fmt = F.get_format(quant.fmt)
-        ed = d // 2 if fmt.packed else d
-        zeros_e = jnp.zeros((batch, t, kvh, ed), fmt.storage_dtype)
-        zeros_s = jnp.zeros((batch, t, kvh, d // bs), jnp.uint8)
-        cache = {
-            "k_elems": zeros_e, "k_scales": zeros_s,
-            "v_elems": zeros_e, "v_scales": zeros_s,
-        }
-    else:
-        cache = {
-            "k": jnp.zeros((batch, t, kvh, d), cfg.cache_dtype),
-            "v": jnp.zeros((batch, t, kvh, d), cfg.cache_dtype),
-        }
+    cache = _cache_arrays((batch, t), cfg, quant)
     cache["kpos"] = jnp.full((t,), -1, jnp.int32)
     return cache
 
@@ -182,9 +201,7 @@ def _write_cache(cache, k_new, v_new, slot, pos, quant: QuantConfig, cfg):
             cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
         )
     else:
-        bs = min(quant.block_size, cfg.head_dim)
-        kq = quantize(k_new.astype(jnp.float32), quant.fmt, bs)
-        vq = quantize(v_new.astype(jnp.float32), quant.fmt, bs)
+        kq, vq = _quantize_kv_token(k_new, v_new, cfg, quant)
         cache = dict(cache)
         cache["k_elems"] = jax.lax.dynamic_update_slice(
             cache["k_elems"], kq.elements, (0, slot, 0, 0))
@@ -216,17 +233,29 @@ def _read_cache(cache, quant: QuantConfig, cfg, dtype):
             deq(cache["v_elems"], cache["v_scales"]))
 
 
-def apply_decode(params, x, cache, pos, cfg: AttnConfig, quant: QuantConfig,
-                 compute_dtype=jnp.bfloat16):
-    """Single-token decode: x (B, 1, d_model), pos scalar int32."""
+def _project_decode_qkv(params, x, posv, cfg: AttnConfig,
+                        quant: QuantConfig, compute_dtype):
+    """Decode prologue shared by the fixed-slot and paged paths: QKV
+    projection + RoPE at per-row positions posv (B, 1). Keeping this (and
+    ``_quantize_kv_token`` / ``_read_cache``) single-sourced is what makes
+    continuous-batching outputs token-identical to the fixed-slot path."""
     b = x.shape[0]
     h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = linear.apply(params["wq"], x, quant, compute_dtype).reshape(b, 1, h, d)
     k = linear.apply(params["wk"], x, quant, compute_dtype).reshape(b, 1, kvh, d)
     v = linear.apply(params["wv"], x, quant, compute_dtype).reshape(b, 1, kvh, d)
-    posv = jnp.full((b, 1), pos, jnp.int32)
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_decode(params, x, cache, pos, cfg: AttnConfig, quant: QuantConfig,
+                 compute_dtype=jnp.bfloat16):
+    """Single-token decode: x (B, 1, d_model), pos scalar int32."""
+    b = x.shape[0]
+    h, d = cfg.num_heads, cfg.head_dim
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_decode_qkv(params, x, posv, cfg, quant, compute_dtype)
     t = cache["kpos"].shape[0]
     slot = jnp.asarray(pos % t, jnp.int32)
     cache = _write_cache(cache, k, v, slot, jnp.asarray(pos, jnp.int32), quant, cfg)
@@ -235,6 +264,79 @@ def apply_decode(params, x, cache, pos, cfg: AttnConfig, quant: QuantConfig,
     y = linear.apply(params["wo"], out.reshape(b, 1, h * d), quant,
                      compute_dtype, tp_on="in")
     return y, cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (continuous batching: global page pool + per-slot tables)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_pool(num_pages: int, page_size: int, cfg: AttnConfig,
+                    quant: QuantConfig):
+    """Allocate a layer's global KV page pool (no per-sequence dimension).
+
+    Layout matches the paged Pallas kernels: (NP, PS, KVH, ·), with the
+    same storage leaves as the contiguous cache (``_cache_arrays``).
+    Ownership (which page belongs to which sequence at which position)
+    lives in the host-side page table, not in the arrays.
+    """
+    return _cache_arrays((num_pages, page_size), cfg, quant)
+
+
+def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
+                       quant: QuantConfig, compute_dtype=jnp.bfloat16):
+    """Per-slot decode through a page table: x (B, 1, d_model), pos (B,).
+
+    ``page_rows`` (B, P) holds each slot's page ids (-1 = unallocated).
+    Each slot writes its new token's K/V at page ``pos // PS`` slot
+    ``pos % PS`` (inactive slots route to an out-of-bounds page and are
+    dropped), then attends over its gathered pages. Write-then-read order,
+    quantization, and dequantization are shared with the fixed-slot path,
+    which is what keeps continuous-batching outputs token-identical.
+    """
+    b = x.shape[0]
+    h, d = cfg.num_heads, cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = pos[:, None]  # (B, 1)
+    q, k, v = _project_decode_qkv(params, x, posv, cfg, quant, compute_dtype)
+
+    lead = pool["k" if "k" in pool else "k_elems"]
+    npages, ps = lead.shape[0], lead.shape[1]
+    pmax = page_rows.shape[1]
+    page = jnp.take_along_axis(page_rows, (pos // ps)[:, None], axis=1)[:, 0]
+    page = jnp.where(page < 0, npages, page)  # OOB: dropped by mode="drop"
+    slot = pos % ps
+
+    pool = dict(pool)
+    if "k" in pool:
+        pool["k"] = pool["k"].at[page, slot].set(
+            k[:, 0].astype(pool["k"].dtype), mode="drop")
+        pool["v"] = pool["v"].at[page, slot].set(
+            v[:, 0].astype(pool["v"].dtype), mode="drop")
+    else:
+        kq, vq = _quantize_kv_token(k, v, cfg, quant)
+        pool["k_elems"] = pool["k_elems"].at[page, slot].set(
+            kq.elements[:, 0], mode="drop")
+        pool["k_scales"] = pool["k_scales"].at[page, slot].set(
+            kq.scales[:, 0], mode="drop")
+        pool["v_elems"] = pool["v_elems"].at[page, slot].set(
+            vq.elements[:, 0], mode="drop")
+        pool["v_scales"] = pool["v_scales"].at[page, slot].set(
+            vq.scales[:, 0], mode="drop")
+
+    idx = jnp.clip(page_rows, 0, npages - 1)  # (B, P); garbage rows masked
+
+    def gather(leaf):
+        return leaf[idx].reshape(b, pmax * ps, *leaf.shape[2:])
+
+    view = {key: gather(leaf) for key, leaf in pool.items()}
+    kc, vc = _read_cache(view, quant, cfg, compute_dtype)
+    t = kc.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    out = _attend(q, kc, vc, posv, kpos, cfg)
+    y = linear.apply(params["wo"], out.reshape(b, 1, h * d), quant,
+                     compute_dtype, tp_on="in")
+    return y, pool
 
 
 def prefill_cache(params, x, positions, cfg: AttnConfig, quant: QuantConfig,
@@ -258,9 +360,7 @@ def prefill_cache(params, x, positions, cfg: AttnConfig, quant: QuantConfig,
         cache["k"] = place(cache["k"].at[:, :take].set(k_tail.astype(cache["k"].dtype)))
         cache["v"] = place(cache["v"].at[:, :take].set(v_tail.astype(cache["v"].dtype)))
     else:
-        bs = min(quant.block_size, cfg.head_dim)
-        kq = quantize(k_tail.astype(jnp.float32), quant.fmt, bs)
-        vq = quantize(v_tail.astype(jnp.float32), quant.fmt, bs)
+        kq, vq = _quantize_kv_token(k_tail, v_tail, cfg, quant)
         cache["k_elems"] = place(cache["k_elems"].at[:, :take].set(kq.elements))
         cache["k_scales"] = place(cache["k_scales"].at[:, :take].set(kq.scales))
         cache["v_elems"] = place(cache["v_elems"].at[:, :take].set(vq.elements))

@@ -25,6 +25,7 @@ def _attn_cfg(cfg: ModelConfig, bd: BlockDef) -> attention.AttnConfig:
         window=bd.window,
         softcap=cfg.attn_softcap,
         query_chunk=cfg.query_chunk,
+        no_ring=cfg.serve_full_cache,
     )
 
 
@@ -164,6 +165,24 @@ def init_cache(batch: int, max_seq: int, bd: BlockDef, cfg: ModelConfig):
     return ssd.init_state(batch, _ssd_cfg(cfg))
 
 
+def _decode_tail(params, x, h, bd: BlockDef, cfg: ModelConfig):
+    """Shared decode epilogue: residual add + channel mixer (+ post-norms)."""
+    quant, dt = cfg.quant, cfg.compute_dtype
+    if cfg.post_norms:
+        h = rmsnorm_apply(params["postnorm_mixer"], h, cfg.norm_eps)
+    x = x + h
+    if bd.ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            h, _ = moe.apply(params["ffn"], h, _moe_cfg(cfg), quant, dt)
+        else:
+            h = ffn.apply(params["ffn"], h, quant, cfg.ffn_kind, dt)
+        if cfg.post_norms:
+            h = rmsnorm_apply(params["postnorm_ffn"], h, cfg.norm_eps)
+        x = x + h
+    return x
+
+
 def apply_decode(params, x, cache, pos, bd: BlockDef, cfg: ModelConfig):
     quant, dt = cfg.quant, cfg.compute_dtype
     h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
@@ -179,19 +198,44 @@ def apply_decode(params, x, cache, pos, bd: BlockDef, cfg: ModelConfig):
     else:
         h, cache = ssd.apply_decode(params["mixer"], h, cache,
                                     _ssd_cfg(cfg), quant, dt)
-    if cfg.post_norms:
-        h = rmsnorm_apply(params["postnorm_mixer"], h, cfg.norm_eps)
-    x = x + h
-    if bd.ffn != "none":
-        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
-        if bd.ffn == "moe":
-            h, _ = moe.apply(params["ffn"], h, _moe_cfg(cfg), quant, dt)
-        else:
-            h = ffn.apply(params["ffn"], h, quant, cfg.ffn_kind, dt)
-        if cfg.post_norms:
-            h = rmsnorm_apply(params["postnorm_ffn"], h, cfg.norm_eps)
-        x = x + h
-    return x, cache
+    return _decode_tail(params, x, h, bd, cfg), cache
+
+
+def init_paged_cache(num_slots: int, num_pages: int, page_size: int,
+                     bd: BlockDef, cfg: ModelConfig):
+    """Paged serving cache for one block: attention layers get a global
+    page pool; recurrent mixers keep per-slot state rows (their state is
+    O(1) per sequence — paging buys nothing)."""
+    if bd.mixer == "attn":
+        return attention.init_paged_pool(num_pages, page_size,
+                                         _attn_cfg(cfg, bd), cfg.quant)
+    if bd.mixer == "rglru":
+        return rglru.init_state(num_slots, _rglru_cfg(cfg))
+    if bd.mixer == "ssd":
+        return ssd.init_state(num_slots, _ssd_cfg(cfg))
+    raise NotImplementedError(
+        f"paged serving does not support mixer {bd.mixer!r} yet (MLA "
+        "latent caches need their own pool layout — see ROADMAP)")
+
+
+def apply_decode_paged(params, x, cache, page_rows, pos, bd: BlockDef,
+                       cfg: ModelConfig):
+    """Per-slot decode: x (B, 1, d_model), page_rows (B, P), pos (B,)."""
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
+    if bd.mixer == "attn":
+        h, cache = attention.apply_decode_paged(
+            params["mixer"], h, cache, page_rows, pos, _attn_cfg(cfg, bd),
+            quant, dt)
+    elif bd.mixer == "rglru":
+        h, cache = rglru.apply_decode(params["mixer"], h, cache,
+                                      _rglru_cfg(cfg), quant, dt)
+    elif bd.mixer == "ssd":
+        h, cache = ssd.apply_decode(params["mixer"], h, cache,
+                                    _ssd_cfg(cfg), quant, dt)
+    else:
+        raise NotImplementedError(f"paged decode for mixer {bd.mixer!r}")
+    return _decode_tail(params, x, h, bd, cfg), cache
 
 
 def prefill_block(params, x, positions, bd: BlockDef, cfg: ModelConfig,

@@ -81,6 +81,9 @@ class ModelConfig:
     quant: QuantConfig = QuantConfig()
     compute_dtype: object = jnp.bfloat16
     remat: str = "full"  # "full" | "none"
+    # paged serving: allocate full-length (non-ring) KV caches so prefill
+    # caches transfer 1:1 into page pools (window masking still applies)
+    serve_full_cache: bool = False
     # bookkeeping for the assignment sheet
     source: str = ""
     sub_quadratic: bool = False  # eligible for long_500k

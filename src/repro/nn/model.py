@@ -160,6 +160,70 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int):
+    """Paged serving cache: per-layer page pools (attention) + per-slot
+    state rows (recurrent mixers). The page table that assigns pool pages
+    to sequences is host-side scheduler state (``serve/kv_cache.py``) and
+    is shared by every layer — same allocation for all of them."""
+    cache = {}
+    for j, bd in enumerate(cfg.prologue):
+        cache[f"prologue{j}"] = blocks.init_paged_cache(
+            num_slots, num_pages, page_size, bd, cfg)
+    group = tuple(
+        blocks.init_paged_cache(num_slots, num_pages, page_size, bd, cfg)
+        for bd in cfg.pattern
+    )
+    cache["groups"] = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_groups, *x.shape)).copy(), group
+    )
+    for j, bd in enumerate(cfg.epilogue):
+        cache[f"epilogue{j}"] = blocks.init_paged_cache(
+            num_slots, num_pages, page_size, bd, cfg)
+    return cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
+                      pos):
+    """Continuous-batching decode: tokens (B, 1), page_rows (B, P) int32
+    page ids per slot (-1 = unallocated), pos (B,) per-slot positions.
+
+    Returns (logits (B, 1, V), new_cache). Inactive slots (page_rows all
+    -1) compute garbage that never lands: their KV writes are dropped and
+    the host ignores their logits.
+    """
+    x = _embed_inputs(params, cfg, tokens)
+    b = x.shape[0]
+    cache = dict(cache)
+    for j, bd in enumerate(cfg.prologue):
+        x, cache[f"prologue{j}"] = blocks.apply_decode_paged(
+            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
+            pos, bd, cfg)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        new = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = blocks.apply_decode_paged(gparams[f"block{i}"], x,
+                                             gcache[i], page_rows, pos,
+                                             bd, cfg)
+            new.append(c)
+        return x, tuple(new)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        x, cache[f"epilogue{j}"] = blocks.apply_decode_paged(
+            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
+            pos, bd, cfg)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(b, 1, cfg.num_codebooks, cfg.vocab_size)
+    return logits, cache
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             max_seq: Optional[int] = None):
     """Process the prompt, build caches. Returns (last-token logits, cache)."""

@@ -1,10 +1,10 @@
 """Distribution layer: logical-axis sharding rules + collective helpers."""
 from .sharding import (FSDP_AXES, PARAM_RULES, TP_AXIS, batch_shardings,
-                       cache_shardings, constraint, replicated, spec_for,
-                       tree_shardings)
+                       cache_shardings, constraint, make_abstract_mesh,
+                       replicated, spec_for, tree_shardings)
 
 __all__ = [
     "FSDP_AXES", "PARAM_RULES", "TP_AXIS", "batch_shardings",
-    "cache_shardings", "constraint",
+    "cache_shardings", "constraint", "make_abstract_mesh",
     "replicated", "spec_for", "tree_shardings",
 ]

@@ -1,4 +1,9 @@
-"""Serving: MX-compressed weights, batched prefill/decode engine."""
-from .engine import ServeConfig, ServeEngine, make_serve_step
+"""Serving: MX weights + paged MX KV cache, continuous batching."""
+from .engine import (ContinuousBatchingEngine, FixedSlotEngine, ServeConfig,
+                     ServeEngine, make_serve_step)
+from .kv_cache import PagePool, pages_for
+from .scheduler import Request, Scheduler
 
-__all__ = ["ServeConfig", "ServeEngine", "make_serve_step"]
+__all__ = ["ContinuousBatchingEngine", "FixedSlotEngine", "PagePool",
+           "Request", "Scheduler", "ServeConfig", "ServeEngine",
+           "make_serve_step", "pages_for"]

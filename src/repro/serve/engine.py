@@ -1,17 +1,31 @@
-"""Serving engine: MX-compressed weights, batched prefill + decode loop.
+"""Serving engines: MX-compressed weights + (paged) MX KV cache.
 
-The inference-side payoff of the paper's technique: weights (and optionally
-the KV cache) live in MX format — decode is bandwidth-bound, so compact
-weights translate directly into step-time via the roofline memory term.
+Two engines share one numerics contract:
 
-``ServeEngine`` keeps a fixed batch of slots (continuous-batching-lite):
-``generate`` runs prefill once and a jitted decode loop; sampling is greedy
-or temperature-based with a per-call PRNG key.
+  * ``FixedSlotEngine`` — the original continuous-batching-lite loop: a
+    fixed batch of slots, one shared position counter, ring-buffer caches
+    sized batch x max_seq. Kept as the golden reference: its greedy
+    outputs define correctness for the paged path.
+  * ``ContinuousBatchingEngine`` (exported as ``ServeEngine``) — requests
+    enter and leave mid-stream. Admission prefills one request into pages
+    drawn from a global MX page pool (``kv_cache``), the jitted decode
+    step runs at fixed shapes (max_slots rows, padding rows masked by
+    dropped writes), and EOS/max_new recycles the slot and pages the same
+    step (``scheduler``). Per-request greedy outputs are token-identical
+    to the fixed-slot engine because every op on the path — projection,
+    RoPE, cache quantize/dequantize, masked softmax — is batch-row
+    independent and shared between the two paths.
+
+Why this is the paper's serving payoff at production shape: the decode
+step's HBM traffic is dominated by the KV cache; MX storage cuts it ~2x
+(fp8+E8M0 vs bf16) and paging cuts the *allocated* footprint to what is
+actually resident, so ragged, churning traffic stops paying for max_seq
+rectangles. ``benchmarks/serve_throughput.py`` measures both.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,15 +34,34 @@ import numpy as np
 from repro.nn import model
 from repro.nn.config import ModelConfig
 
+from . import kv_cache
+from .scheduler import Scheduler
+
+_PAGED_MIXERS = {"attn", "rglru", "ssd"}
+
 
 @dataclasses.dataclass
 class ServeConfig:
     max_seq: int = 1024
     temperature: float = 0.0  # 0 => greedy
     eos_id: Optional[int] = None
+    # continuous batching (ignored by FixedSlotEngine)
+    max_slots: int = 8
+    page_size: int = 16
+    num_pages: Optional[int] = None  # default: max_slots * pages_per_slot
 
 
-class ServeEngine:
+def _sample(logits, key, temperature: float):
+    logits = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+class FixedSlotEngine:
+    """Fixed batch of slots, one shared position (the golden reference)."""
+
     def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
         self.params = params
         self.cfg = cfg
@@ -40,13 +73,6 @@ class ServeEngine:
             lambda p, cache, tok, pos: model.decode_step(
                 p, cfg, cache, tokens=tok, pos=pos))
 
-    def _sample(self, logits, key):
-        logits = logits[:, -1].astype(jnp.float32)
-        if self.serve_cfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.serve_cfg.temperature, axis=-1).astype(jnp.int32)
-
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  key=None) -> np.ndarray:
         """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens)."""
@@ -55,7 +81,7 @@ class ServeEngine:
         b, s0 = prompts.shape
         logits, cache = self._prefill(self.params, prompts)
         out = [prompts]
-        tok = self._sample(logits, key)
+        tok = _sample(logits, key, self.serve_cfg.temperature)
         for i in range(max_new_tokens):
             out.append(tok[:, None])
             if i == max_new_tokens - 1:
@@ -63,8 +89,200 @@ class ServeEngine:
             pos = jnp.asarray(s0 + i, jnp.int32)
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache, tok[:, None], pos)
-            tok = self._sample(logits, sub)
+            tok = _sample(logits, sub, self.serve_cfg.temperature)
         return np.asarray(jnp.concatenate(out, axis=1))
+
+
+class ContinuousBatchingEngine:
+    """Continuous batching over a paged MX KV cache."""
+
+    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
+        unsupported = {bd.mixer for bd in
+                       (*cfg.prologue, *cfg.pattern, *cfg.epilogue)
+                       } - _PAGED_MIXERS
+        if unsupported:
+            raise NotImplementedError(
+                f"continuous batching does not support mixers {unsupported} "
+                "— use FixedSlotEngine (launch/serve.py --engine fixed)")
+        if cfg.num_codebooks > 1:
+            raise NotImplementedError(
+                "continuous batching with codebook heads is a follow-on")
+        self.params = params
+        self.cfg = cfg
+        # full-length (non-ring) prefill caches: slot == absolute position,
+        # so a prompt cache reshapes exactly into its pages
+        self.cfg_prefill = cfg.replace(serve_full_cache=True)
+        self.serve_cfg = serve_cfg
+        ps = serve_cfg.page_size
+        pages_per_slot = kv_cache.pages_for(serve_cfg.max_seq, ps)
+        self.num_pages = (serve_cfg.num_pages
+                          or serve_cfg.max_slots * pages_per_slot)
+        self.scheduler = Scheduler(
+            max_slots=serve_cfg.max_slots, num_pages=self.num_pages,
+            page_size=ps, max_seq=serve_cfg.max_seq)
+        self.cache = model.init_paged_cache(
+            cfg, serve_cfg.max_slots, self.num_pages, ps)
+        # donate the cache pytree: without donation every decode step /
+        # install / restore copies the whole multi-layer page pool, which
+        # would cancel the paged-cache footprint win. CPU has no donation
+        # (it only warns), so gate on backend. _extract must NOT donate —
+        # the cache lives on after a snapshot.
+        cpu = jax.default_backend() == "cpu"
+        self._decode = jax.jit(
+            lambda p, c, tok, rows, pos: model.decode_step_paged(
+                p, cfg, c, tok, rows, pos),
+            donate_argnums=() if cpu else (1,))
+        self._install = jax.jit(
+            lambda c, pf, slot, ids: kv_cache.install_prefill(
+                c, pf, slot, ids, ps),
+            donate_argnums=() if cpu else (0, 1))
+        self._extract = jax.jit(kv_cache.extract_seq)
+        self._restore = jax.jit(kv_cache.restore_seq,
+                                donate_argnums=() if cpu else (0, 1))
+        self._prefill_fns = {}  # prompt length -> jitted prefill
+        self._key = jax.random.PRNGKey(0)
+        self.steps = 0
+
+    # -- internals ----------------------------------------------------------
+
+    def _prefill_for(self, length: int):
+        """Jitted single-request prefill, cached per prompt length.
+
+        max_seq rounds up to the page boundary so the cache T dim factors
+        into whole pages. No padding of the tokens themselves: prefill
+        numerics stay exactly those of the fixed-slot batch prefill.
+        """
+        fn = self._prefill_fns.get(length)
+        if fn is None:
+            ps = self.serve_cfg.page_size
+            max_seq = kv_cache.pages_for(length, ps) * ps
+            fn = jax.jit(lambda p, toks: model.prefill(
+                p, self.cfg_prefill, tokens=toks, max_seq=max_seq))
+            self._prefill_fns[length] = fn
+        return fn
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _admit(self):
+        while True:
+            seq = self.scheduler.admit_next()
+            if seq is None:
+                return
+            if seq.req.swap is not None:
+                # swapped-out sequence: restore its exact cache bytes into
+                # the fresh pages/slot; its pending token decodes next step
+                snapshot, _, _ = seq.req.swap
+                seq.req.swap = None
+                self.cache = self._restore(
+                    self.cache, snapshot, jnp.asarray(seq.slot, jnp.int32),
+                    jnp.asarray(seq.pages, jnp.int32))
+                continue
+            prompt = seq.req.prompt
+            logits, pfcache = self._prefill_for(len(prompt))(
+                self.params, jnp.asarray(prompt, jnp.int32)[None])
+            self.cache = self._install(
+                self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
+                jnp.asarray(seq.pages, jnp.int32))
+            tok = int(_sample(logits, self._next_key(),
+                              self.serve_cfg.temperature)[0])
+            self.scheduler.record_token(seq, tok,
+                                        eos_id=self.serve_cfg.eos_id)
+
+    def _ensure_pages(self):
+        """Grow each active sequence's page list for this step's write,
+        swapping out the youngest sequences when the pool runs dry."""
+        sched = self.scheduler
+        for seq in list(sched.active()):
+            if sched.slots[seq.slot] is not seq:
+                continue  # already preempted by an elder this pass
+            while not sched.try_grow(seq):
+                victim = sched.pick_victim(exclude=seq)
+                if victim is None:
+                    raise RuntimeError(
+                        "page pool exhausted for a lone sequence")
+                snapshot = self._extract(
+                    self.cache, jnp.asarray(victim.slot, jnp.int32),
+                    jnp.asarray(victim.pages, jnp.int32))
+                sched.preempt(victim, snapshot)
+
+    def step(self) -> bool:
+        """Admit what fits, run one decode step. Returns True if any work
+        remains afterwards."""
+        sched = self.scheduler
+        self._admit()
+        if not sched.active():
+            if sched.queue:
+                raise RuntimeError("scheduler stalled with queued work")
+            return sched.has_work
+        self._ensure_pages()
+        tokens, pos, page_rows, act = sched.assemble()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(page_rows), jnp.asarray(pos))
+        toks = np.asarray(_sample(logits, self._next_key(),
+                                  self.serve_cfg.temperature))
+        self.steps += 1
+        for seq in act:
+            sched.advance(seq)
+            sched.record_token(seq, int(toks[seq.slot]),
+                               eos_id=self.serve_cfg.eos_id)
+        return sched.has_work
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Queue one request; returns its id. Use with :meth:`run`."""
+        return self.scheduler.submit(prompt, max_new_tokens)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Serve until drained. Returns {request_id: prompt + generated}."""
+        while self.step():
+            pass
+        out = {}
+        for req in self.scheduler.finished:
+            out[req.id] = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int32)])
+        self.scheduler.finished.clear()
+        return out
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 key=None) -> np.ndarray:
+        """Batch API, shape-compatible with ``FixedSlotEngine.generate``.
+
+        Rows that hit EOS early are right-padded with ``eos_id``.
+        """
+        if key is not None:
+            self._key = key
+        prompts = np.asarray(prompts, np.int32)
+        b, s0 = prompts.shape
+        ids = [self.submit(prompts[i], max_new_tokens) for i in range(b)]
+        results = self.run()
+        pad = self.serve_cfg.eos_id if self.serve_cfg.eos_id is not None else 0
+        out = np.full((b, s0 + max_new_tokens), pad, np.int32)
+        for row, rid in enumerate(ids):
+            toks = results[rid]
+            out[row, : len(toks)] = toks
+        return out
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Allocation + peak-usage stats for the benchmark."""
+        page_bytes = kv_cache.pool_page_nbytes(self.cache, self.num_pages)
+        sched = self.scheduler
+        return {
+            "allocated_bytes": kv_cache.cache_nbytes(self.cache),
+            "page_bytes": page_bytes,
+            "state_bytes": kv_cache.state_nbytes(self.cache),
+            "peak_pages": sched.peak_pages,
+            "resident_tokens_at_peak": sched.resident_at_peak,
+            "preemptions": sched.preemptions,
+            "peak_paged_bytes": page_bytes * sched.peak_pages,
+        }
+
+
+# the default engine: continuous batching over the paged MX cache
+ServeEngine = ContinuousBatchingEngine
 
 
 def make_serve_step(cfg: ModelConfig):

@@ -1,0 +1,250 @@
+"""Paged MX KV cache: host-side page pool + device-side cache surgery.
+
+The paper's serving argument is that decode is HBM-bandwidth-bound on the
+KV cache, so the cache should be (a) MX-compressed and (b) allocated at the
+granularity traffic actually arrives in. This module supplies (b): a global
+pool of fixed-size pages (fp8/fp4 element pages + E8M0 scale pages, or
+bf16 pages for the baseline), a free-list allocator, and the jit-able
+transfer that installs a request's prefill cache into its pages.
+
+Split of responsibilities:
+
+  * ``PagePool`` — pure host bookkeeping (free list, peak-usage stats).
+    Which physical page holds which (sequence, position) range is decided
+    here; device arrays never carry ownership metadata.
+  * ``install_prefill`` — device-side: scatter a single-sequence prefill
+    cache (built by ``model.prefill`` with ``serve_full_cache=True``, so
+    slot == absolute position and T is a page multiple) into the pools at
+    the sequence's page ids, and recurrent state rows into its slot row.
+  * byte accounting — the benchmark's cache-bytes/token numbers come from
+    the same walk that does the install, so they can't drift from what is
+    actually allocated.
+
+The model-level cache pytree (``model.init_paged_cache``) interleaves two
+kinds of per-block caches; they are told apart structurally:
+  * page pools: dicts with "k"/"v" (wide) or "k_elems"/… (MX) leaves
+    shaped (NP, PS, KVH, ·), with a leading num_groups axis inside
+    ``cache["groups"]``;
+  * recurrent state: any other dict; leaves have the slot axis first
+    (again +1 leading group axis inside ``groups``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pages_for(num_tokens: int, page_size: int) -> int:
+    """Number of pages needed to hold ``num_tokens`` cache rows."""
+    return -(-num_tokens // page_size)
+
+
+class PagePool:
+    """Free-list allocator over a fixed set of physical page ids.
+
+    Any free page can serve any sequence (no fragmentation by design), so
+    allocation is O(n) pops and ``alloc`` fails only when the pool is
+    genuinely out of pages — the scheduler then preempts.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError("num_pages must be positive")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._free_set = set(self._free)  # O(1) double-free detection
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` page ids, or None (and no change) if unavailable."""
+        if n < 0:
+            raise ValueError("alloc of negative page count")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(ids)
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return ids
+
+    def free(self, ids) -> None:
+        for pid in ids:
+            if not 0 <= pid < self.num_pages:
+                raise ValueError(f"free of unknown page {pid}")
+            if pid in self._free_set:
+                raise ValueError(f"double free of page {pid}")
+            self._free.append(pid)
+            self._free_set.add(pid)
+
+
+# ---------------------------------------------------------------------------
+# structural walk over the model cache pytree
+# ---------------------------------------------------------------------------
+
+_POOL_KEYS = ({"k", "v"}, {"k_elems", "k_scales", "v_elems", "v_scales"})
+
+
+def _is_pool(block_cache) -> bool:
+    return isinstance(block_cache, dict) and set(block_cache) in _POOL_KEYS
+
+
+def _iter_blocks(cache):
+    """Yield (key_path, block_cache, grouped) for every block's cache."""
+    for key, val in cache.items():
+        if key == "groups":
+            for i, blk in enumerate(val):
+                yield (key, i), blk, True
+        else:
+            yield (key,), val, False
+
+
+def _set_block(cache, path, new_blk):
+    cache = dict(cache)
+    if path[0] == "groups":
+        groups = list(cache["groups"])
+        groups[path[1]] = new_blk
+        cache["groups"] = tuple(groups)
+    else:
+        cache[path[0]] = new_blk
+    return cache
+
+
+def _install_pool(pool, contig, page_ids, page_size, grouped):
+    """Scatter a (1, T, ·) contiguous cache into pool pages ``page_ids``."""
+    n = page_ids.shape[0]
+    new = {}
+    for key in pool:
+        src = contig[key]
+        if grouped:
+            g = src.shape[0]
+            pages = src.reshape(g, n, page_size, *src.shape[3:])
+            new[key] = pool[key].at[:, page_ids].set(pages)
+        else:
+            pages = src.reshape(n, page_size, *src.shape[2:])
+            new[key] = pool[key].at[page_ids].set(pages)
+    return new
+
+
+def _install_state(state, contig, slot, grouped):
+    """Write a batch-1 recurrent state into the pool's ``slot`` row."""
+    if grouped:
+        return jax.tree_util.tree_map(
+            lambda pool, src: pool.at[:, slot].set(src[:, 0]), state, contig)
+    return jax.tree_util.tree_map(
+        lambda pool, src: pool.at[slot].set(src[0]), state, contig)
+
+
+def install_prefill(cache, prefill_cache, slot, page_ids, page_size: int):
+    """Install one request's prefill cache into the paged model cache.
+
+    ``prefill_cache`` comes from ``model.prefill`` on a batch of 1 with
+    ``serve_full_cache=True`` and ``max_seq == len(page_ids) * page_size``
+    (so its T dim factors exactly into the allocated pages). ``slot`` is
+    the request's decode-batch row; recurrent state lands there. Returns
+    the updated cache pytree (jit-able; retraces per page count).
+    """
+    for path, blk, grouped in _iter_blocks(cache):
+        src = prefill_cache[path[0]] if len(path) == 1 else \
+            prefill_cache["groups"][path[1]]
+        if _is_pool(blk):
+            src = {key: src[key] for key in blk}  # drop kpos
+            blk = _install_pool(blk, src, page_ids, page_size, grouped)
+        else:
+            blk = _install_state(blk, src, slot, grouped)
+        cache = _set_block(cache, path, blk)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# swap-out / swap-in (exact preemption)
+# ---------------------------------------------------------------------------
+
+
+def extract_seq(cache, slot, page_ids):
+    """Snapshot one sequence's cache: its pool pages + its state row.
+
+    Used on preemption: unlike recompute-style preemption, restoring the
+    exact cache bytes keeps generation bit-identical — a re-*prefill*
+    would attend over unquantized K/V where the original decode attended
+    over the MX cache, and the token stream could diverge.
+
+    Returns a pytree mirroring ``cache`` with pool leaves gathered to
+    (n_pages, PS, ·) (grouped: (G, n_pages, PS, ·)) and state leaves
+    sliced to the slot row.
+    """
+    out = {}
+    for path, blk, grouped in _iter_blocks(cache):
+        if _is_pool(blk):
+            snap = {key: (leaf[:, page_ids] if grouped else leaf[page_ids])
+                    for key, leaf in blk.items()}
+        else:
+            snap = jax.tree_util.tree_map(
+                lambda leaf: leaf[:, slot] if grouped else leaf[slot], blk)
+        if path[0] == "groups":
+            out.setdefault("groups", {})[path[1]] = snap
+        else:
+            out[path[0]] = snap
+    if "groups" in out:
+        out["groups"] = tuple(out["groups"][i]
+                              for i in range(len(out["groups"])))
+    return out
+
+
+def restore_seq(cache, snapshot, slot, page_ids):
+    """Inverse of :func:`extract_seq` onto freshly allocated pages/slot."""
+    for path, blk, grouped in _iter_blocks(cache):
+        snap = snapshot[path[0]] if len(path) == 1 else \
+            snapshot["groups"][path[1]]
+        if _is_pool(blk):
+            blk = {key: (leaf.at[:, page_ids].set(snap[key]) if grouped
+                         else leaf.at[page_ids].set(snap[key]))
+                   for key, leaf in blk.items()}
+        else:
+            blk = jax.tree_util.tree_map(
+                lambda leaf, src: (leaf.at[:, slot].set(src) if grouped
+                                   else leaf.at[slot].set(src)), blk, snap)
+        cache = _set_block(cache, path, blk)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (benchmark: cache bytes per resident token)
+# ---------------------------------------------------------------------------
+
+
+def cache_nbytes(cache) -> int:
+    """Total bytes of every cache leaf (pools + recurrent state)."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(cache))
+
+
+def pool_page_nbytes(cache, num_pages: int) -> int:
+    """Bytes one page costs across all attention layers (incl. groups)."""
+    total = 0
+    for _, blk, _ in _iter_blocks(cache):
+        if _is_pool(blk):
+            total += sum(leaf.nbytes for leaf in blk.values())
+    if total % num_pages:
+        raise ValueError("pool bytes not divisible by page count")
+    return total // num_pages
+
+
+def state_nbytes(cache) -> int:
+    """Bytes of per-slot recurrent state (not paged)."""
+    total = 0
+    for _, blk, _ in _iter_blocks(cache):
+        if not _is_pool(blk):
+            total += sum(leaf.nbytes
+                         for leaf in jax.tree_util.tree_leaves(blk))
+    return total

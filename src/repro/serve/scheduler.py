@@ -1,0 +1,226 @@
+"""Continuous-batching scheduler: FCFS admission, preemption, slot recycling.
+
+Host-side control plane of the serving engine. The device sees only fixed
+shapes — (max_slots, 1) token batches and a (max_slots, pages_per_slot)
+page table — while requests enter and leave mid-stream:
+
+  * **admission** — strict FCFS: the queue head is admitted as soon as a
+    slot is free and its prompt's pages fit the pool (head-of-line order is
+    the fairness contract; skipping ahead is a follow-on).
+  * **decode paging** — each step, a slot crossing a page boundary pulls a
+    fresh page from the pool. If the pool is dry, the *youngest* other
+    active request is preempted: the engine snapshots its exact cache
+    bytes (pages + state row, ``kv_cache.extract_seq``), its pages are
+    freed, and it is requeued at the front; re-admission restores the
+    snapshot verbatim (swap-style preemption). Recompute-style preemption
+    would NOT be token-identical here: a re-prefill attends over
+    unquantized K/V where the original decode attended over the MX cache.
+  * **recycling** — EOS or max_new_tokens frees the slot and all its pages
+    in O(1); the next queued request can be admitted the same step.
+
+The scheduler never touches device memory: it hands the engine (slot,
+request, page_ids) admission tuples and assembles per-step numpy batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+from .kv_cache import PagePool, pages_for
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``generated`` and ``swap`` survive preemption."""
+
+    id: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # preemption snapshot: (cache_snapshot, n_pages, resident_tokens);
+    # restored verbatim on re-admission so generation stays bit-identical
+    swap: Optional[tuple] = None
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+
+@dataclasses.dataclass
+class ActiveSeq:
+    """A request bound to a decode slot."""
+
+    req: Request
+    slot: int
+    pos: int  # next cache write position == tokens currently resident
+    pages: List[int]
+    order: int  # admission sequence number (preemption picks the youngest)
+
+
+class Scheduler:
+    def __init__(self, *, max_slots: int, num_pages: int, page_size: int,
+                 max_seq: int):
+        self.max_slots = max_slots
+        self.page_size = page_size
+        self.max_seq = max_seq
+        self.pages_per_slot = pages_for(max_seq, page_size)
+        if num_pages < self.pages_per_slot:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold one max_seq={max_seq} "
+                f"sequence (needs {self.pages_per_slot})")
+        self.pool = PagePool(num_pages)
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[ActiveSeq]] = [None] * max_slots
+        self.finished: List[Request] = []
+        self._order = 0
+        self._next_id = 0
+        # stats sampled at the peak-pages step (benchmark bytes/token)
+        self.peak_pages = 0
+        self.resident_at_peak = 0
+        self.preemptions = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) "
+                f"exceeds max_seq={self.max_seq}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(self._next_id, prompt, max_new_tokens)
+        self._next_id += 1
+        self.queue.append(req)
+        return req.id
+
+    # -- admission / eviction ----------------------------------------------
+
+    def active(self) -> List[ActiveSeq]:
+        return [s for s in self.slots if s is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def admit_next(self) -> Optional[ActiveSeq]:
+        """FCFS: admit the queue head if a slot and its pages are free.
+
+        A preempted request re-enters with exactly the pages its snapshot
+        holds; a fresh one with its prompt's pages.
+        """
+        if not self.queue:
+            return None
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        if not free_slots:
+            return None
+        req = self.queue[0]
+        if req.swap is not None:
+            _, npages, pos0 = req.swap
+        else:
+            # only fresh requests are prefilled; preempted ones re-enter
+            # exclusively via their cache snapshot above (a re-prefill of
+            # prompt+generated would not be token-identical: prefill
+            # attends over unquantized K/V)
+            assert not req.generated, "mid-stream request without snapshot"
+            pos0 = len(req.prompt)
+            npages = pages_for(pos0, self.page_size)
+        ids = self.pool.alloc(npages)
+        if ids is None:
+            return None
+        self.queue.popleft()
+        seq = ActiveSeq(req=req, slot=free_slots[0], pos=pos0, pages=ids,
+                        order=self._order)
+        self._order += 1
+        self.slots[seq.slot] = seq
+        return seq
+
+    def try_grow(self, seq: ActiveSeq) -> bool:
+        """Allocate the page for ``seq.pos`` if it crosses a boundary."""
+        if seq.pos // self.page_size < len(seq.pages):
+            return True
+        ids = self.pool.alloc(1)
+        if ids is None:
+            return False
+        seq.pages.extend(ids)
+        return True
+
+    def pick_victim(self, exclude: ActiveSeq) -> Optional[ActiveSeq]:
+        """Youngest other active sequence (FCFS: elders keep their slots)."""
+        victims = [s for s in self.active() if s is not exclude]
+        return max(victims, key=lambda s: s.order) if victims else None
+
+    def preempt(self, victim: ActiveSeq, snapshot) -> None:
+        """Swap out ``victim``: free its pages/slot, requeue at the front.
+
+        The engine passes the device-side snapshot of its pages + state
+        row (``kv_cache.extract_seq``); re-admission restores it verbatim,
+        so preemption never perturbs the token stream.
+        """
+        self.pool.free(victim.pages)
+        self.slots[victim.slot] = None
+        victim.req.swap = (snapshot, len(victim.pages), victim.pos)
+        self.queue.appendleft(victim.req)
+        self.preemptions += 1
+
+    def advance(self, seq: ActiveSeq) -> None:
+        """The decode step wrote ``seq``'s pending token at ``seq.pos``."""
+        seq.pos += 1
+
+    def record_token(self, seq: ActiveSeq, token: int, eos_id=None) -> bool:
+        """Append a sampled token; finish + recycle on EOS/max_new.
+
+        ``seq.pos`` is untouched: the token's KV lands in the cache only
+        when the next decode step feeds it (see :meth:`advance`). Returns
+        True if the sequence is still active.
+        """
+        seq.req.generated.append(int(token))
+        if seq.req.done or (eos_id is not None and int(token) == eos_id):
+            self.pool.free(seq.pages)
+            self.slots[seq.slot] = None
+            self.finished.append(seq.req)
+            return False
+        return True
+
+    # -- per-step batch assembly -------------------------------------------
+
+    def assemble(self):
+        """Fixed-shape numpy batch for the jitted decode step.
+
+        Returns (tokens (NS, 1), pos (NS,), page_rows (NS, P), active) —
+        inactive rows are token 0 / pos 0 / pages -1 (their device writes
+        are dropped and their logits ignored).
+        """
+        ns, pps = self.max_slots, self.pages_per_slot
+        tokens = np.zeros((ns, 1), np.int32)
+        pos = np.zeros((ns,), np.int32)
+        page_rows = np.full((ns, pps), -1, np.int32)
+        act = self.active()
+        for seq in act:
+            # every activation path records a pending token before the
+            # first assemble (admission samples from prefill logits;
+            # swapped requests carry theirs in ``generated``)
+            assert seq.req.generated, "active sequence with no pending token"
+            tokens[seq.slot, 0] = seq.req.generated[-1]
+            pos[seq.slot] = seq.pos
+            page_rows[seq.slot, : len(seq.pages)] = seq.pages
+        resident = int(sum(s.pos + 1 for s in act))
+        # both stats sampled at the same step: a strict new peak resets the
+        # resident count; ties keep the smaller resident (conservative —
+        # reports the larger bytes/token)
+        if self.pool.pages_in_use > self.peak_pages:
+            self.peak_pages = self.pool.pages_in_use
+            self.resident_at_peak = resident
+        elif self.pool.pages_in_use == self.peak_pages:
+            self.resident_at_peak = (resident if self.resident_at_peak == 0
+                                     else min(self.resident_at_peak, resident))
+        return tokens, pos, page_rows, act

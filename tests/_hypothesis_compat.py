@@ -1,0 +1,121 @@
+"""Hypothesis compatibility shim: property tests run everywhere.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given``/``settings``/strategies and the tests are true property tests.
+When it is absent (the seed image does not bake it in), a minimal
+deterministic fallback replaces them: each ``@given`` test becomes a
+pytest-parametrized sweep over fixed-seed random examples drawn from
+lightweight strategy stand-ins. The sweep is deterministic per test name,
+so failures reproduce, and it is capped so the fast suite stays fast.
+
+Only the strategy surface these tests use is implemented: ``st.floats``,
+``st.integers``, ``st.sampled_from``, ``.map``, and
+``hypothesis.extra.numpy.arrays``. Extend as tests grow.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis, when available
+    from hypothesis import given, settings  # noqa: F401
+    import hypothesis.strategies as st  # noqa: F401
+    from hypothesis.extra import numpy as hnp  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import types
+    import zlib
+
+    import numpy as np
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _MAX_EXAMPLES_CAP = 10  # fallback sweep budget per test (fast suite)
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+        def map(self, fn):
+            return _Mapped(self, fn)
+
+    class _Mapped(_Strategy):
+        def __init__(self, inner, fn):
+            self.inner, self.fn = inner, fn
+
+        def example(self, rng):
+            return self.fn(self.inner.example(rng))
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value, **_):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def example(self, rng):
+            # hypothesis spreads floats across magnitudes; mimic with a
+            # log-uniform draw when the positive range spans many decades
+            if self.lo > 0 and self.hi / self.lo > 1e6:
+                return float(np.exp(rng.uniform(np.log(self.lo),
+                                                np.log(self.hi))))
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=2**31 - 1):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class _Arrays(_Strategy):
+        def __init__(self, dtype, shape, elements=None):
+            self.dtype, self.shape, self.elements = dtype, shape, elements
+
+        def example(self, rng):
+            shape = self.shape.example(rng) if isinstance(
+                self.shape, _Strategy) else tuple(self.shape)
+            if isinstance(self.elements, _Floats):
+                vals = rng.uniform(self.elements.lo, self.elements.hi,
+                                   size=shape)
+            elif isinstance(self.elements, _Integers):
+                vals = rng.integers(self.elements.lo, self.elements.hi + 1,
+                                    size=shape)
+            else:
+                vals = rng.standard_normal(shape)
+            return np.asarray(vals, dtype=self.dtype)
+
+    st = types.SimpleNamespace(
+        floats=lambda min_value=-1e9, max_value=1e9, **kw: _Floats(
+            min_value, max_value, **kw),
+        integers=lambda min_value=0, max_value=2**31 - 1: _Integers(
+            min_value, max_value),
+        sampled_from=_SampledFrom,
+    )
+    hnp = types.SimpleNamespace(arrays=_Arrays)
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats, **kw_strats):
+        def deco(fn):
+            n = min(getattr(fn, "_shim_max_examples", 20), _MAX_EXAMPLES_CAP)
+            seed0 = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            def run(_shim_example):
+                rng = np.random.default_rng(
+                    (seed0 + 7919 * _shim_example) % 2**32)
+                args = [s.example(rng) for s in strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                return fn(*args, **kwargs)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return pytest.mark.parametrize("_shim_example", range(n))(run)
+        return deco

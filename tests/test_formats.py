@@ -1,11 +1,8 @@
 """Unit + property tests for MX element/scale formats (OCP MX spec v1.0)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, hnp, settings, st
 
 from repro.core import formats as F
 

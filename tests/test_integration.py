@@ -37,6 +37,7 @@ def test_mx_training_decreases_loss():
     assert losses[-1] < losses[0] - 0.05, losses
 
 
+@pytest.mark.slow
 def test_launcher_trains_and_resumes():
     from repro.launch import train as tl
 

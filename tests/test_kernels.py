@@ -4,12 +4,11 @@ All kernels run in interpret mode on CPU (the TPU target is exercised by the
 lowering dry-run). assert_allclose tolerances reflect f32 accumulation-order
 differences only — the MX math itself is exact in both paths.
 """
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import quantize
 from repro.kernels import mx_matmul, mx_matmul_trainable, quantize_pallas

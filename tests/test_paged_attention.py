@@ -1,0 +1,129 @@
+"""Paged MX decode attention: page-table gather vs contiguous, bit-exact.
+
+The paged kernel gathers compact K/V tiles through the page table and then
+runs the identical attention kernel, so paged and contiguous caches must
+agree to the bit in interpret mode — any mismatch means the page plumbing
+(table indexing, clamping, masking) is wrong, not the float math.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize
+from repro.kernels import (gather_kv_pages, mx_attention_decode,
+                           mx_attention_decode_paged)
+
+RNG = np.random.default_rng(123)
+
+
+def _paged_layout(kq, vq, b, kvh, t, ps, rng):
+    """Scatter a contiguous (B, KVH, T, ·) cache into a shuffled page pool."""
+    npg = t // ps
+    pool_pages = b * npg + 3  # spare pages stay garbage (must be masked)
+    perm = rng.permutation(pool_pages)[: b * npg]
+    table = perm.reshape(b, npg).astype(np.int32)
+    arrs = {}
+    for name, src in [("ke", kq.elements), ("ks", kq.scales),
+                      ("ve", vq.elements), ("vs", vq.scales)]:
+        src = np.asarray(src)
+        pool = np.full((pool_pages, ps, kvh, src.shape[-1]), 255,
+                       dtype=src.dtype if src.dtype != np.uint8 else np.uint8)
+        if pool.dtype != np.uint8:
+            pool[:] = 0
+        for i in range(b):
+            for p in range(npg):
+                pool[table[i, p]] = src[i, :, p * ps:(p + 1) * ps].transpose(
+                    1, 0, 2)
+        arrs[name] = jnp.asarray(pool)
+    return arrs, jnp.asarray(table)
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"])
+@pytest.mark.parametrize("block_size", [16, 32, 64])
+def test_paged_matches_contiguous_bit_exact(fmt, block_size):
+    b, kvh, g, d, t, ps = 2, 2, 2, 64, 64, 16
+    q = jnp.asarray(RNG.normal(size=(b, kvh, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), fmt, block_size)
+    vq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), fmt, block_size)
+    lens = np.array([t - 3, t - 17], np.int32)
+
+    want = []
+    for i in range(b):
+        kpos = jnp.where(jnp.arange(t) < lens[i], jnp.arange(t),
+                         -1).astype(jnp.int32)
+        want.append(np.asarray(mx_attention_decode(
+            q[i:i + 1], kq.elements[i:i + 1], kq.scales[i:i + 1],
+            vq.elements[i:i + 1], vq.scales[i:i + 1], kpos,
+            int(lens[i]) - 1, block_size=block_size)))
+    want = np.concatenate(want, axis=0)
+
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, RNG)
+    got = np.asarray(mx_attention_decode_paged(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table,
+        jnp.asarray(lens), block_size=block_size))
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+def test_gather_kv_pages_reorders_exactly():
+    b, kvh, t, d, ps = 2, 3, 32, 32, 8
+    kq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, RNG)
+    ke, ks, ve, vs = gather_kv_pages(pools["ke"], pools["ks"], pools["ve"],
+                                     pools["vs"], table)
+    np.testing.assert_array_equal(
+        np.asarray(ke).astype(np.float32),
+        np.asarray(kq.elements).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(kq.scales))
+    np.testing.assert_array_equal(
+        np.asarray(ve).astype(np.float32),
+        np.asarray(vq.elements).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vq.scales))
+
+
+def test_unallocated_table_entries_never_contribute():
+    """Rows past seq_len come from clamped/garbage pages; outputs must not
+    depend on their contents."""
+    b, kvh, g, d, t, ps = 1, 2, 2, 32, 32, 8
+    q = jnp.asarray(RNG.normal(size=(b, kvh, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, RNG)
+    seq_len = jnp.asarray([ps + 3], jnp.int32)  # only the first 2 pages valid
+    base = np.asarray(mx_attention_decode_paged(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table,
+        seq_len))
+    table2 = np.asarray(table).copy()
+    table2[0, 2:] = -1  # drop the unallocated tail entirely
+    got = np.asarray(mx_attention_decode_paged(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"],
+        jnp.asarray(table2), seq_len))
+    np.testing.assert_array_equal(got.view(np.uint32), base.view(np.uint32))
+
+
+def test_contiguous_kernel_per_sequence_positions():
+    """(B,) pos / (B, T) kpos rows must equal per-row scalar calls."""
+    b, kvh, g, d, t = 3, 2, 2, 32, 48
+    q = jnp.asarray(RNG.normal(size=(b, kvh, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        RNG.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    lens = np.array([10, 48, 33], np.int32)
+    kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    got = np.asarray(mx_attention_decode(
+        q, kq.elements, kq.scales, vq.elements, vq.scales, kpos,
+        jnp.asarray(lens) - 1))
+    for i in range(b):
+        want = np.asarray(mx_attention_decode(
+            q[i:i + 1], kq.elements[i:i + 1], kq.scales[i:i + 1],
+            vq.elements[i:i + 1], vq.scales[i:i + 1],
+            jnp.arange(t, dtype=jnp.int32), int(lens[i]) - 1))
+        np.testing.assert_array_equal(got[i:i + 1].view(np.uint32),
+                                      want.view(np.uint32))

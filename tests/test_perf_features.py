@@ -57,11 +57,11 @@ def tiny_moe_model(dispatch):
 
 
 def test_cache_shardings_locates_batch_dim():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    from repro.parallel import cache_shardings
+    from repro.parallel import cache_shardings, make_abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     shapes = {
         "stacked_kv": jax.ShapeDtypeStruct((26, 128, 1024, 512), jnp.bfloat16),
         "flat_kv": jax.ShapeDtypeStruct((128, 1024, 8, 64), jnp.bfloat16),

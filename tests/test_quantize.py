@@ -1,10 +1,9 @@
 """Property tests for MX block quantization and the mx_dot execution modes."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import formats as F
 from repro.core import mx_dot, qat_matmul, quantize, quantize_value

@@ -177,11 +177,11 @@ def test_markov_data_is_learnable():
 
 
 def test_spec_for_rules():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    from repro.parallel import spec_for
+    from repro.parallel import make_abstract_mesh, spec_for
 
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     # TP on d_ff, FSDP on d_model
     assert spec_for(mesh, (2560, 7680), ("d_model", "d_ff")) == \
         P(("pod", "data"), "model")
