@@ -11,11 +11,21 @@ HBM_BW = 819e9
 
 rows = []
 
+# machine-readable results: suites register dicts here and the harness
+# (benchmarks/run.py) writes them to BENCH_*.json so CI can diff numbers
+# instead of scraping CSV
+json_results = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     line = f"{name},{us_per_call:.2f},{derived}"
     rows.append(line)
     print(line, flush=True)
+
+
+def emit_json(name: str, payload: dict):
+    """Register a suite's machine-readable results under ``name``."""
+    json_results[name] = payload
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -5,10 +5,13 @@ Prints ``name,us_per_call,derived`` CSV. Roofline (§Roofline) is separate:
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import traceback
 
 from . import (block_size_sweep, common, e2e_step, emulation_breakdown,
-               format_comparison, serve_throughput, speedup, throughput_sweep)
+               format_comparison, serve_prefix, serve_throughput, speedup,
+               throughput_sweep)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -18,7 +21,13 @@ SUITES = [
     ("table3_format_comparison", format_comparison.run),
     ("e2e_step", e2e_step.run),
     ("serve_throughput", serve_throughput.run),
+    ("serve_prefix", serve_prefix.run),
 ]
+
+# serve suites register dicts in common.json_results under these keys;
+# they land in BENCH_serve.json so the CI smoke step (and future perf
+# tracking) reads numbers, not CSV
+_SERVE_JSON = ("serve_throughput", "serve_prefix")
 
 
 def main() -> None:
@@ -30,6 +39,13 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc()
+    serve = {k: common.json_results[k] for k in _SERVE_JSON
+             if k in common.json_results}
+    if serve:
+        out = pathlib.Path(__file__).resolve().parent.parent / \
+            "BENCH_serve.json"
+        out.write_text(json.dumps(serve, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {out}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

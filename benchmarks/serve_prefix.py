@@ -1,0 +1,139 @@
+"""Prefix-cache serve benchmark: prefill-token savings + page sharing.
+
+The workload the prefix cache is built for: many requests sharing a long
+system-prompt head (page-aligned), each with a short unique tail. Two
+axes:
+
+  * **effective prefill throughput** — with sharing, only the first
+    request prefills the head; every later request prefills its tail
+    alone. The multiplier is prompt_tokens / prefill_tokens_computed
+    (deterministic, hardware-independent); wall-clock tok/s is reported
+    alongside. Gate: >= 1.8x at 8 requests sharing a 256-token head.
+  * **pages per resident token** — shared head pages are counted once
+    across the batch, so steady-state ``pages_in_use`` drops vs the
+    sharing-off engine on the identical workload.
+
+Correctness is asserted inline: greedy outputs with sharing on must be
+token-identical to sharing off.
+
+  PYTHONPATH=src python benchmarks/serve_prefix.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:  # package mode (python -m benchmarks.run)
+    from . import common
+    from .serve_throughput import tiny_cfg
+except ImportError:  # script mode (python benchmarks/serve_prefix.py)
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    import common
+    from serve_throughput import tiny_cfg
+
+
+def shared_head_requests(rng, n, head_len, tail_len, max_new):
+    head = rng.integers(0, 256, size=(head_len,)).astype(np.int32)
+    return [(np.concatenate([head, rng.integers(0, 256, size=(tail_len,))
+                             .astype(np.int32)]), max_new)
+            for _ in range(n)]
+
+
+def run_engine(params, cfg, reqs, max_seq, slots, page_size, prefix):
+    from repro.serve import ServeConfig, ServeEngine
+
+    eng = ServeEngine(params, cfg, ServeConfig(
+        max_seq=max_seq, max_slots=slots, page_size=page_size,
+        prefix_cache=prefix))
+    ids = [eng.submit(p, m) for p, m in reqs]
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    stats = eng.cache_stats()
+    new_toks = sum(m for _, m in reqs)
+    return {str(i): out[i] for i in ids}, dict(
+        stats, wall_s=dt, tok_s=new_toks / dt)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI smoke step")
+    args = ap.parse_args(argv)
+    import jax
+
+    from repro.nn import model as M
+
+    if args.smoke:
+        n, head, tail, max_new, ps = 4, 32, 8, 4, 8
+    else:
+        n, head, tail, max_new, ps = 8, 256, 32, 8, 16
+    max_seq = head + tail + max_new
+    slots = n
+    rng = np.random.default_rng(0)
+    reqs = shared_head_requests(rng, n, head, tail, max_new)
+    cfg = tiny_cfg(True)
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+
+    out_off, off = run_engine(params, cfg, reqs, max_seq, slots, ps,
+                              prefix=False)
+    out_on, on = run_engine(params, cfg, reqs, max_seq, slots, ps,
+                            prefix=True)
+    for key in out_off:
+        np.testing.assert_array_equal(
+            out_on[key], out_off[key],
+            err_msg="prefix sharing changed greedy outputs")
+
+    speedup = on["prompt_tokens"] / max(1, on["prefill_tokens_computed"])
+    resident = max(1, on["resident_tokens_at_peak"])
+    ppt_on = on["peak_pages"] * ps / resident
+    ppt_off = off["peak_pages"] * ps / max(1, off["resident_tokens_at_peak"])
+    print("engine,prefill_tokens,prompt_tokens,hit_rate,peak_pages,"
+          "pages_per_resident_token,tok_s")
+    print(f"prefix_off,{off['prefill_tokens_computed']},"
+          f"{off['prompt_tokens']},0.00,{off['peak_pages']},"
+          f"{ppt_off:.2f},{off['tok_s']:.1f}")
+    print(f"prefix_on,{on['prefill_tokens_computed']},"
+          f"{on['prompt_tokens']},{on['prefix_hit_rate']:.2f},"
+          f"{on['peak_pages']},{ppt_on:.2f},{on['tok_s']:.1f}")
+    common.emit(
+        f"serve/prefix_{'smoke' if args.smoke else 'full'}/"
+        f"r{n}_h{head}", 1e6 / on["tok_s"],
+        f"{speedup:.2f}x effective prefill, hit rate "
+        f"{on['prefix_hit_rate']:.2f}, peak {on['peak_pages']}p vs "
+        f"{off['peak_pages']}p unshared")
+    common.emit_json("serve_prefix", {
+        "requests": n, "head_tokens": head, "tail_tokens": tail,
+        "page_size": ps,
+        "tok_s": on["tok_s"], "tok_s_unshared": off["tok_s"],
+        "prefix_hit_rate": on["prefix_hit_rate"],
+        "effective_prefill_speedup": speedup,
+        "peak_pages": on["peak_pages"],
+        "peak_pages_unshared": off["peak_pages"],
+        "pages_per_resident_token": ppt_on,
+        "outputs_token_identical": True,
+    })
+    gate = 1.8
+    ok = speedup >= gate and on["peak_pages"] < off["peak_pages"]
+    print(f"\neffective prefill throughput {speedup:.2f}x, peak pages "
+          f"{on['peak_pages']} < {off['peak_pages']}: "
+          f"{'PASS' if ok else 'FAIL'} (gate >= {gate}x, pages strictly "
+          f"lower)")
+    if not ok:
+        raise SystemExit(1)
+    return speedup
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

@@ -146,6 +146,11 @@ def main(argv=None):
     print(f"\nworst fp8 cache-bytes/token reduction vs bf16 fixed-slot: "
           f"{worst_fp8_ratio:.2f}x "
           f"({'PASS' if worst_fp8_ratio >= 2.0 else 'FAIL'} >= 2x)")
+    common.emit_json("serve_throughput", {
+        "last_sweep": {"tok_s": tps, "bytes_per_token": bpt,
+                       "prefix_hit_rate": stats.get("prefix_hit_rate", 0.0)},
+        "worst_fp8_bytes_ratio_vs_bf16": worst_fp8_ratio,
+    })
     return worst_fp8_ratio
 
 

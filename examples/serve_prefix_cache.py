@@ -1,0 +1,19 @@
+"""Serve requests sharing a system-prompt head through the prefix cache.
+
+Eight requests share a 64-token head (think: common system prompt) and
+differ only in a short user tail. The radix tree recognises the shared
+page-aligned head after the first prefill: later requests retain the same
+physical MX pages (ref-counted, copy-on-write) and prefill only their
+tail, so the log shows a high prefix hit rate and far fewer peak pages
+than eight private copies would need.
+
+  PYTHONPATH=src python examples/serve_prefix_cache.py
+"""
+from repro.launch import serve as serve_launcher
+
+serve_launcher.main([
+    "--arch", "gemma2-2b", "--reduced", "--batch", "8",
+    "--max-slots", "4", "--shared-prefix", "64", "--prompt-len", "12",
+    "--new-tokens", "16", "--quant", "mxfp8", "--quantize-kv", "--ragged",
+    "--engine", "continuous", "--page-size", "16",
+])

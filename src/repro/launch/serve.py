@@ -49,6 +49,11 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths across requests")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of common system-prompt head across "
+                         "requests (exercises the prefix cache)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-tree prompt sharing")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -62,10 +67,11 @@ def main(argv=None):
             quantize_acts=False,  # weight-only for serving
             quantize_kv_cache=args.quantize_kv))
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
-    max_seq = args.prompt_len + args.new_tokens
+    max_seq = args.shared_prefix + args.prompt_len + args.new_tokens
     serve_cfg = ServeConfig(
         max_seq=max_seq, temperature=args.temperature,
-        max_slots=args.max_slots or args.batch, page_size=args.page_size)
+        max_slots=args.max_slots or args.batch, page_size=args.page_size,
+        prefix_cache=not args.no_prefix_cache)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
     rng = np.random.default_rng(0)
 
@@ -74,20 +80,35 @@ def main(argv=None):
         lens = (rng.integers(max(1, args.prompt_len // 2),
                              args.prompt_len + 1, size=args.batch)
                 if args.ragged else [args.prompt_len] * args.batch)
+        head = rng.integers(0, cfg.vocab_size,
+                            size=(args.shared_prefix,)).astype(np.int32)
         ids = [engine.submit(
-            rng.integers(0, cfg.vocab_size, size=(int(s),)).astype(np.int32),
+            np.concatenate([head, rng.integers(
+                0, cfg.vocab_size, size=(int(s),)).astype(np.int32)]),
             args.new_tokens) for s in lens]
         results = engine.run()
         dt = time.perf_counter() - t0
-        toks = sum(len(results[i]) for i in ids) - int(np.sum(lens))
+        prompt_toks = int(np.sum(lens)) + args.shared_prefix * len(ids)
+        toks = sum(len(results[i]) for i in ids) - prompt_toks
         stats = engine.cache_stats()
         log.info("served %d requests in %.2fs (%.1f tok/s); peak pages %d "
-                 "(%.1f KiB paged cache), %d preemptions",
+                 "(%.1f KiB paged cache), %d preemptions, prefix hit rate "
+                 "%.2f (%d/%d prompt tokens prefilled)",
                  len(ids), dt, toks / dt, stats["peak_pages"],
-                 stats["peak_paged_bytes"] / 1024, stats["preemptions"])
+                 stats["peak_paged_bytes"] / 1024, stats["preemptions"],
+                 stats["prefix_hit_rate"], stats["prefill_tokens_computed"],
+                 stats["prompt_tokens"])
         return results
-    prompts = rng.integers(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    # same workload shape as the continuous branch (minus raggedness): a
+    # shared head plus per-request tails, so --engine A/Bs compare like
+    # for like even though the fixed engine cannot exploit the sharing
+    head = rng.integers(0, cfg.vocab_size,
+                        size=(args.shared_prefix,)).astype(np.int32)
+    prompts = np.concatenate(
+        [np.broadcast_to(head, (args.batch, args.shared_prefix)),
+         rng.integers(0, cfg.vocab_size,
+                      size=(args.batch, args.prompt_len)).astype(np.int32)],
+        axis=1).astype(np.int32)
     out = engine.generate(prompts, args.new_tokens)
     dt = time.perf_counter() - t0
     toks = args.batch * args.new_tokens

@@ -233,6 +233,38 @@ def _read_cache(cache, quant: QuantConfig, cfg, dtype):
             deq(cache["v_elems"], cache["v_scales"]))
 
 
+def cache_kv_view(k, v, cfg: AttnConfig, quant: QuantConfig):
+    """K/V exactly as the cache will hold them.
+
+    bf16 caches store K/V verbatim, so this is the identity. MX caches
+    store quantized elements+scales, so prefill attention must see the
+    quantize->dequantize snap — the same values decode reads back and the
+    same values a prefix-cache tail prefill gathers from shared pages.
+    Routing through ``_quantize_kv_token`` + ``_read_cache`` (the cache's
+    own write/read pair) is what makes full prefill, tail prefill over
+    cached pages, and decode agree bit-for-bit.
+    """
+    if not (quant.quantize_kv_cache and quant.enabled):
+        return k, v
+    kq, vq = _quantize_kv_token(k, v, cfg, quant)
+    view = {"k_elems": kq.elements, "k_scales": kq.scales,
+            "v_elems": vq.elements, "v_scales": vq.scales}
+    return _read_cache(view, quant, cfg, k.dtype)
+
+
+def gather_page_kv(pool, page_ids, cfg: AttnConfig, quant: QuantConfig,
+                   dtype=jnp.bfloat16):
+    """Dequantized K/V of ``page_ids`` pool pages, as (1, n*PS, KVH, D).
+
+    The prefix-cache read path for tail prefill: pages are gathered in
+    page-table order, so row ``t`` is absolute position ``t`` of the
+    cached prefix.
+    """
+    view = {key: leaf[page_ids].reshape(1, -1, *leaf.shape[2:])
+            for key, leaf in pool.items()}
+    return _read_cache(view, quant, cfg, dtype)
+
+
 def _project_decode_qkv(params, x, posv, cfg: AttnConfig,
                         quant: QuantConfig, compute_dtype):
     """Decode prologue shared by the fixed-slot and paged paths: QKV

@@ -238,6 +238,67 @@ def apply_decode_paged(params, x, cache, page_rows, pos, bd: BlockDef,
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
+def _attn_prefill_qkv(mixer_params, h, positions, acfg, quant, dt):
+    """Shared prefill prologue: QKV projection + RoPE at ``positions``.
+
+    Single-sourced for the full and prefix-cached tail prefill paths —
+    any change here (rope variant, qk-norm, ...) must hit both, or the
+    token-identical guarantee the prefix cache depends on breaks.
+    """
+    b, s, _ = h.shape
+    hh, kvh, d = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    q = linear.apply(mixer_params["wq"], h, quant, dt).reshape(b, s, hh, d)
+    k = linear.apply(mixer_params["wk"], h, quant, dt).reshape(b, s, kvh, d)
+    v = linear.apply(mixer_params["wv"], h, quant, dt).reshape(b, s, kvh, d)
+    from .rotary import apply_rope
+
+    q = apply_rope(q, positions, acfg.rope_theta)
+    k = apply_rope(k, positions, acfg.rope_theta)
+    return q, k, v
+
+
+def prefill_block_tail(params, x, positions, pool, prefix_pages,
+                       bd: BlockDef, cfg: ModelConfig, max_seq: int):
+    """Prefill the uncached tail of a prompt against cached prefix pages.
+
+    ``x`` (1, S_tail, d_model) is the tail's embeddings, ``positions``
+    (1, S_tail) its *absolute* positions (RoPE stays exact), ``pool`` the
+    block's live page pool, and ``prefix_pages`` (P0,) the page ids of the
+    shared prefix (P0 * page_size == positions[0, 0]). Queries attend over
+    the dequantized prefix gathered from the pool plus the tail's own K/V
+    in cache representation — the exact values full prefill attends over
+    (``cache_kv_view``), which keeps prefix-cached generation
+    token-identical. Returns (x, tail cache) where the cache covers only
+    the tail at relative slots 0.. for page install.
+    """
+    if bd.mixer != "attn":
+        raise NotImplementedError(
+            f"prefix-cached prefill requires attention mixers, got "
+            f"{bd.mixer!r} (recurrent state would need per-node snapshots)")
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = _sp(rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps))
+    acfg = _attn_cfg(cfg, bd)
+    b, s, _ = h.shape
+    hh, d = acfg.num_heads, acfg.head_dim
+    q, k, v = _attn_prefill_qkv(params["mixer"], h, positions, acfg,
+                                quant, dt)
+    kp, vp = attention.gather_page_kv(pool, prefix_pages, acfg, quant, dt)
+    ks, vs = attention.cache_kv_view(k, v, acfg, quant)
+    kcat = jnp.concatenate([kp, ks], axis=1)  # b == 1 (one request)
+    vcat = jnp.concatenate([vp, vs], axis=1)
+    # gathered prefix rows sit at absolute positions 0..L-1, tail follows
+    kpos = jnp.arange(kcat.shape[1], dtype=jnp.int32)
+    out = attention._attend_chunked(q, kcat, vcat, positions, kpos, acfg)
+    h2 = linear.apply(params["mixer"]["wo"], out.reshape(b, s, hh * d),
+                      quant, dt)
+    # tail cache at *relative* slots (0-based) so it reshapes 1:1 into the
+    # sequence's tail pages; RoPE above already used absolute positions
+    rel = positions - positions[:, :1]
+    cache = attention.prefill_cache(params["mixer"], h, rel, acfg, quant,
+                                    k, v, max_seq)
+    return _decode_tail(params, x, h2, bd, cfg), cache
+
+
 def prefill_block(params, x, positions, bd: BlockDef, cfg: ModelConfig,
                   max_seq: int):
     """Forward pass that also builds the block's cache. Returns (x, cache)."""
@@ -246,15 +307,15 @@ def prefill_block(params, x, positions, bd: BlockDef, cfg: ModelConfig,
     if bd.mixer == "attn":
         acfg = _attn_cfg(cfg, bd)
         b, s, _ = h.shape
-        hh, kvh, d = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
-        q = linear.apply(params["mixer"]["wq"], h, quant, dt).reshape(b, s, hh, d)
-        k = linear.apply(params["mixer"]["wk"], h, quant, dt).reshape(b, s, kvh, d)
-        v = linear.apply(params["mixer"]["wv"], h, quant, dt).reshape(b, s, kvh, d)
-        from .rotary import apply_rope
-
-        q = apply_rope(q, positions, acfg.rope_theta)
-        k = apply_rope(k, positions, acfg.rope_theta)
-        out = attention._attend_chunked(q, k, v, positions, positions, acfg)
+        hh, d = acfg.num_heads, acfg.head_dim
+        q, k, v = _attn_prefill_qkv(params["mixer"], h, positions, acfg,
+                                    quant, dt)
+        # attend over the cache representation of K/V (identity for bf16,
+        # quantize->dequantize snap for MX): decode and prefix-cached tail
+        # prefill both read K/V back out of the cache, so full prefill must
+        # see the same values for the three paths to agree token-for-token
+        ks, vs = attention.cache_kv_view(k, v, acfg, quant)
+        out = attention._attend_chunked(q, ks, vs, positions, positions, acfg)
         h2 = linear.apply(params["mixer"]["wo"], out.reshape(b, s, hh * d),
                           quant, dt)
         cache = attention.prefill_cache(params["mixer"], h, positions, acfg,

@@ -260,6 +260,57 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
     return logits, cache
 
 
+def prefill_with_prefix(params, cfg: ModelConfig, cache, tokens,
+                        prefix_pages, pos0: int, max_seq: int):
+    """Prefill the uncached tail of a prompt against shared prefix pages.
+
+    The prefix-cache fast path: a request whose prompt head is already
+    resident in the paged cache prefills only ``tokens`` (1, S_tail), its
+    uncached tail. ``prefix_pages`` (P0,) are the page ids holding the
+    cached head (``pos0 == P0 * page_size`` tokens), gathered read-only
+    from ``cache``; positions are offset by ``pos0`` so RoPE stays
+    absolute. Requires an attention-only model (recurrent mixers would
+    need per-prefix state snapshots — see ROADMAP).
+
+    Returns (last-token logits, tail cache): the tail cache covers only
+    the new tokens at relative slots 0.. and installs into the sequence's
+    tail pages with ``kv_cache.install_prefill``, exactly like a full
+    prefill cache.
+    """
+    x = _embed_inputs(params, cfg, tokens)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(
+        pos0 + jnp.arange(s, dtype=jnp.int32), (b, s))
+    out_cache = {}
+    for j, bd in enumerate(cfg.prologue):
+        x, out_cache[f"prologue{j}"] = blocks.prefill_block_tail(
+            params[f"prologue{j}"], x, positions, cache[f"prologue{j}"],
+            prefix_pages, bd, cfg, max_seq)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        caches = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = blocks.prefill_block_tail(gparams[f"block{i}"], x,
+                                             positions, gcache[i],
+                                             prefix_pages, bd, cfg, max_seq)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    out_cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        x, out_cache[f"epilogue{j}"] = blocks.prefill_block_tail(
+            params[f"epilogue{j}"], x, positions, cache[f"epilogue{j}"],
+            prefix_pages, bd, cfg, max_seq)
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(b, 1, cfg.num_codebooks, cfg.vocab_size)
+    return logits, out_cache
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
                 pos=None):
     """One-token decode. tokens: (B, 1) (or (B,1,CB)); pos: scalar int32.

@@ -1,9 +1,11 @@
-"""Serving: MX weights + paged MX KV cache, continuous batching."""
+"""Serving: MX weights + paged MX KV cache, continuous batching,
+radix-tree prefix caching over ref-counted copy-on-write pages."""
 from .engine import (ContinuousBatchingEngine, FixedSlotEngine, ServeConfig,
                      ServeEngine, make_serve_step)
 from .kv_cache import PagePool, pages_for
+from .prefix_cache import PrefixCache
 from .scheduler import Request, Scheduler
 
 __all__ = ["ContinuousBatchingEngine", "FixedSlotEngine", "PagePool",
-           "Request", "Scheduler", "ServeConfig", "ServeEngine",
-           "make_serve_step", "pages_for"]
+           "PrefixCache", "Request", "Scheduler", "ServeConfig",
+           "ServeEngine", "make_serve_step", "pages_for"]

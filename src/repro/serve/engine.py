@@ -25,6 +25,7 @@ rectangles. ``benchmarks/serve_throughput.py`` measures both.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Dict, Optional
 
 import jax
@@ -36,6 +37,8 @@ from repro.nn.config import ModelConfig
 
 from . import kv_cache
 from .scheduler import Scheduler
+
+log = logging.getLogger("repro.serve")
 
 _PAGED_MIXERS = {"attn", "rglru", "ssd"}
 
@@ -49,6 +52,12 @@ class ServeConfig:
     max_slots: int = 8
     page_size: int = 16
     num_pages: Optional[int] = None  # default: max_slots * pages_per_slot
+    # prefix caching: share page-aligned prompt heads across requests via
+    # the radix tree (attention-only models; auto-disabled otherwise)
+    prefix_cache: bool = True
+    # admission: how far past a stuck queue head to scan for a request
+    # that fits (1 = strict FCFS)
+    admit_window: int = 4
 
 
 def _sample(logits, key, temperature: float):
@@ -117,9 +126,21 @@ class ContinuousBatchingEngine:
         pages_per_slot = kv_cache.pages_for(serve_cfg.max_seq, ps)
         self.num_pages = (serve_cfg.num_pages
                           or serve_cfg.max_slots * pages_per_slot)
+        # prefix sharing needs every mixer to be attention: K/V pages are a
+        # pure function of the token prefix, but recurrent state is not
+        # paged (per-prefix snapshots are a follow-on — see ROADMAP)
+        mixers = {bd.mixer for bd in (*cfg.prologue, *cfg.pattern,
+                                      *cfg.epilogue)}
+        self.prefix_enabled = bool(serve_cfg.prefix_cache
+                                   and mixers <= {"attn"})
+        if serve_cfg.prefix_cache and not self.prefix_enabled:
+            log.info("prefix cache disabled: mixers %s are not attention-only",
+                     sorted(mixers - {"attn"}))
         self.scheduler = Scheduler(
             max_slots=serve_cfg.max_slots, num_pages=self.num_pages,
-            page_size=ps, max_seq=serve_cfg.max_seq)
+            page_size=ps, max_seq=serve_cfg.max_seq,
+            prefix_cache=self.prefix_enabled,
+            admit_window=serve_cfg.admit_window)
         self.cache = model.init_paged_cache(
             cfg, serve_cfg.max_slots, self.num_pages, ps)
         # donate the cache pytree: without donation every decode step /
@@ -139,9 +160,14 @@ class ContinuousBatchingEngine:
         self._extract = jax.jit(kv_cache.extract_seq)
         self._restore = jax.jit(kv_cache.restore_seq,
                                 donate_argnums=() if cpu else (0, 1))
+        self._copy_page = jax.jit(kv_cache.copy_page,
+                                  donate_argnums=() if cpu else (0,))
         self._prefill_fns = {}  # prompt length -> jitted prefill
+        self._prefill_tail_fns = {}  # (tail len, prefix pages) -> jitted
         self._key = jax.random.PRNGKey(0)
         self.steps = 0
+        self.prompt_tokens = 0  # total prompt tokens admitted
+        self.prefill_tokens = 0  # prompt tokens actually computed
 
     # -- internals ----------------------------------------------------------
 
@@ -161,51 +187,166 @@ class ContinuousBatchingEngine:
             self._prefill_fns[length] = fn
         return fn
 
+    def _prefill_tail_for(self, tail_len: int, n_prefix: int):
+        """Jitted tail prefill, cached per (tail length, prefix pages).
+
+        Reads the shared prefix pages out of the live paged cache and
+        prefills only the uncached tail at absolute positions — the
+        prefix-cache fast path.
+        """
+        fn = self._prefill_tail_fns.get((tail_len, n_prefix))
+        if fn is None:
+            ps = self.serve_cfg.page_size
+            max_seq = kv_cache.pages_for(tail_len, ps) * ps
+            fn = jax.jit(lambda p, c, toks, rows: model.prefill_with_prefix(
+                p, self.cfg_prefill, c, toks, rows, n_prefix * ps,
+                max_seq=max_seq))
+            self._prefill_tail_fns[(tail_len, n_prefix)] = fn
+        return fn
+
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
 
     def _admit(self):
+        sched = self.scheduler
         while True:
-            seq = self.scheduler.admit_next()
+            seq = sched.admit_next()
             if seq is None:
                 return
             if seq.req.swap is not None:
-                # swapped-out sequence: restore its exact cache bytes into
-                # the fresh pages/slot; its pending token decodes next step
-                snapshot, _, _ = seq.req.swap
+                # swapped-out sequence: restore the exact bytes of the
+                # pages it exclusively owned into their fresh replacements
+                # (shared prefix pages stayed resident under other refs);
+                # its pending token decodes next step
+                snapshot, owned_idx, *_ = seq.req.swap
                 seq.req.swap = None
-                self.cache = self._restore(
-                    self.cache, snapshot, jnp.asarray(seq.slot, jnp.int32),
-                    jnp.asarray(seq.pages, jnp.int32))
+                if owned_idx:
+                    self.cache = self._restore(
+                        self.cache, snapshot,
+                        jnp.asarray(seq.slot, jnp.int32),
+                        jnp.asarray([seq.pages[i] for i in owned_idx],
+                                    jnp.int32))
                 continue
             prompt = seq.req.prompt
-            logits, pfcache = self._prefill_for(len(prompt))(
-                self.params, jnp.asarray(prompt, jnp.int32)[None])
+            self.prompt_tokens += len(prompt)
+            cached = seq.cached_tokens
+            if cached:
+                # prefix hit: prefill only the uncached tail against the
+                # shared pages already resident in the pool
+                n_prefix = cached // self.serve_cfg.page_size
+                tail = prompt[cached:]
+                logits, pfcache = self._prefill_tail_for(
+                    len(tail), n_prefix)(
+                        self.params, self.cache,
+                        jnp.asarray(tail, jnp.int32)[None],
+                        jnp.asarray(seq.pages[:n_prefix], jnp.int32))
+                install_pages = seq.pages[n_prefix:]
+                self.prefill_tokens += len(tail)
+            else:
+                logits, pfcache = self._prefill_for(len(prompt))(
+                    self.params, jnp.asarray(prompt, jnp.int32)[None])
+                install_pages = seq.pages
+                self.prefill_tokens += len(prompt)
             self.cache = self._install(
                 self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
-                jnp.asarray(seq.pages, jnp.int32))
+                jnp.asarray(install_pages, jnp.int32))
+            sched.register_prefix(seq)
             tok = int(_sample(logits, self._next_key(),
                               self.serve_cfg.temperature)[0])
-            self.scheduler.record_token(seq, tok,
-                                        eos_id=self.serve_cfg.eos_id)
+            sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
+
+    def _swap_out(self, victim) -> None:
+        """Preempt ``victim``: snapshot + free only the pages it
+        exclusively owns; shared pages keep their other references."""
+        sched = self.scheduler
+        owned_idx, owned_ids = sched.exclusive_pages(victim)
+        snapshot = None
+        if owned_ids:
+            snapshot = self._extract(
+                self.cache, jnp.asarray(victim.slot, jnp.int32),
+                jnp.asarray(owned_ids, jnp.int32))
+        sched.preempt(victim, snapshot, owned_idx)
+
+    def _reclaim_swapped_refs(self) -> bool:
+        """Last-resort pool reclamation: queued swapped-out requests still
+        retain references on shared pages (normally the cheap choice — the
+        pages stay resident under the tree's reference too). When those
+        pins would starve a live sequence, extract the shared pages' exact
+        bytes into the swap snapshots and drop the references, turning the
+        pages evictable/freeable. Restore then treats them like any other
+        owned page, so generation stays bit-identical. Returns True if any
+        reference was dropped.
+        """
+        sched = self.scheduler
+        released = False
+        for req in sched.queue:
+            if req.swap is None:
+                continue
+            snapshot, owned_idx, pages, pos, cached = req.swap
+            owned = set(owned_idx)
+            shared_idx = [i for i in range(len(pages)) if i not in owned]
+            if not shared_idx:
+                continue
+            extra = self._extract(
+                self.cache, jnp.asarray(0, jnp.int32),
+                jnp.asarray([pages[i] for i in shared_idx], jnp.int32))
+            req.swap = (kv_cache.merge_snapshots(snapshot, extra),
+                        owned_idx + shared_idx, pages, pos, cached)
+            sched.pool.free([pages[i] for i in shared_idx])
+            released = True
+        return released
+
+    def _relieve_pressure(self, seq) -> bool:
+        """One escalation step when ``seq`` can't get a page (tree LRU
+        eviction already ran inside ``_alloc_with_evict``): swap out the
+        youngest other sequence, else reclaim swapped requests' pinned
+        shared refs. False means the pool is genuinely exhausted. Single
+        source of the escalation order for the grow and COW paths."""
+        victim = self.scheduler.pick_victim(exclude=seq)
+        if victim is not None:
+            self._swap_out(victim)
+            return True
+        return self._reclaim_swapped_refs()
+
+    def _alloc_one(self, seq) -> Optional[int]:
+        """One fresh page for ``seq``, evicting / preempting as needed."""
+        while True:
+            ids = self.scheduler._alloc_with_evict(1)
+            if ids is not None:
+                return ids[0]
+            if not self._relieve_pressure(seq):
+                return None
 
     def _ensure_pages(self):
         """Grow each active sequence's page list for this step's write,
-        swapping out the youngest sequences when the pool runs dry."""
+        swapping out the youngest sequences when the pool runs dry, and
+        give it exclusive ownership of the page it is about to write
+        (copy-on-write: shared pages are never scribbled on)."""
         sched = self.scheduler
+        ps = self.serve_cfg.page_size
         for seq in list(sched.active()):
             if sched.slots[seq.slot] is not seq:
                 continue  # already preempted by an elder this pass
             while not sched.try_grow(seq):
-                victim = sched.pick_victim(exclude=seq)
-                if victim is None:
+                if not self._relieve_pressure(seq):
                     raise RuntimeError(
                         "page pool exhausted for a lone sequence")
-                snapshot = self._extract(
-                    self.cache, jnp.asarray(victim.slot, jnp.int32),
-                    jnp.asarray(victim.pages, jnp.int32))
-                sched.preempt(victim, snapshot)
+            wp = seq.pos // ps
+            pid = seq.pages[wp]
+            if sched.pool.ref(pid) > 1:
+                # copy-on-write: this step writes into a page other
+                # holders reference — copy it to a fresh page and repoint
+                new = self._alloc_one(seq)
+                if new is None:
+                    raise RuntimeError(
+                        "page pool exhausted for a lone sequence")
+                self.cache = self._copy_page(
+                    self.cache, jnp.asarray(pid, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+                sched.pool.free([pid])
+                seq.pages[wp] = new
+                sched.cow_copies += 1
 
     def step(self) -> bool:
         """Admit what fits, run one decode step. Returns True if any work
@@ -213,9 +354,12 @@ class ContinuousBatchingEngine:
         sched = self.scheduler
         self._admit()
         if not sched.active():
-            if sched.queue:
-                raise RuntimeError("scheduler stalled with queued work")
-            return sched.has_work
+            if sched.queue and self._reclaim_swapped_refs():
+                self._admit()  # pinned shared pages were the blocker
+            if not sched.active():
+                if sched.queue:
+                    raise RuntimeError("scheduler stalled with queued work")
+                return sched.has_work
         self._ensure_pages()
         tokens, pos, page_rows, act = sched.assemble()
         logits, self.cache = self._decode(
@@ -267,10 +411,10 @@ class ContinuousBatchingEngine:
         return out
 
     def cache_stats(self) -> Dict[str, float]:
-        """Allocation + peak-usage stats for the benchmark."""
+        """Allocation + peak-usage + prefix-sharing stats."""
         page_bytes = kv_cache.pool_page_nbytes(self.cache, self.num_pages)
         sched = self.scheduler
-        return {
+        stats = {
             "allocated_bytes": kv_cache.cache_nbytes(self.cache),
             "page_bytes": page_bytes,
             "state_bytes": kv_cache.state_nbytes(self.cache),
@@ -278,7 +422,17 @@ class ContinuousBatchingEngine:
             "resident_tokens_at_peak": sched.resident_at_peak,
             "preemptions": sched.preemptions,
             "peak_paged_bytes": page_bytes * sched.peak_pages,
+            "skipped_admissions": sched.skipped_admissions,
+            "cow_copies": sched.cow_copies,
+            "prompt_tokens": self.prompt_tokens,
+            "prefill_tokens_computed": self.prefill_tokens,
+            "prefix_hit_rate": (
+                1.0 - self.prefill_tokens / self.prompt_tokens
+                if self.prompt_tokens else 0.0),
         }
+        if sched.prefix is not None:
+            stats.update(sched.prefix.stats())
+        return stats
 
 
 # the default engine: continuous batching over the paged MX cache

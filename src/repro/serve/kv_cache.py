@@ -42,11 +42,20 @@ def pages_for(num_tokens: int, page_size: int) -> int:
 
 
 class PagePool:
-    """Free-list allocator over a fixed set of physical page ids.
+    """Ref-counted free-list allocator over a fixed set of physical page ids.
 
     Any free page can serve any sequence (no fragmentation by design), so
     allocation is O(n) pops and ``alloc`` fails only when the pool is
-    genuinely out of pages — the scheduler then preempts.
+    genuinely out of pages — the scheduler then evicts prefix-cache leaves
+    or preempts.
+
+    Sharing: a physical page can back many sequences' page tables (prompt
+    prefix sharing) plus the prefix radix tree. ``alloc`` hands out pages
+    with one reference; every additional holder calls :meth:`retain`, every
+    holder releases with :meth:`free`, and the page returns to the free
+    list only when its last reference drops. Writers must hold the only
+    reference (copy-on-write is the engine's job; ``ref`` exposes the count
+    so it can tell).
     """
 
     def __init__(self, num_pages: int):
@@ -55,6 +64,7 @@ class PagePool:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._free_set = set(self._free)  # O(1) double-free detection
+        self._ref = [0] * num_pages
         self.peak_in_use = 0
 
     @property
@@ -65,28 +75,48 @@ class PagePool:
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    def ref(self, pid: int) -> int:
+        """Current reference count of ``pid`` (0 = on the free list)."""
+        if not 0 <= pid < self.num_pages:
+            raise ValueError(f"unknown page {pid}")
+        return self._ref[pid]
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` page ids, or None (and no change) if unavailable."""
+        """Pop ``n`` page ids (refcount 1), or None (and no change)."""
         if n < 0:
             raise ValueError("alloc of negative page count")
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(ids)
+        for pid in ids:
+            self._ref[pid] = 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return ids
 
+    def retain(self, ids) -> None:
+        """Add one reference to each allocated page in ``ids``."""
+        for pid in ids:
+            if not 0 <= pid < self.num_pages:
+                raise ValueError(f"retain of unknown page {pid}")
+            if self._ref[pid] == 0:
+                raise ValueError(f"retain of free page {pid}")
+            self._ref[pid] += 1
+
     def free(self, ids) -> None:
+        """Drop one reference per page; last reference frees the page."""
         for pid in ids:
             if not 0 <= pid < self.num_pages:
                 raise ValueError(f"free of unknown page {pid}")
-            if pid in self._free_set:
+            if pid in self._free_set or self._ref[pid] == 0:
                 raise ValueError(f"double free of page {pid}")
-            self._free.append(pid)
-            self._free_set.add(pid)
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+                self._free_set.add(pid)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +197,25 @@ def install_prefill(cache, prefill_cache, slot, page_ids, page_size: int):
     return cache
 
 
+def copy_page(cache, src, dst):
+    """Copy one physical page's contents ``src`` -> ``dst`` in every pool.
+
+    The device half of copy-on-write: when a sequence must write into a
+    page other holders reference, the engine allocates a fresh page, copies
+    the shared page's bytes here, and repoints the sequence's page table
+    before the write. Recurrent state blocks are untouched (they are
+    per-slot, never shared). jit-able; ``src``/``dst`` are scalar int32.
+    """
+    for path, blk, grouped in _iter_blocks(cache):
+        if not _is_pool(blk):
+            continue
+        blk = {key: (leaf.at[:, dst].set(leaf[:, src]) if grouped
+                     else leaf.at[dst].set(leaf[src]))
+               for key, leaf in blk.items()}
+        cache = _set_block(cache, path, blk)
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # swap-out / swap-in (exact preemption)
 # ---------------------------------------------------------------------------
@@ -200,6 +249,31 @@ def extract_seq(cache, slot, page_ids):
         out["groups"] = tuple(out["groups"][i]
                               for i in range(len(out["groups"])))
     return out
+
+
+def merge_snapshots(a, b):
+    """Concatenate two :func:`extract_seq` snapshots along the page axis.
+
+    Used when a swapped-out request's retained *shared* pages must be
+    reclaimed (last-resort pool pressure): their bytes are extracted into
+    a second snapshot and appended to the swap's original one, in the
+    same order the page indices are appended to its owned list. Only pool
+    leaves are merged; state rows keep ``a``'s (sharing implies an
+    attention-only model, so state blocks are empty anyway). ``a`` may be
+    None (a swap that owned no pages exclusively).
+    """
+    if a is None:
+        return b
+    merged = a
+    for path, blk, grouped in _iter_blocks(a):
+        if not _is_pool(blk):
+            continue
+        other = b[path[0]] if len(path) == 1 else b["groups"][path[1]]
+        blk = {key: jnp.concatenate([leaf, other[key]],
+                                    axis=1 if grouped else 0)
+               for key, leaf in blk.items()}
+        merged = _set_block(merged, path, blk)
+    return merged
 
 
 def restore_seq(cache, snapshot, slot, page_ids):

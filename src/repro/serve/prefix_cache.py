@@ -1,0 +1,209 @@
+"""Prefix cache: a token-radix tree of shared, ref-counted MX cache pages.
+
+The paper's serving argument is that decode is HBM-bandwidth-bound on the
+KV cache, so every byte of MX-compressed cache we avoid recomputing or
+duplicating multiplies the win of MXFP8/MXFP4 storage. Pages are already
+content-addressable units: the K/V rows a page holds are a pure function
+of the token prefix up to the end of that page (causal attention), so two
+requests whose prompts share a page-aligned head can share the *physical*
+pages of that head.
+
+Structure: a radix tree whose edges are full pages of prompt tokens. Each
+node owns exactly one page — its key is the ``page_size``-token tuple of
+that page's slice of the prompt, and its path from the root spells the
+whole prefix. This is the classic block-level radix structure (vLLM-style
+hash-block prefix caching; see also SGLang's RadixAttention), specialised
+to whole pages so a hit plugs straight into the engine's page tables.
+
+Ownership protocol (all accounting lives in :class:`~.kv_cache.PagePool`):
+
+  * the tree holds **one** reference per node's page for as long as the
+    node exists — a cached prefix stays resident after its sequences
+    finish, which is the whole point;
+  * :meth:`acquire` retains one reference per matched page on behalf of
+    the requesting sequence; the scheduler releases it with the rest of
+    the sequence's page table (``pool.free``) at EOS/preemption;
+  * :meth:`evict` drops least-recently-used leaves whose page nobody else
+    references (``pool.ref == 1``) — pinned prefixes are never evicted,
+    so a page a live (or swapped-out) sequence maps is never recycled
+    under it.
+
+Exactness: a hit is only usable if attending over the cached pages gives
+bit-identical results to recomputing them. The cache stores either bf16
+K/V verbatim, or MX elements+scales whose dequantization is deterministic;
+the prefill path attends over exactly that representation (see
+``attention.cache_kv_view``), so tail prefill over cached pages reproduces
+full prefill token-for-token.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .kv_cache import PagePool
+
+
+class _Node:
+    """One full page of cached prompt tokens."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_use")
+
+    def __init__(self, key: Tuple[int, ...], page: Optional[int],
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.page = page  # physical page id (None only for the root)
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class PrefixCache:
+    """Radix tree of page-granular prompt prefixes over a shared pool."""
+
+    def __init__(self, pool: PagePool, page_size: int):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.pool = pool
+        self.page_size = page_size
+        self._root = _Node((), None, None)
+        self._clock = 0
+        # stats (surfaced by engine.cache_stats / benchmarks)
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    # -- introspection -------------------------------------------------------
+
+    def _iter_nodes(self):
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    @property
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    @property
+    def pages_held(self) -> List[int]:
+        return [n.page for n in self._iter_nodes()]
+
+    def _chunks(self, prompt, n: int):
+        ps = self.page_size
+        for i in range(n):
+            yield i, tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+
+    # -- the three operations ------------------------------------------------
+
+    def acquire(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """Longest page-aligned prefix hit for ``prompt``.
+
+        Returns (page_ids, cached_tokens); one pool reference per returned
+        page is retained for the caller. The hit is capped at
+        ``len(prompt) - 1`` tokens: at least one prompt token must be
+        prefilled to produce the logits the first sampled token needs.
+
+        Stat-free: an admission attempt can fail after the lookup (no
+        pages for the tail) and be retried every step, so the scheduler
+        reports the hit via :meth:`record_lookup` only once the request
+        is actually admitted.
+        """
+        cap = (len(prompt) - 1) // self.page_size
+        node, pages = self._root, []
+        for _, key in self._chunks(prompt, cap):
+            child = node.children.get(key)
+            if child is None:
+                break
+            self.pool.retain([child.page])
+            self._clock += 1
+            child.last_use = self._clock
+            pages.append(child.page)
+            node = child
+        return pages, len(pages) * self.page_size
+
+    def record_lookup(self, cached_tokens: int) -> None:
+        """Count one admitted request's lookup outcome in the stats."""
+        self.lookups += 1
+        if cached_tokens:
+            self.hits += 1
+            self.hit_tokens += cached_tokens
+
+    def insert(self, prompt: np.ndarray, pages: List[int]) -> int:
+        """Register a freshly prefilled prompt's full pages in the tree.
+
+        ``pages`` is the sequence's page table; entry ``i`` must hold the
+        installed K/V of prompt tokens ``[i*ps, (i+1)*ps)``. Existing nodes
+        are kept (first writer wins — the contents are identical by the
+        exactness contract); each new node retains one pool reference that
+        outlives the inserting sequence. Returns the node count added.
+        """
+        node, created = self._root, 0
+        for i, key in self._chunks(prompt, len(prompt) // self.page_size):
+            child = node.children.get(key)
+            if child is None:
+                self.pool.retain([pages[i]])
+                child = _Node(key, pages[i], node)
+                node.children[key] = child
+                self._clock += 1
+                child.last_use = self._clock
+                created += 1
+            node = child
+        return created
+
+    def evictable_count(self) -> int:
+        """Pages evict() could free right now: nodes whose whole subtree
+        is unpinned (a node can only fall after all its descendants)."""
+
+        def walk(node):
+            total, all_ev = 0, True
+            for child in node.children.values():
+                c_total, c_ev = walk(child)
+                total += c_total
+                all_ev = all_ev and c_ev
+            if node is self._root:
+                return total, False
+            ev = all_ev and self.pool.ref(node.page) == 1
+            return total + (1 if ev else 0), ev
+
+        return walk(self._root)[0]
+
+    def evict(self, need: int) -> int:
+        """Free up to ``need`` pages by dropping LRU unreferenced leaves.
+
+        Only leaves whose page has no holder besides the tree itself
+        (``pool.ref == 1``) are candidates; evicting a leaf can expose its
+        parent as the next candidate (pushed into the same LRU heap, so
+        global LRU order is preserved). One tree walk + O(log n) per
+        eviction — this sits on the per-step allocation path.
+        Returns the number of pages freed.
+        """
+        def candidate(nd):
+            return not nd.children and self.pool.ref(nd.page) == 1
+
+        heap = [(nd.last_use, id(nd), nd) for nd in self._iter_nodes()
+                if candidate(nd)]
+        heapq.heapify(heap)
+        freed = 0
+        while freed < need and heap:
+            _, _, nd = heapq.heappop(heap)
+            del nd.parent.children[nd.key]
+            self.pool.free([nd.page])
+            self.evictions += 1
+            freed += 1
+            parent = nd.parent
+            if parent is not self._root and candidate(parent):
+                heapq.heappush(heap, (parent.last_use, id(parent), parent))
+        return freed
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "prefix_lookups": self.lookups,
+            "prefix_hits": self.hits,
+            "prefix_hit_tokens": self.hit_tokens,
+            "prefix_evictions": self.evictions,
+            "prefix_nodes": self.num_nodes,
+        }

@@ -1,22 +1,35 @@
-"""Continuous-batching scheduler: FCFS admission, preemption, slot recycling.
+"""Continuous-batching scheduler: admission, prefix sharing, preemption.
 
 Host-side control plane of the serving engine. The device sees only fixed
 shapes — (max_slots, 1) token batches and a (max_slots, pages_per_slot)
 page table — while requests enter and leave mid-stream:
 
-  * **admission** — strict FCFS: the queue head is admitted as soon as a
-    slot is free and its prompt's pages fit the pool (head-of-line order is
-    the fairness contract; skipping ahead is a follow-on).
+  * **admission** — FCFS with a bounded skip-ahead window: the queue head
+    is admitted as soon as a slot is free and its pages fit; when the head
+    does *not* fit, up to ``admit_window - 1`` younger requests are
+    scanned for one that does (head-of-line order is preserved otherwise,
+    so the window bounds how far fairness can bend).
+  * **prefix sharing** — with a :class:`~.prefix_cache.PrefixCache`
+    attached, admission first takes the longest page-aligned prefix hit:
+    matched pages are retained (ref-counted) into the request's page
+    table and only the uncached tail is prefilled. Fresh full prompt
+    pages are inserted back into the radix tree after install.
   * **decode paging** — each step, a slot crossing a page boundary pulls a
-    fresh page from the pool. If the pool is dry, the *youngest* other
-    active request is preempted: the engine snapshots its exact cache
-    bytes (pages + state row, ``kv_cache.extract_seq``), its pages are
-    freed, and it is requeued at the front; re-admission restores the
-    snapshot verbatim (swap-style preemption). Recompute-style preemption
-    would NOT be token-identical here: a re-prefill attends over
-    unquantized K/V where the original decode attended over the MX cache.
-  * **recycling** — EOS or max_new_tokens frees the slot and all its pages
-    in O(1); the next queued request can be admitted the same step.
+    fresh page from the pool. A dry pool first evicts LRU unreferenced
+    prefix-tree leaves; if still dry, the *youngest* other active request
+    is preempted: the engine snapshots the exact bytes of the pages it
+    exclusively owns (shared prefix pages are released by reference and
+    never extracted — other holders keep them resident), its references
+    are dropped, and it is requeued at the front; re-admission restores
+    the snapshot verbatim into fresh pages and re-links the shared ones
+    (swap-style preemption). Recompute-style preemption would NOT be
+    token-identical here: a re-prefill of *generated* tokens would attend
+    over unquantized K/V where the original decode attended over the MX
+    cache.
+  * **recycling** — EOS or max_new_tokens frees the slot and drops the
+    sequence's page references in O(1); pages the prefix tree still
+    references stay resident as cache, everything else returns to the
+    free list, and the next queued request can be admitted the same step.
 
 The scheduler never touches device memory: it hands the engine (slot,
 request, page_ids) admission tuples and assembles per-step numpy batches.
@@ -30,6 +43,7 @@ from typing import List, Optional
 import numpy as np
 
 from .kv_cache import PagePool, pages_for
+from .prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -40,8 +54,11 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
-    # preemption snapshot: (cache_snapshot, n_pages, resident_tokens);
-    # restored verbatim on re-admission so generation stays bit-identical
+    # preemption snapshot: (cache_snapshot, owned_idx, pages, resident
+    # tokens, cached_tokens). ``owned_idx`` are the page-table positions
+    # that were exclusively owned (extracted + freed); the remaining
+    # entries of ``pages`` stayed retained (shared) across the swap.
+    # Restored verbatim on re-admission so generation stays bit-identical.
     swap: Optional[tuple] = None
 
     @property
@@ -62,11 +79,13 @@ class ActiveSeq:
     pos: int  # next cache write position == tokens currently resident
     pages: List[int]
     order: int  # admission sequence number (preemption picks the youngest)
+    cached_tokens: int = 0  # page-aligned prefix-cache hit at admission
 
 
 class Scheduler:
     def __init__(self, *, max_slots: int, num_pages: int, page_size: int,
-                 max_seq: int):
+                 max_seq: int, prefix_cache: bool = False,
+                 admit_window: int = 4):
         self.max_slots = max_slots
         self.page_size = page_size
         self.max_seq = max_seq
@@ -75,7 +94,12 @@ class Scheduler:
             raise ValueError(
                 f"num_pages={num_pages} cannot hold one max_seq={max_seq} "
                 f"sequence (needs {self.pages_per_slot})")
+        if admit_window < 1:
+            raise ValueError("admit_window must be >= 1")
+        self.admit_window = admit_window
         self.pool = PagePool(num_pages)
+        self.prefix = (PrefixCache(self.pool, page_size)
+                       if prefix_cache else None)
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[ActiveSeq]] = [None] * max_slots
         self.finished: List[Request] = []
@@ -85,20 +109,32 @@ class Scheduler:
         self.peak_pages = 0
         self.resident_at_peak = 0
         self.preemptions = 0
+        self.skipped_admissions = 0
+        self.cow_copies = 0
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        """Queue one request. Invalid inputs fail here, with a clear
+        ValueError, not steps later inside a jitted prefill."""
+        prompt = np.asarray(prompt)
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"prompt must be integer token ids, got dtype {prompt.dtype}")
+        prompt = prompt.astype(np.int32).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
+        if not isinstance(max_new_tokens, (int, np.integer)):
+            raise ValueError(
+                f"max_new_tokens must be an int, got {type(max_new_tokens).__name__}")
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if len(prompt) + max_new_tokens > self.max_seq:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) "
                 f"exceeds max_seq={self.max_seq}")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        req = Request(self._next_id, prompt, max_new_tokens)
+        req = Request(self._next_id, prompt, int(max_new_tokens))
         self._next_id += 1
         self.queue.append(req)
         return req.id
@@ -112,43 +148,82 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
-    def admit_next(self) -> Optional[ActiveSeq]:
-        """FCFS: admit the queue head if a slot and its pages are free.
+    def _alloc_with_evict(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages, evicting prefix-tree leaves if needed.
 
-        A preempted request re-enters with exactly the pages its snapshot
-        holds; a fresh one with its prompt's pages.
+        Eviction only runs when it can actually cover the shortfall —
+        a doomed allocation must not destroy cached prefixes for nothing
+        (the caller will retry every step while the request waits).
         """
-        if not self.queue:
-            return None
-        free_slots = [i for i, s in enumerate(self.slots) if s is None]
-        if not free_slots:
-            return None
-        req = self.queue[0]
+        if not self.pool.can_alloc(n) and self.prefix is not None:
+            shortfall = n - self.pool.free_pages
+            if self.prefix.evictable_count() >= shortfall:
+                self.prefix.evict(shortfall)
+        return self.pool.alloc(n)
+
+    def _try_admit(self, req: Request, slot: int) -> Optional[ActiveSeq]:
+        """Bind ``req`` to ``slot`` if its pages fit; None leaves no trace."""
         if req.swap is not None:
-            _, npages, pos0 = req.swap
+            snapshot, owned_idx, pages, pos0, cached = req.swap
+            ids = self._alloc_with_evict(len(owned_idx))
+            if ids is None:
+                return None
+            pages = list(pages)
+            for i, pid in zip(owned_idx, ids):
+                pages[i] = pid
         else:
             # only fresh requests are prefilled; preempted ones re-enter
             # exclusively via their cache snapshot above (a re-prefill of
             # prompt+generated would not be token-identical: prefill
             # attends over unquantized K/V)
             assert not req.generated, "mid-stream request without snapshot"
+            hit, cached = ([], 0)
+            if self.prefix is not None:
+                hit, cached = self.prefix.acquire(req.prompt)
             pos0 = len(req.prompt)
-            npages = pages_for(pos0, self.page_size)
-        ids = self.pool.alloc(npages)
-        if ids is None:
-            return None
-        self.queue.popleft()
-        seq = ActiveSeq(req=req, slot=free_slots[0], pos=pos0, pages=ids,
-                        order=self._order)
+            ids = self._alloc_with_evict(pages_for(pos0, self.page_size)
+                                         - len(hit))
+            if ids is None:
+                if hit:
+                    self.pool.free(hit)  # drop the lookup's references
+                return None
+            pages = hit + ids
+            if self.prefix is not None:
+                self.prefix.record_lookup(cached)
+        seq = ActiveSeq(req=req, slot=slot, pos=pos0, pages=pages,
+                        order=self._order, cached_tokens=cached)
         self._order += 1
-        self.slots[seq.slot] = seq
+        self.slots[slot] = seq
         return seq
+
+    def admit_next(self) -> Optional[ActiveSeq]:
+        """Admit the queue head, or — when it doesn't fit — the first of
+        up to ``admit_window - 1`` younger requests that does (bounded
+        skip-ahead; strict FCFS otherwise)."""
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        if not free_slots or not self.queue:
+            return None
+        for qi in range(min(self.admit_window, len(self.queue))):
+            seq = self._try_admit(self.queue[qi], free_slots[0])
+            if seq is not None:
+                del self.queue[qi]
+                if qi:
+                    self.skipped_admissions += 1
+                return seq
+        return None
+
+    def register_prefix(self, seq: ActiveSeq) -> None:
+        """Insert ``seq``'s freshly installed full prompt pages into the
+        radix tree (no-op without a prefix cache). Engine calls this after
+        the device install, so a later hit always reads real bytes."""
+        if self.prefix is not None:
+            self.prefix.insert(seq.req.prompt, seq.pages)
 
     def try_grow(self, seq: ActiveSeq) -> bool:
         """Allocate the page for ``seq.pos`` if it crosses a boundary."""
         if seq.pos // self.page_size < len(seq.pages):
             return True
-        ids = self.pool.alloc(1)
+        ids = self._alloc_with_evict(1)
         if ids is None:
             return False
         seq.pages.extend(ids)
@@ -159,16 +234,30 @@ class Scheduler:
         victims = [s for s in self.active() if s is not exclude]
         return max(victims, key=lambda s: s.order) if victims else None
 
-    def preempt(self, victim: ActiveSeq, snapshot) -> None:
-        """Swap out ``victim``: free its pages/slot, requeue at the front.
+    def exclusive_pages(self, seq: ActiveSeq):
+        """(table indices, page ids) of pages only ``seq`` references —
+        the ones a preemption snapshot must extract. Shared pages (prefix
+        tree / other sequences) stay resident and are never extracted."""
+        idx = [i for i, p in enumerate(seq.pages) if self.pool.ref(p) == 1]
+        return idx, [seq.pages[i] for i in idx]
 
-        The engine passes the device-side snapshot of its pages + state
-        row (``kv_cache.extract_seq``); re-admission restores it verbatim,
-        so preemption never perturbs the token stream.
+    def preempt(self, victim: ActiveSeq, snapshot,
+                owned_idx: Optional[List[int]] = None) -> None:
+        """Swap out ``victim``: free its exclusive pages, requeue at front.
+
+        The engine passes the device-side snapshot of the victim's
+        exclusively owned pages + state row (``kv_cache.extract_seq``) and
+        their table indices; shared pages keep the victim's reference
+        across the swap (they cannot be evicted under it). Re-admission
+        restores the snapshot verbatim, so preemption never perturbs the
+        token stream.
         """
-        self.pool.free(victim.pages)
+        if owned_idx is None:
+            owned_idx = list(range(len(victim.pages)))
+        self.pool.free([victim.pages[i] for i in owned_idx])
         self.slots[victim.slot] = None
-        victim.req.swap = (snapshot, len(victim.pages), victim.pos)
+        victim.req.swap = (snapshot, owned_idx, list(victim.pages),
+                           victim.pos, victim.cached_tokens)
         self.queue.appendleft(victim.req)
         self.preemptions += 1
 

@@ -1,0 +1,399 @@
+"""Prefix-cache subsystem: ref-counted pages, radix tree, COW, goldens.
+
+The load-bearing claims:
+  * ``PagePool`` ref-counting never double-frees, never leaks, and
+    ``peak_in_use`` is monotone (property-tested under the hypothesis
+    shim);
+  * the radix tree's references stay consistent with live page tables
+    through arbitrary acquire/insert/release/evict interleavings;
+  * with prefix sharing enabled, greedy outputs for prompts sharing a
+    page-aligned head are token-identical to both the sharing-disabled
+    engine and the fixed-slot reference, while steady-state pages_in_use
+    is strictly lower — including under preemption and LRU eviction;
+  * a sequence never writes a page another holder references
+    (copy-on-write).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import MXFP8
+from repro.nn import BlockDef, ModelConfig, model
+from repro.serve import (ContinuousBatchingEngine, FixedSlotEngine, PagePool,
+                         PrefixCache, Scheduler, ServeConfig)
+from repro.serve import kv_cache as KV
+
+
+# ---------------------------------------------------------------------------
+# PagePool ref-counting invariants (property-tested)
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_refcount_basics():
+    pool = PagePool(4)
+    (a,) = pool.alloc(1)
+    assert pool.ref(a) == 1
+    pool.retain([a])
+    assert pool.ref(a) == 2 and pool.pages_in_use == 1
+    pool.free([a])
+    assert pool.ref(a) == 1 and pool.pages_in_use == 1  # still held
+    pool.free([a])
+    assert pool.ref(a) == 0 and pool.pages_in_use == 0  # last ref frees
+    with pytest.raises(ValueError):
+        pool.free([a])  # double free
+    with pytest.raises(ValueError):
+        pool.retain([a])  # retain of a free page
+    with pytest.raises(ValueError):
+        pool.retain([99])
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_page_pool_property_no_leak_no_double_free(seed):
+    """Random alloc/retain/free interleavings against a model refcount
+    dict: the pool and the model always agree, frees of dead pages always
+    raise, and peak_in_use is monotone."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(8)
+    refs = {}  # pid -> model refcount
+    peak = 0
+    for _ in range(200):
+        op = rng.integers(3)
+        if op == 0:  # alloc
+            n = int(rng.integers(0, 4))
+            ids = pool.alloc(n)
+            if sum(1 for r in refs.values() if r > 0) + n <= 8:
+                assert ids is not None and len(ids) == n
+                for pid in ids:
+                    assert refs.get(pid, 0) == 0
+                    refs[pid] = 1
+            else:
+                assert ids is None
+        elif op == 1:  # retain a live page
+            live = [p for p, r in refs.items() if r > 0]
+            if live:
+                pid = int(rng.choice(live))
+                pool.retain([pid])
+                refs[pid] += 1
+        else:  # free one reference (sometimes of a dead page: must raise)
+            live = [p for p, r in refs.items() if r > 0]
+            if live and rng.random() < 0.9:
+                pid = int(rng.choice(live))
+                pool.free([pid])
+                refs[pid] -= 1
+            else:
+                dead = [p for p in range(8) if refs.get(p, 0) == 0]
+                if dead:
+                    with pytest.raises(ValueError):
+                        pool.free([int(rng.choice(dead))])
+        in_use = sum(1 for r in refs.values() if r > 0)
+        assert pool.pages_in_use == in_use
+        assert pool.free_pages == 8 - in_use
+        for pid in range(8):
+            assert pool.ref(pid) == refs.get(pid, 0)
+        assert pool.peak_in_use >= peak  # monotone
+        peak = pool.peak_in_use
+    # drain: every page must come back
+    for pid, r in refs.items():
+        for _ in range(r):
+            pool.free([pid])
+    assert pool.free_pages == 8 and pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# radix tree: lookup / insert / evict
+# ---------------------------------------------------------------------------
+
+
+def _tree(num_pages=16, ps=4):
+    pool = PagePool(num_pages)
+    return PrefixCache(pool, ps), pool
+
+
+def test_prefix_tree_insert_lookup_roundtrip():
+    tree, pool = _tree()
+    prompt = np.arange(10, dtype=np.int32)  # 2 full pages + tail of 2
+    pages = pool.alloc(3)
+    assert tree.insert(prompt, pages) == 2  # only full pages enter
+    assert pool.ref(pages[0]) == 2 and pool.ref(pages[1]) == 2
+    assert pool.ref(pages[2]) == 1  # partial tail page stays private
+    # same head, longer prompt: hits both pages, retains them
+    hit, cached = tree.acquire(np.arange(16, dtype=np.int32))
+    assert hit == pages[:2] and cached == 8
+    assert pool.ref(pages[0]) == 3
+    # divergent second page: only the first matches
+    other = np.concatenate([np.arange(4), [99, 99, 99, 99], [1, 2]])
+    hit2, cached2 = tree.acquire(other.astype(np.int32))
+    assert hit2 == pages[:1] and cached2 == 4
+    # the hit cap: a fully cached prompt still leaves >= 1 token to prefill
+    hit3, cached3 = tree.acquire(np.arange(8, dtype=np.int32))
+    assert cached3 == 4  # (8-1)//4 = 1 page, not 2
+    # stats are reported at admission time (acquire itself is stat-free:
+    # failed admissions retry every step and must not inflate hit rates)
+    assert tree.hits == 0 and tree.lookups == 0
+    for cached in (cached, cached2, cached3):
+        tree.record_lookup(cached)
+    assert tree.hits == 3 and tree.lookups == 3 and tree.hit_tokens == 16
+
+
+def test_prefix_tree_eviction_lru_and_pinning():
+    tree, pool = _tree(num_pages=8, ps=4)
+    p_a = pool.alloc(2)
+    tree.insert(np.arange(8, dtype=np.int32), p_a)  # chain a: 2 nodes
+    p_b = pool.alloc(1)
+    tree.insert(np.asarray([50, 51, 52, 53], np.int32), p_b)  # leaf b
+    for pid in p_a + p_b:
+        pool.free([pid])  # sequences done: only the tree holds the pages
+    # chain a's leaf is older than b; eviction takes LRU leaves first
+    assert tree.evict(1) == 1
+    assert pool.ref(p_a[1]) == 0  # a's leaf went first (LRU)
+    # pinned pages are not evictable: acquire b, then ask for everything
+    hit, _ = tree.acquire(np.asarray([50, 51, 52, 53, 0], np.int32))
+    assert hit == p_b
+    assert tree.evict(10) == 1  # only a's root falls; b is pinned
+    assert pool.ref(p_b[0]) == 2 and tree.num_nodes == 1
+    pool.free(p_b)  # release the acquisition
+    assert tree.evict(1) == 1 and tree.num_nodes == 0
+    assert pool.pages_in_use == 0
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_prefix_tree_property_refcounts_match_live_tables(seed):
+    """Random admit (acquire+alloc+insert) / finish (free) / evict churn:
+    every page's refcount equals (tree holds it) + (# live tables holding
+    it), and draining everything empties the pool."""
+    rng = np.random.default_rng(seed)
+    ps, num_pages = 4, 32
+    pool = PagePool(num_pages)
+    tree = PrefixCache(pool, ps)
+    vocab = 3  # tiny vocab -> prompts collide -> real sharing
+    live = []  # page tables of "running" sequences
+    for _ in range(60):
+        op = rng.integers(3)
+        if op == 0:  # admit
+            n_tok = int(rng.integers(1, 13))
+            prompt = rng.integers(0, vocab, size=(n_tok,)).astype(np.int32)
+            hit, cached = tree.acquire(prompt)
+            need = -(-n_tok // ps) - len(hit)
+            if not pool.can_alloc(need):
+                tree.evict(need - pool.free_pages)
+            ids = pool.alloc(need)
+            if ids is None:
+                if hit:
+                    pool.free(hit)
+                continue
+            table = hit + ids
+            tree.insert(prompt, table)
+            live.append(table)
+        elif op == 1 and live:  # finish
+            table = live.pop(int(rng.integers(len(live))))
+            pool.free(table)
+        else:  # pressure
+            tree.evict(int(rng.integers(1, 4)))
+        held = tree.pages_held
+        for pid in range(num_pages):
+            want = held.count(pid) + sum(t.count(pid) for t in live)
+            assert pool.ref(pid) == want, (pid, want, pool.ref(pid))
+    for table in live:
+        pool.free(table)
+    tree.evict(num_pages)
+    assert pool.pages_in_use == 0 and tree.num_nodes == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def _cfg(quantize_kv=True, **kw):
+    return ModelConfig(
+        name="t", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=quantize_kv), **kw)
+
+
+def test_copy_page_copies_every_pool_layer():
+    cache = model.init_paged_cache(_cfg(), num_slots=1, num_pages=4,
+                                   page_size=4)
+    fill = lambda leaf: jnp.arange(leaf.size, dtype=jnp.float32).reshape(
+        leaf.shape).astype(leaf.dtype)
+    cache = jax.tree_util.tree_map(fill, cache)
+    out = KV.copy_page(cache, jnp.asarray(1, jnp.int32),
+                       jnp.asarray(3, jnp.int32))
+    for _, blk, grouped in KV._iter_blocks(out):
+        assert KV._is_pool(blk)
+        for leaf in blk.values():
+            src = leaf[:, 1] if grouped else leaf[1]
+            dst = leaf[:, 3] if grouped else leaf[3]
+            np.testing.assert_array_equal(np.asarray(src), np.asarray(dst))
+
+
+def test_engine_cow_never_writes_a_shared_page():
+    """Pin the page a sequence is about to write (as a partial-page hit
+    would); the engine must copy it to a fresh page first, and the token
+    stream must not change."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(0).integers(0, 128, (6,)).astype(np.int32)
+    want = FixedSlotEngine(params, cfg, ServeConfig(max_seq=24)).generate(
+        prompt[None], 8)[0]
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=24, max_slots=1, page_size=8))
+    eng.submit(prompt, 8)
+    eng.step()  # admit + first decode
+    seq = eng.scheduler.active()[0]
+    wp = seq.pos // 8
+    pinned = seq.pages[wp]
+    eng.scheduler.pool.retain([pinned])  # simulate another holder
+    eng.step()
+    assert eng.scheduler.cow_copies == 1
+    assert seq.pages[wp] != pinned  # repointed to a private copy
+    assert eng.scheduler.pool.ref(pinned) == 1  # our pin is the only ref
+    while eng.step():
+        pass
+    eng.scheduler.pool.free([pinned])
+    out = np.concatenate([prompt, eng.scheduler.finished[0].generated])
+    np.testing.assert_array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: skip-ahead admission + validation
+# ---------------------------------------------------------------------------
+
+
+def test_skip_ahead_admits_a_fitting_request_behind_a_stuck_head():
+    s = Scheduler(max_slots=2, num_pages=4, page_size=4, max_seq=16,
+                  admit_window=4)
+    big = s.submit(np.arange(12, dtype=np.int32), 4)  # needs 3 pages
+    a = s.admit_next()
+    assert a.req.id == big
+    # new head (another big one) can't fit: only 1 page left
+    s.submit(np.arange(12, dtype=np.int32), 4)
+    s.submit(np.arange(4, dtype=np.int32), 4)  # needs 1 page: fits
+    b = s.admit_next()
+    assert b is not None and len(b.req.prompt) == 4  # skipped the stuck head
+    assert s.skipped_admissions == 1
+    assert s.queue[0].prompt.shape == (12,)  # head-of-line order otherwise
+
+
+def test_skip_ahead_window_is_bounded():
+    s = Scheduler(max_slots=2, num_pages=4, page_size=4, max_seq=16,
+                  admit_window=2)
+    s.submit(np.arange(12, dtype=np.int32), 4)
+    assert s.admit_next().req.id == 0
+    s.submit(np.arange(12, dtype=np.int32), 4)  # stuck head
+    s.submit(np.arange(12, dtype=np.int32), 4)  # also stuck (in window)
+    s.submit(np.arange(4, dtype=np.int32), 4)  # would fit, outside window
+    assert s.admit_next() is None
+
+
+def test_submit_rejects_bad_input_loudly():
+    s = Scheduler(max_slots=1, num_pages=4, page_size=4, max_seq=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        s.submit(np.arange(4, dtype=np.int32), 0)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        s.submit(np.arange(4, dtype=np.int32), -3)
+    with pytest.raises(ValueError, match="must be an int"):
+        s.submit(np.arange(4, dtype=np.int32), 2.5)
+    with pytest.raises(ValueError, match="integer token ids"):
+        s.submit(np.zeros(4, np.float32), 4)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        s.submit(np.arange(14, dtype=np.int32), 4)
+    assert not s.queue  # nothing slipped through
+
+
+# ---------------------------------------------------------------------------
+# engine goldens: sharing on == sharing off == fixed-slot
+# ---------------------------------------------------------------------------
+
+
+def _shared_head_prompts(n, head_len, tail_len, rng):
+    head = rng.integers(0, 128, (head_len,)).astype(np.int32)
+    return np.stack([np.concatenate(
+        [head, rng.integers(0, 128, (tail_len,)).astype(np.int32)])
+        for _ in range(n)])
+
+
+@pytest.mark.parametrize("quantize_kv", [False, True])
+def test_prefix_sharing_token_identical_and_fewer_pages(quantize_kv):
+    cfg = _cfg(quantize_kv)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompts = _shared_head_prompts(3, 16, 4, np.random.default_rng(1))
+    want = FixedSlotEngine(params, cfg, ServeConfig(max_seq=32)).generate(
+        prompts, 6)
+    outs, peaks = {}, {}
+    for on in (False, True):
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=32, max_slots=3, page_size=8, prefix_cache=on))
+        outs[on] = eng.generate(prompts, 6)
+        peaks[on] = eng.cache_stats()["peak_pages"]
+        assert (eng.cache_stats().get("prefix_hit_tokens", 0) > 0) == on
+    np.testing.assert_array_equal(outs[False], want)
+    np.testing.assert_array_equal(outs[True], want)
+    assert peaks[True] < peaks[False], peaks
+
+
+def test_prefix_sharing_with_preemption_and_eviction():
+    """Tight pool: sharing + swap preemption + LRU eviction all fire, and
+    every request still matches its own fixed-slot generation exactly.
+    Shared pages must never be extracted into a snapshot."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = _shared_head_prompts(6, 32, 8, rng)
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=52, max_slots=3, page_size=8, num_pages=10,
+        prefix_cache=True))
+    ids = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    stats = eng.cache_stats()
+    assert stats["preemptions"] >= 1, "pool sizing must force a swap"
+    assert stats["prefix_evictions"] >= 1, "pool sizing must force eviction"
+    assert stats["prefix_hit_tokens"] > 0
+    fixed = FixedSlotEngine(params, cfg, ServeConfig(max_seq=52))
+    for rid, p in zip(ids, prompts):
+        np.testing.assert_array_equal(out[rid],
+                                      fixed.generate(p[None], 10)[0])
+
+
+def test_lone_sequence_reclaims_swapped_shared_refs():
+    """Regression: pages pinned by tree refs + a swapped-out request's
+    retained shared refs must not starve a lone active sequence. The
+    engine extracts the shared pages into the swap snapshot, drops the
+    references, and the run completes — token-identically."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 128, (5,)).astype(np.int32)
+               for _ in range(2)]
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=14, max_slots=2, page_size=4, num_pages=4,
+        prefix_cache=True))
+    ids = [eng.submit(p, 9) for p in prompts]
+    out = eng.run()  # raised "page pool exhausted" before the fix
+    assert eng.scheduler.preemptions >= 1
+    fixed = FixedSlotEngine(params, cfg, ServeConfig(max_seq=14))
+    for rid, p in zip(ids, prompts):
+        np.testing.assert_array_equal(out[rid],
+                                      fixed.generate(p[None], 9)[0])
+
+
+def test_prefix_cache_auto_disabled_for_recurrent_mixers():
+    cfg = ModelConfig(
+        name="t", family="hybrid", d_model=64, vocab_size=128,
+        pattern=(BlockDef("rglru"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, rnn_width=64,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False))
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=16, max_slots=1, page_size=4, prefix_cache=True))
+    assert not eng.prefix_enabled
+    assert eng.scheduler.prefix is None
