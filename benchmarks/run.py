@@ -9,9 +9,9 @@ import json
 import pathlib
 import traceback
 
-from . import (block_size_sweep, common, e2e_step, emulation_breakdown,
-               format_comparison, serve_prefix, serve_throughput, speedup,
-               throughput_sweep)
+from . import (block_size_sweep, common, decode_attention, e2e_step,
+               emulation_breakdown, format_comparison, serve_prefix,
+               serve_throughput, speedup, throughput_sweep)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -22,12 +22,16 @@ SUITES = [
     ("e2e_step", e2e_step.run),
     ("serve_throughput", serve_throughput.run),
     ("serve_prefix", serve_prefix.run),
+    ("decode_attention", decode_attention.run),
 ]
 
-# serve suites register dicts in common.json_results under these keys;
-# they land in BENCH_serve.json so the CI smoke step (and future perf
-# tracking) reads numbers, not CSV
-_SERVE_JSON = ("serve_throughput", "serve_prefix")
+# suites register dicts in common.json_results under these keys; each
+# group lands in its own BENCH_*.json so the CI smoke steps (and future
+# perf tracking) read numbers, not CSV
+_JSON_FILES = {
+    "BENCH_serve.json": ("serve_throughput", "serve_prefix"),
+    "BENCH_decode.json": ("decode_attention",),
+}
 
 
 def main() -> None:
@@ -36,16 +40,20 @@ def main() -> None:
     for name, fn in SUITES:
         try:
             fn()
-        except Exception as e:  # noqa: BLE001
+        except (Exception, SystemExit) as e:  # noqa: BLE001
+            # SystemExit too: gated suites (serve_prefix, decode_attention)
+            # exit nonzero on a FAIL when run standalone; under the harness
+            # that must not skip the remaining suites or the JSON dump
             failures.append((name, repr(e)))
             traceback.print_exc()
-    serve = {k: common.json_results[k] for k in _SERVE_JSON
-             if k in common.json_results}
-    if serve:
-        out = pathlib.Path(__file__).resolve().parent.parent / \
-            "BENCH_serve.json"
-        out.write_text(json.dumps(serve, indent=2, sort_keys=True) + "\n")
-        print(f"wrote {out}")
+    for fname, keys in _JSON_FILES.items():
+        payload = {k: common.json_results[k] for k in keys
+                   if k in common.json_results}
+        if payload:
+            out = pathlib.Path(__file__).resolve().parent.parent / fname
+            out.write_text(json.dumps(payload, indent=2, sort_keys=True)
+                           + "\n")
+            print(f"wrote {out}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -6,23 +6,36 @@ HBM-bandwidth-bound on the KV cache, so the cache is stored block-scaled
 the wide K/V never exist in HBM. This is the vector-scalar instruction
 family (`vmxdotp.*f`): one wide query operand against compact MX operands.
 
-Two cache layouts are supported:
+Three entry points, two cache layouts:
 
   * **contiguous** (`mx_attention_decode`): one (T, D) tile per (batch,
     kv-head), the fixed-slot serving layout. ``kpos``/``pos`` may be shared
     across the batch or per-sequence (continuous batching decodes requests
     at different positions in the same step).
-  * **paged** (`mx_attention_decode_paged`): the cache lives in a global
-    page pool (num_pages, page_size, KVH, D) and each sequence owns a list
-    of pages (its page-table row). `gather_kv_pages` is a Pallas kernel
-    whose BlockSpec index maps read the scalar-prefetched page table — the
-    DMA engine walks the page list directly, and the gathered operands stay
-    **compact** (fp8/fp4 + E8M0), so the bandwidth win survives paging.
-    Decode then reuses the contiguous kernel bit-for-bit, which is what
-    makes paged-vs-contiguous equivalence exact rather than approximate.
+  * **paged, two-pass** (`mx_attention_decode_paged`): the cache lives in a
+    global page pool (num_pages, page_size, KVH, D) and each sequence owns
+    a list of pages (its page-table row). `gather_kv_pages` is a Pallas
+    kernel whose BlockSpec index maps read the scalar-prefetched page
+    table — the DMA engine walks the page list directly, and the gathered
+    operands stay **compact** (fp8/fp4 + E8M0). Decode then reuses the
+    contiguous kernel bit-for-bit, which is what makes paged-vs-contiguous
+    equivalence exact rather than approximate. Kept as the bit-exactness
+    oracle; the engine no longer runs it.
+  * **paged, single-pass fused** (`mx_attention_decode_fused`): the serve
+    engine's hot path. One kernel, grid (B, KVH, num_kv_pages) with the
+    page dimension innermost: the BlockSpec index maps read the
+    scalar-prefetched page table, so each grid step DMAs one *compact*
+    pool page tile straight into VMEM, dequantizes it in-register, and
+    folds it into a flash-style online softmax (running max / rescaled
+    partial sums in VMEM scratch). The gathered cache never exists — not
+    wide, not even compact — and ``pl.when`` skips every page tile past
+    ``ceil(seq_len / page_size)`` (the index map also re-points skipped
+    steps at the last valid page, so the pipeline's DMA is elided by the
+    revisit rule). Per-step work is proportional to *resident* tokens,
+    not the padded table width.
 
 Per grid cell (batch b, kv-head h): load the query group (G, D) wide, the
-K/V cache tiles (T, D) compact, fold scales in VREGs, run the (G, T) logits
+K/V cache tiles compact, fold scales in VREGs, run the (G, ·) logits
 matmul + masked f32 softmax + (G, D) output matmul.
 
 Layouts:
@@ -35,6 +48,10 @@ Layouts:
 Paged pools: (NP, PS, KVH, D[/2]) elems, (NP, PS, KVH, D//k) scales,
 page_table (B, P) i32 (entries < 0 = unallocated; rows are masked out via
 seq_lens so garbage pages never contribute).
+
+Element formats are threaded explicitly (``fmt_name``, as ``mx_matmul``
+does) — fp4 packs two nibbles per stored byte, so the storage dtype alone
+cannot name the format once more than one byte-backed format exists.
 """
 from __future__ import annotations
 
@@ -51,11 +68,31 @@ from .mx_matmul import _decode_e8m0, _decode_tile
 NEG_INF = -2.0e38
 
 
-def _dequant_rows(elems, scales, block_size: int):
-    """(T, D) stored elements + (T, D//k) scales -> (T, D) f32."""
-    t, d_store = elems.shape
-    vals = _decode_tile(elems, "fp8_e4m3" if elems.dtype != jnp.uint8
-                        else "fp4_e2m1")
+def _check_fmt(elems, fmt_name: str):
+    """Fail loudly when ``fmt_name`` contradicts the storage dtype.
+
+    fp4 packs two nibbles per uint8 byte, so decoding it as fp8 (or vice
+    versa) produces shape garbage deep inside the kernel; catching the
+    mismatch at the wrapper names the actual mistake.
+    """
+    packed = elems.dtype == jnp.uint8
+    if packed != (fmt_name == "fp4_e2m1"):
+        raise ValueError(
+            f"fmt_name {fmt_name!r} does not match the cache storage dtype "
+            f"{elems.dtype} (packed fp4 pools need fmt_name='fp4_e2m1', "
+            "fp8 pools an fp8 format)")
+
+
+def _dequant_rows(elems, scales, fmt_name: str, block_size: int):
+    """(T, D) stored elements + (T, D//k) scales -> (T, D) f32.
+
+    ``fmt_name`` is threaded explicitly from the caller (never sniffed from
+    the storage dtype): fp8 variants share decode-by-astype but fp4 stores
+    two packed nibbles per byte, and any future byte-backed format would
+    make dtype sniffing silently wrong.
+    """
+    t = elems.shape[0]
+    vals = _decode_tile(elems, fmt_name)
     d = vals.shape[-1]
     nb = d // block_size
     s = _decode_e8m0(scales)  # (T, nb)
@@ -63,11 +100,12 @@ def _dequant_rows(elems, scales, block_size: int):
 
 
 def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
-                    pos_ref, o_ref, *, block_size: int, softcap):
+                    pos_ref, o_ref, *, fmt_name: str, block_size: int,
+                    softcap):
     """One (batch, kv_head) cell: full-T attention with masked f32 softmax."""
     q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
-    k = _dequant_rows(ke_ref[0, 0], ks_ref[0, 0], block_size)  # (T, D)
-    v = _dequant_rows(ve_ref[0, 0], vs_ref[0, 0], block_size)
+    k = _dequant_rows(ke_ref[0, 0], ks_ref[0, 0], fmt_name, block_size)
+    v = _dequant_rows(ve_ref[0, 0], vs_ref[0, 0], fmt_name, block_size)
     d = q.shape[-1]
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -87,8 +125,8 @@ def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
 
 
 def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
-                        *, block_size: int = 32, softcap=None,
-                        interpret: bool | None = None):
+                        *, fmt_name: str = "fp8_e4m3", block_size: int = 32,
+                        softcap=None, interpret: bool | None = None):
     """Decode attention against an MX-quantized cache. Returns (B,KVH,G,D).
 
     ``kpos`` may be (T,) shared or (B, T) per-sequence; ``pos`` a scalar or
@@ -96,6 +134,7 @@ def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    _check_fmt(k_elems, fmt_name)
     b, kvh, g, d = q.shape
     t = k_elems.shape[2]
     nb = k_scales.shape[-1]
@@ -105,8 +144,8 @@ def mx_attention_decode(q, k_elems, k_scales, v_elems, v_scales, kpos, pos,
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
         pos = jnp.broadcast_to(pos[None], (b,))
-    kernel = functools.partial(_mx_attn_kernel, block_size=block_size,
-                               softcap=softcap)
+    kernel = functools.partial(_mx_attn_kernel, fmt_name=fmt_name,
+                               block_size=block_size, softcap=softcap)
     ed = k_elems.shape[-1]
     return pl.pallas_call(
         kernel,
@@ -193,14 +232,21 @@ def gather_kv_pages(ke_pool, ks_pool, ve_pool, vs_pool, page_table,
 
 
 def mx_attention_decode_paged(q, ke_pool, ks_pool, ve_pool, vs_pool,
-                              page_table, seq_lens, *, block_size: int = 32,
-                              softcap=None, interpret: bool | None = None):
-    """Decode attention through a page table over an MX page pool.
+                              page_table, seq_lens, *,
+                              fmt_name: str = "fp8_e4m3",
+                              block_size: int = 32, softcap=None,
+                              interpret: bool | None = None):
+    """Two-pass decode attention through a page table over an MX page pool.
 
     q: (B, KVH, G, D); pools per :func:`gather_kv_pages`; seq_lens (B,) =
     number of valid cache rows per sequence (query sits at seq_len - 1).
     Returns (B, KVH, G, D) f32, bit-identical to `mx_attention_decode` on
     the equivalent contiguous cache (same gather order, same kernel).
+
+    This materializes the gathered *compact* cache (pass 1) before
+    attending over the full padded table (pass 2) — kept as the exactness
+    oracle for :func:`mx_attention_decode_fused`, which does both in one
+    kernel and never materializes the gather.
     """
     ke, ks, ve, vs = gather_kv_pages(ke_pool, ks_pool, ve_pool, vs_pool,
                                      page_table, interpret=interpret)
@@ -209,5 +255,168 @@ def mx_attention_decode_paged(q, ke_pool, ks_pool, ve_pool, vs_pool,
     kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
                             (q.shape[0], t))
     return mx_attention_decode(q, ke, ks, ve, vs, kpos, seq_lens - 1,
-                               block_size=block_size, softcap=softcap,
-                               interpret=interpret)
+                               fmt_name=fmt_name, block_size=block_size,
+                               softcap=softcap, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# single-pass fused paged decode: page-table walk + dequant + online softmax
+# ---------------------------------------------------------------------------
+
+
+def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
+                          vs_ref, o_ref, visits_ref, m_ref, l_ref, acc_ref,
+                          *, page_size: int, fmt_name: str, block_size: int,
+                          softcap, window):
+    """One page tile of one (batch, kv-head) cell, flash-style.
+
+    Grid is (B, KVH, P) with P innermost ("arbitrary"), so the VMEM
+    scratch — running max ``m``, running denominator ``l``, rescaled
+    partial output ``acc`` — persists across the page walk of a cell and
+    is re-initialized at page 0. ``pl.when`` skips tiles past
+    ``ceil(seq_len / page_size)`` entirely: masked-out pages cost neither
+    dequant nor MXU work, and their DMA is elided because the index map
+    re-points them at the last valid page (unchanged block index = no
+    refetch). The wide K/V tile exists only in VREGs.
+    """
+    i = pl.program_id(0)
+    p = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        visits_ref[0, 0, 0] = 0
+
+    seq_len = lens_ref[i]  # wrapper-clamped to >= 1
+    valid_pages = pl.cdiv(seq_len, page_size)
+
+    @pl.when(p < valid_pages)
+    def _page():
+        # the skip predicate's audit trail: counts page bodies actually
+        # executed, so tests/benchmarks can assert work == resident pages
+        visits_ref[0, 0, 0] += 1
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                          fmt_name, block_size)  # (PS, D)
+        v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                          fmt_name, block_size)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (d ** -0.5)  # (G, PS)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        pos = seq_len - 1
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # the explicit mask (not just exp(NEG_INF - m)) guards the
+        # all-masked tile: there m_new == NEG_INF and the difference is 0
+        probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (G, PS)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            probs, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == last)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
+                              page_table, seq_lens, *,
+                              fmt_name: str = "fp8_e4m3",
+                              block_size: int = 32, softcap=None,
+                              window=None, debug_visits: bool = False,
+                              interpret: bool | None = None):
+    """Single-pass fused paged decode attention (the serve-engine hot path).
+
+    One Pallas kernel with grid (B, KVH, P): the BlockSpec index maps read
+    the scalar-prefetched page table, each grid step dequantizes one
+    compact fp8/fp4 + E8M0 pool page tile in-register, and the softmax is
+    accumulated online (flash-decoding) in VMEM scratch — no gathered
+    cache, wide or compact, ever exists in HBM, and page tiles at or past
+    ``ceil(seq_len / page_size)`` are skipped, so per-step work scales
+    with resident tokens rather than the padded table.
+
+    q: (B, KVH, G, D); pools (NP, PS, KVH, ED/NB); page_table (B, P) i32
+    (entries < 0 = unallocated, clamped — rows past ``seq_lens`` never
+    contribute); seq_lens (B,) valid cache rows per sequence (the query
+    sits at seq_len - 1; inactive rows may pass 0, clamped to 1 so the
+    denominator stays finite, matching the einsum path's pos=0 garbage
+    rows whose logits the host ignores). ``window`` masks keys at
+    ``kpos <= pos - window`` (sliding-window layers). Returns
+    (B, KVH, G, D) f32; matches the two-pass/einsum f32 reference to
+    online-softmax rounding (~1e-7, well inside 1e-5).
+
+    ``debug_visits=True`` additionally returns a (B, KVH, 1) i32 count of
+    page bodies actually executed per cell — the kernel always maintains
+    it (one scalar store per visited tile), and tests/benchmarks assert
+    it equals ``ceil(seq_lens / PS)`` exactly, making the page-skip
+    predicate falsifiable on every backend (off-TPU, interpret-mode
+    wall-clock cannot see the skip: the grid loop visits every cell and
+    only the body is predicated away).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _check_fmt(ke_pool, fmt_name)
+    b, kvh, g, d = q.shape
+    npages, ps = ke_pool.shape[0], ke_pool.shape[1]
+    ed = ke_pool.shape[-1]
+    nb = ks_pool.shape[-1]
+    pmax = page_table.shape[1]
+    table = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, npages - 1)
+    lens = jnp.maximum(jnp.asarray(seq_lens, jnp.int32), 1)
+
+    def pool_spec(width):
+        def imap(i, j, p, tbl, ln):
+            # clamp skipped steps to the last valid page (ln is
+            # wrapper-clamped >= 1, so valid >= 1): an unchanged block
+            # index means the pipeline elides the DMA entirely
+            valid = pl.cdiv(ln[i], ps)
+            return (tbl[i, jnp.minimum(p, valid - 1)], 0, j, 0)
+        return pl.BlockSpec((1, ps, 1, width), imap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, p, tbl, ln: (i, j, 0, 0)),
+            pool_spec(ed), pool_spec(nb), pool_spec(ed), pool_spec(nb),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, p, tbl, ln: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, p, tbl, ln: (i, j, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),  # running max m
+            pltpu.VMEM((g, 1), jnp.float32),  # running denominator l
+            pltpu.VMEM((g, d), jnp.float32),  # rescaled partial output
+        ],
+    )
+    kernel = functools.partial(
+        _mx_attn_fused_kernel, page_size=ps, fmt_name=fmt_name,
+        block_size=block_size, softcap=softcap, window=window)
+    out, visits = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(table, lens, q, ke_pool, ks_pool, ve_pool, vs_pool)
+    return (out, visits) if debug_visits else out

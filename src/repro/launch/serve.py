@@ -54,6 +54,11 @@ def main(argv=None):
                          "requests (exercises the prefix cache)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix-tree prompt sharing")
+    ap.add_argument("--decode-kernel", default="fused",
+                    choices=["fused", "einsum"],
+                    help="paged decode attention path: single-pass fused "
+                         "Pallas flash-decode (default) or the reference "
+                         "gather-and-dequantize einsum")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -71,7 +76,8 @@ def main(argv=None):
     serve_cfg = ServeConfig(
         max_seq=max_seq, temperature=args.temperature,
         max_slots=args.max_slots or args.batch, page_size=args.page_size,
-        prefix_cache=not args.no_prefix_cache)
+        prefix_cache=not args.no_prefix_cache,
+        decode_kernel=args.decode_kernel)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
     rng = np.random.default_rng(0)
 

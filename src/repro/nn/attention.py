@@ -47,6 +47,11 @@ class AttnConfig:
     # paged serving: don't clamp the cache to the window (no ring wraparound;
     # decode slot == absolute position, so caches map 1:1 onto page pools)
     no_ring: bool = False
+    # paged decode path: "einsum" gathers + dequantizes the padded table in
+    # HBM (reference oracle); "fused" runs the single-pass Pallas
+    # flash-decode kernel over the page table (MX pools; wide bf16 pools
+    # fall back to the einsum gather — there is nothing to dequantize)
+    decode_kernel: str = "einsum"
 
 
 def init(key, cfg: AttnConfig):
@@ -322,10 +327,25 @@ def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
     ``page_rows`` (B, P) holds each slot's page ids (-1 = unallocated).
     Each slot writes its new token's K/V at page ``pos // PS`` slot
     ``pos % PS`` (inactive slots route to an out-of-bounds page and are
-    dropped), then attends over its gathered pages. Write-then-read order,
+    dropped), then attends over its pages. Write-then-read order,
     quantization, and dequantization are shared with the fixed-slot path,
     which is what keeps continuous-batching outputs token-identical.
+
+    Two attention paths, selected by ``cfg.decode_kernel``:
+
+      * ``"einsum"`` — gather the *entire padded* table out of the pool,
+        dequantize it to wide ``compute_dtype`` in HBM, and run the masked
+        einsum attention. Cost scales with the table width (max_pages),
+        not the tokens actually resident; kept as the reference oracle.
+      * ``"fused"`` — single Pallas kernel (`mx_attention_decode_fused`):
+        walk the page table via scalar prefetch, dequantize each compact
+        page tile in-register, accumulate the softmax online. No gathered
+        copy (wide or compact) is ever materialized and pages past
+        ``ceil(seq_len / page_size)`` are skipped. Wide bf16 pools fall
+        back to the einsum gather (there is nothing to dequantize).
     """
+    if cfg.decode_kernel not in ("einsum", "fused"):
+        raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
     b = x.shape[0]
     h, d = cfg.num_heads, cfg.head_dim
     pos = jnp.asarray(pos, jnp.int32)
@@ -356,16 +376,28 @@ def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
         pool["v_scales"] = pool["v_scales"].at[page, slot].set(
             vq.scales[:, 0], mode="drop")
 
-    idx = jnp.clip(page_rows, 0, npages - 1)  # (B, P); garbage rows masked
+    if cfg.decode_kernel == "fused" and "k_elems" in pool:
+        from repro.kernels import mx_attention_decode_fused
 
-    def gather(leaf):
-        return leaf[idx].reshape(b, pmax * ps, *leaf.shape[2:])
+        kvh = cfg.num_kv_heads
+        qk = q[:, 0].reshape(b, kvh, h // kvh, d)  # (B, KVH, G, D)
+        out = mx_attention_decode_fused(
+            qk, pool["k_elems"], pool["k_scales"], pool["v_elems"],
+            pool["v_scales"], page_rows, pos + 1,
+            fmt_name=quant.fmt, block_size=min(quant.block_size, d),
+            softcap=cfg.softcap, window=cfg.window)
+        out = out.reshape(b, 1, h, d).astype(compute_dtype)
+    else:
+        idx = jnp.clip(page_rows, 0, npages - 1)  # (B, P); garbage masked
 
-    view = {key: gather(leaf) for key, leaf in pool.items()}
-    kc, vc = _read_cache(view, quant, cfg, compute_dtype)
-    t = kc.shape[1]
-    kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-    out = _attend(q, kc, vc, posv, kpos, cfg)
+        def gather(leaf):
+            return leaf[idx].reshape(b, pmax * ps, *leaf.shape[2:])
+
+        view = {key: gather(leaf) for key, leaf in pool.items()}
+        kc, vc = _read_cache(view, quant, cfg, compute_dtype)
+        t = kc.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        out = _attend(q, kc, vc, posv, kpos, cfg)
     y = linear.apply(params["wo"], out.reshape(b, 1, h * d), quant,
                      compute_dtype, tp_on="in")
     return y, pool

@@ -26,6 +26,7 @@ def _attn_cfg(cfg: ModelConfig, bd: BlockDef) -> attention.AttnConfig:
         softcap=cfg.attn_softcap,
         query_chunk=cfg.query_chunk,
         no_ring=cfg.serve_full_cache,
+        decode_kernel=cfg.decode_kernel,
     )
 
 

@@ -84,6 +84,11 @@ class ModelConfig:
     # paged serving: allocate full-length (non-ring) KV caches so prefill
     # caches transfer 1:1 into page pools (window masking still applies)
     serve_full_cache: bool = False
+    # paged decode attention path: "einsum" (gather + dequantize the padded
+    # table in HBM — the reference oracle) or "fused" (single-pass Pallas
+    # flash-decode over the page table; work scales with resident tokens).
+    # The serve engine flips this to "fused" by default (ServeConfig).
+    decode_kernel: str = "einsum"
     # bookkeeping for the assignment sheet
     source: str = ""
     sub_quadratic: bool = False  # eligible for long_500k

@@ -190,7 +190,9 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
 
     Returns (logits (B, 1, V), new_cache). Inactive slots (page_rows all
     -1) compute garbage that never lands: their KV writes are dropped and
-    the host ignores their logits.
+    the host ignores their logits. Attention runs the path named by
+    ``cfg.decode_kernel`` ("einsum" reference gather, or the single-pass
+    "fused" Pallas flash-decode kernel the serve engine defaults to).
     """
     x = _embed_inputs(params, cfg, tokens)
     b = x.shape[0]

@@ -21,6 +21,20 @@ step's HBM traffic is dominated by the KV cache; MX storage cuts it ~2x
 (fp8+E8M0 vs bf16) and paging cuts the *allocated* footprint to what is
 actually resident, so ragged, churning traffic stops paying for max_seq
 rectangles. ``benchmarks/serve_throughput.py`` measures both.
+
+The decode step runs the single-pass fused Pallas flash-decode kernel by
+default (``ServeConfig.decode_kernel="fused"``): attention walks the page
+table in-kernel, dequantizes compact MX tiles in-register, and skips
+unallocated pages, so per-step attention *work* also scales with resident
+tokens — not just the footprint. ``decode_kernel="einsum"`` is the escape
+hatch back to the gather-and-dequantize reference path (what wide bf16
+pools fall back to, and what ``benchmarks/decode_attention.py`` compares
+against). Numerics caveat: the fused kernel keeps the softmax in f32
+while the einsum path rounds probabilities to bf16 before the value
+matmul, so across-path logits differ at bf16-rounding level and a greedy
+step whose top-2 gap sits inside that band can flip (README §Serving);
+within a path, determinism and the paging machinery's exactness
+(snapshot/restore, COW, prefix sharing) are unchanged.
 """
 from __future__ import annotations
 
@@ -58,6 +72,11 @@ class ServeConfig:
     # admission: how far past a stuck queue head to scan for a request
     # that fits (1 = strict FCFS)
     admit_window: int = 4
+    # paged decode attention: "fused" (default) runs the single-pass Pallas
+    # flash-decode kernel over the page table — per-step work scales with
+    # resident tokens; "einsum" is the escape hatch back to the reference
+    # gather-and-dequantize path (also what wide bf16 pools fall back to)
+    decode_kernel: str = "fused"
 
 
 def _sample(logits, key, temperature: float):
@@ -116,11 +135,19 @@ class ContinuousBatchingEngine:
         if cfg.num_codebooks > 1:
             raise NotImplementedError(
                 "continuous batching with codebook heads is a follow-on")
+        if serve_cfg.decode_kernel not in ("einsum", "fused"):
+            raise ValueError(
+                f"unknown decode_kernel {serve_cfg.decode_kernel!r} "
+                "(expected 'fused' or 'einsum')")
         self.params = params
         self.cfg = cfg
         # full-length (non-ring) prefill caches: slot == absolute position,
         # so a prompt cache reshapes exactly into its pages
         self.cfg_prefill = cfg.replace(serve_full_cache=True)
+        # the decode step runs the fused flash-decode kernel by default;
+        # ServeConfig.decode_kernel="einsum" is the escape hatch back to
+        # the gather-and-dequantize reference path
+        self.cfg_decode = cfg.replace(decode_kernel=serve_cfg.decode_kernel)
         self.serve_cfg = serve_cfg
         ps = serve_cfg.page_size
         pages_per_slot = kv_cache.pages_for(serve_cfg.max_seq, ps)
@@ -151,7 +178,7 @@ class ContinuousBatchingEngine:
         cpu = jax.default_backend() == "cpu"
         self._decode = jax.jit(
             lambda p, c, tok, rows, pos: model.decode_step_paged(
-                p, cfg, c, tok, rows, pos),
+                p, self.cfg_decode, c, tok, rows, pos),
             donate_argnums=() if cpu else (1,))
         self._install = jax.jit(
             lambda c, pf, slot, ids: kv_cache.install_prefill(

@@ -151,6 +151,48 @@ def test_ragged_churn_with_preemption_token_identical():
         np.testing.assert_array_equal(out[rid], fixed.generate(p[None], m)[0])
 
 
+@pytest.mark.parametrize("decode_kernel", ["fused", "einsum"])
+def test_decode_kernel_paths_token_identical_under_churn(decode_kernel):
+    """Greedy-equivalence regression for the kernel-path switch: the fused
+    flash-decode path (the engine default) and the einsum reference path
+    must both stay token-identical to the fixed-slot engine under the
+    churn + swap-preemption workload. The other scenarios in this file and
+    tests/test_prefix_cache.py run the default ("fused") path, so
+    prefix-sharing coverage rides on them.
+
+    Diagnosis note: fused-vs-fixed identity holds on these pinned seeds
+    but is bf16-rounding-level across numerics families (README
+    §Serving). If the fused case alone starts failing with a *small*
+    top-2 logit gap after a JAX/XLA upgrade, suspect f32 reduction-order
+    drift, not the paging machinery — the einsum case is the bit-matched
+    control that isolates which."""
+    assert ServeConfig().decode_kernel == "fused", \
+        "the serve engine must default to the fused kernel path"
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, 128, (s,)).astype(np.int32), m)
+            for s, m in [(4, 14), (4, 14), (7, 5), (3, 8)]]
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=20, max_slots=2, page_size=4, num_pages=7,
+        decode_kernel=decode_kernel))
+    assert eng.cfg_decode.decode_kernel == decode_kernel
+    ids = [eng.submit(p, m) for p, m in reqs]
+    out = eng.run()
+    assert eng.scheduler.preemptions >= 1, "pool sizing must force a swap"
+    fixed = FixedSlotEngine(params, cfg, ServeConfig(max_seq=24))
+    for rid, (p, m) in zip(ids, reqs):
+        np.testing.assert_array_equal(out[rid], fixed.generate(p[None], m)[0])
+
+
+def test_engine_rejects_unknown_decode_kernel():
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=24, decode_kernel="flash3"))
+
+
 def test_eos_recycles_mid_stream():
     """A request hitting eos_id frees its slot for a queued request; output
     ends at (and includes) the eos token."""
