@@ -11,7 +11,7 @@ import traceback
 
 from . import (block_size_sweep, common, decode_attention, e2e_step,
                emulation_breakdown, format_comparison, serve_prefix,
-               serve_throughput, speedup, throughput_sweep)
+               serve_throughput, spec_decode, speedup, throughput_sweep)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -23,6 +23,7 @@ SUITES = [
     ("serve_throughput", serve_throughput.run),
     ("serve_prefix", serve_prefix.run),
     ("decode_attention", decode_attention.run),
+    ("spec_decode", spec_decode.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -31,6 +32,7 @@ SUITES = [
 _JSON_FILES = {
     "BENCH_serve.json": ("serve_throughput", "serve_prefix"),
     "BENCH_decode.json": ("decode_attention",),
+    "BENCH_spec.json": ("spec_decode",),
 }
 
 

@@ -11,11 +11,13 @@
 from . import ref
 from .mx_attention import (gather_kv_pages, mx_attention_decode,
                            mx_attention_decode_fused,
-                           mx_attention_decode_paged)
+                           mx_attention_decode_paged,
+                           mx_attention_verify_fused)
 from .mx_matmul import mx_matmul_dgrad
 from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
 __all__ = ["gather_kv_pages", "mx_attention_decode",
            "mx_attention_decode_fused", "mx_attention_decode_paged",
+           "mx_attention_verify_fused",
            "mx_matmul", "mx_matmul_dgrad", "mx_matmul_trainable",
            "quantize_pallas", "ref"]

@@ -21,18 +21,24 @@ Three entry points, two cache layouts:
     contiguous kernel bit-for-bit, which is what makes paged-vs-contiguous
     equivalence exact rather than approximate. Kept as the bit-exactness
     oracle; the engine no longer runs it.
-  * **paged, single-pass fused** (`mx_attention_decode_fused`): the serve
-    engine's hot path. One kernel, grid (B, KVH, num_kv_pages) with the
-    page dimension innermost: the BlockSpec index maps read the
-    scalar-prefetched page table, so each grid step DMAs one *compact*
-    pool page tile straight into VMEM, dequantizes it in-register, and
-    folds it into a flash-style online softmax (running max / rescaled
-    partial sums in VMEM scratch). The gathered cache never exists — not
-    wide, not even compact — and ``pl.when`` skips every page tile past
+  * **paged, single-pass fused** (`mx_attention_decode_fused` /
+    `mx_attention_verify_fused`): the serve engine's hot path. One
+    kernel, grid (B, KVH, num_kv_pages) with the page dimension
+    innermost: the BlockSpec index maps read the scalar-prefetched page
+    table, so each grid step DMAs one *compact* pool page tile straight
+    into VMEM, dequantizes it in-register, and folds it into a
+    flash-style online softmax (running max / rescaled partial sums in
+    VMEM scratch). The gathered cache never exists — not wide, not even
+    compact — and ``pl.when`` skips every page tile past
     ``ceil(seq_len / page_size)`` (the index map also re-points skipped
     steps at the last valid page, so the pipeline's DMA is elided by the
     revisit rule). Per-step work is proportional to *resident* tokens,
-    not the padded table width.
+    not the padded table width. The verify variant runs Tq > 1 query
+    tokens (speculative decoding's batched multi-token verify) through
+    the *same* page walk with per-row causal intra-chunk masking — one
+    tile DMA + dequant now feeds K+1 tokens of attention, the serving
+    analogue of the paper's keep-the-MX-dataflow-dense argument; decode
+    is its Tq == 1 case.
 
 Per grid cell (batch b, kv-head h): load the query group (G, D) wide, the
 K/V cache tiles compact, fold scales in VREGs, run the (G, ·) logits
@@ -267,7 +273,7 @@ def mx_attention_decode_paged(q, ke_pool, ks_pool, ve_pool, vs_pool,
 def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
                           vs_ref, o_ref, visits_ref, m_ref, l_ref, acc_ref,
                           *, page_size: int, fmt_name: str, block_size: int,
-                          softcap, window):
+                          softcap, window, num_q: int, group: int):
     """One page tile of one (batch, kv-head) cell, flash-style.
 
     Grid is (B, KVH, P) with P innermost ("arbitrary"), so the VMEM
@@ -278,6 +284,14 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
     dequant nor MXU work, and their DMA is elided because the index map
     re-points them at the last valid page (unchanged block index = no
     refetch). The wide K/V tile exists only in VREGs.
+
+    ``num_q`` query tokens per sequence share the page walk (speculative
+    verify): the query tile holds ``num_q * group`` rows, rows
+    ``[i*group, (i+1)*group)`` belonging to the query at absolute
+    position ``seq_len - num_q + i``, and the causal mask is per-row —
+    query ``i`` sees keys ``kpos <= seq_len - num_q + i`` (intra-chunk
+    causality), so drafted tokens never attend to their own successors.
+    ``num_q == 1`` is exactly the decode kernel this generalizes.
     """
     i = pl.program_id(0)
     p = pl.program_id(2)
@@ -290,7 +304,7 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
         visits_ref[0, 0, 0] = 0
 
-    seq_len = lens_ref[i]  # wrapper-clamped to >= 1
+    seq_len = lens_ref[i]  # wrapper-clamped to >= num_q
     valid_pages = pl.cdiv(seq_len, page_size)
 
     @pl.when(p < valid_pages)
@@ -298,7 +312,7 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         # the skip predicate's audit trail: counts page bodies actually
         # executed, so tests/benchmarks can assert work == resident pages
         visits_ref[0, 0, 0] += 1
-        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        q = q_ref[0, 0].astype(jnp.float32)  # (num_q * G, D)
         k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
                           fmt_name, block_size)  # (PS, D)
         v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
@@ -306,22 +320,26 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         d = q.shape[-1]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * (d ** -0.5)  # (G, PS)
+            preferred_element_type=jnp.float32) * (d ** -0.5)  # (R, PS)
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
         kpos = p * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, page_size), 1)
-        pos = seq_len - 1
-        mask = kpos <= pos
+        rows = num_q * group
+        # row r belongs to query index r // group; query i sits at
+        # absolute position seq_len - num_q + i
+        qpos = seq_len - num_q + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, 1), 0) // group
+        mask = kpos <= qpos  # (R, PS)
         if window is not None:
-            mask &= kpos > pos - window
+            mask &= kpos > qpos - window
         s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]  # (G, 1)
+        m_prev = m_ref[...]  # (R, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         # the explicit mask (not just exp(NEG_INF - m)) guards the
         # all-masked tile: there m_new == NEG_INF and the difference is 0
-        probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (G, PS)
+        probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (R, PS)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
                                                   keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -334,31 +352,36 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
 
 
-def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
+def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
                               page_table, seq_lens, *,
                               fmt_name: str = "fp8_e4m3",
                               block_size: int = 32, softcap=None,
                               window=None, debug_visits: bool = False,
                               interpret: bool | None = None):
-    """Single-pass fused paged decode attention (the serve-engine hot path).
+    """Single-pass fused paged attention for ``Tq >= 1`` query tokens.
 
-    One Pallas kernel with grid (B, KVH, P): the BlockSpec index maps read
-    the scalar-prefetched page table, each grid step dequantizes one
-    compact fp8/fp4 + E8M0 pool page tile in-register, and the softmax is
-    accumulated online (flash-decoding) in VMEM scratch — no gathered
-    cache, wide or compact, ever exists in HBM, and page tiles at or past
-    ``ceil(seq_len / page_size)`` are skipped, so per-step work scales
-    with resident tokens rather than the padded table.
+    The speculative-decoding verify kernel: the draft tokens' K/V have
+    already been written into the sequence's pages, and all ``Tq``
+    queries — the last accepted token plus the drafts, at absolute
+    positions ``seq_len - Tq .. seq_len - 1`` — share one page walk.
+    One Pallas kernel with grid (B, KVH, P): the BlockSpec index maps
+    read the scalar-prefetched page table, each grid step dequantizes one
+    compact fp8/fp4 + E8M0 pool page tile in-register exactly once for
+    the whole chunk (this is the amortization speculative decoding buys:
+    K+1 tokens of attention per page-tile DMA + dequant instead of one),
+    and the softmax is accumulated online per query row in VMEM scratch.
+    Causal intra-chunk masking is per row: query ``i`` attends keys
+    ``kpos <= seq_len - Tq + i``, so a draft never sees its successors
+    and row ``i``'s output is exactly what a one-token decode at position
+    ``seq_len - Tq + i`` would compute.
 
-    q: (B, KVH, G, D); pools (NP, PS, KVH, ED/NB); page_table (B, P) i32
-    (entries < 0 = unallocated, clamped — rows past ``seq_lens`` never
-    contribute); seq_lens (B,) valid cache rows per sequence (the query
-    sits at seq_len - 1; inactive rows may pass 0, clamped to 1 so the
-    denominator stays finite, matching the einsum path's pos=0 garbage
-    rows whose logits the host ignores). ``window`` masks keys at
-    ``kpos <= pos - window`` (sliding-window layers). Returns
-    (B, KVH, G, D) f32; matches the two-pass/einsum f32 reference to
-    online-softmax rounding (~1e-7, well inside 1e-5).
+    q: (B, KVH, Tq, G, D); pools (NP, PS, KVH, ED/NB); page_table (B, P)
+    i32 (entries < 0 = unallocated, clamped); seq_lens (B,) valid cache
+    rows per sequence *including* the chunk's own tokens (inactive rows
+    may pass 0, clamped to Tq so every query position stays valid —
+    garbage rows whose logits the host ignores). ``window`` masks keys
+    at ``kpos <= qpos - window`` per query row. Returns
+    (B, KVH, Tq, G, D) f32.
 
     ``debug_visits=True`` additionally returns a (B, KVH, 1) i32 count of
     page bodies actually executed per cell — the kernel always maintains
@@ -371,19 +394,21 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     _check_fmt(ke_pool, fmt_name)
-    b, kvh, g, d = q.shape
+    b, kvh, tq, g, d = q.shape
+    rows = tq * g
     npages, ps = ke_pool.shape[0], ke_pool.shape[1]
     ed = ke_pool.shape[-1]
     nb = ks_pool.shape[-1]
     pmax = page_table.shape[1]
     table = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, npages - 1)
-    lens = jnp.maximum(jnp.asarray(seq_lens, jnp.int32), 1)
+    lens = jnp.maximum(jnp.asarray(seq_lens, jnp.int32), tq)
+    qr = q.reshape(b, kvh, rows, d)
 
     def pool_spec(width):
         def imap(i, j, p, tbl, ln):
             # clamp skipped steps to the last valid page (ln is
-            # wrapper-clamped >= 1, so valid >= 1): an unchanged block
-            # index means the pipeline elides the DMA entirely
+            # wrapper-clamped >= Tq >= 1, so valid >= 1): an unchanged
+            # block index means the pipeline elides the DMA entirely
             valid = pl.cdiv(ln[i], ps)
             return (tbl[i, jnp.minimum(p, valid - 1)], 0, j, 0)
         return pl.BlockSpec((1, ps, 1, width), imap)
@@ -392,31 +417,75 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
         num_scalar_prefetch=2,
         grid=(b, kvh, pmax),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, j, p, tbl, ln: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, tbl, ln: (i, j, 0, 0)),
             pool_spec(ed), pool_spec(nb), pool_spec(ed), pool_spec(nb),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, j, p, tbl, ln: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, tbl, ln: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, 1), lambda i, j, p, tbl, ln: (i, j, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),  # running max m
-            pltpu.VMEM((g, 1), jnp.float32),  # running denominator l
-            pltpu.VMEM((g, d), jnp.float32),  # rescaled partial output
+            pltpu.VMEM((rows, 1), jnp.float32),  # running max m
+            pltpu.VMEM((rows, 1), jnp.float32),  # running denominator l
+            pltpu.VMEM((rows, d), jnp.float32),  # rescaled partial output
         ],
     )
     kernel = functools.partial(
         _mx_attn_fused_kernel, page_size=ps, fmt_name=fmt_name,
-        block_size=block_size, softcap=softcap, window=window)
+        block_size=block_size, softcap=softcap, window=window,
+        num_q=tq, group=g)
     out, visits = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, rows, d), jnp.float32),
             jax.ShapeDtypeStruct((b, kvh, 1), jnp.int32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(table, lens, q, ke_pool, ks_pool, ve_pool, vs_pool)
+    )(table, lens, qr, ke_pool, ks_pool, ve_pool, vs_pool)
+    out = out.reshape(b, kvh, tq, g, d)
     return (out, visits) if debug_visits else out
+
+
+def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
+                              page_table, seq_lens, *,
+                              fmt_name: str = "fp8_e4m3",
+                              block_size: int = 32, softcap=None,
+                              window=None, debug_visits: bool = False,
+                              interpret: bool | None = None):
+    """Single-pass fused paged decode attention (the serve-engine hot path).
+
+    The ``Tq == 1`` case of :func:`mx_attention_verify_fused` (one kernel
+    serves both paths — decode is just a verify chunk of one): the
+    BlockSpec index maps read the scalar-prefetched page table, each grid
+    step dequantizes one compact fp8/fp4 + E8M0 pool page tile
+    in-register, and the softmax is accumulated online (flash-decoding)
+    in VMEM scratch — no gathered cache, wide or compact, ever exists in
+    HBM, and page tiles at or past ``ceil(seq_len / page_size)`` are
+    skipped, so per-step work scales with resident tokens rather than
+    the padded table.
+
+    q: (B, KVH, G, D); pools (NP, PS, KVH, ED/NB); page_table (B, P) i32
+    (entries < 0 = unallocated, clamped — rows past ``seq_lens`` never
+    contribute); seq_lens (B,) valid cache rows per sequence (the query
+    sits at seq_len - 1; inactive rows may pass 0, clamped to 1 so the
+    denominator stays finite, matching the einsum path's pos=0 garbage
+    rows whose logits the host ignores). ``window`` masks keys at
+    ``kpos <= pos - window`` (sliding-window layers). Returns
+    (B, KVH, G, D) f32; matches the two-pass/einsum f32 reference to
+    online-softmax rounding (~1e-7, well inside 1e-5). ``debug_visits``
+    as in :func:`mx_attention_verify_fused`.
+    """
+    res = mx_attention_verify_fused(
+        q[:, :, None], ke_pool, ks_pool, ve_pool, vs_pool, page_table,
+        seq_lens, fmt_name=fmt_name, block_size=block_size,
+        softcap=softcap, window=window, debug_visits=debug_visits,
+        interpret=interpret)
+    if debug_visits:
+        out, visits = res
+        return out[:, :, 0], visits
+    return res[:, :, 0]

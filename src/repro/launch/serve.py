@@ -59,7 +59,18 @@ def main(argv=None):
                     help="paged decode attention path: single-pass fused "
                          "Pallas flash-decode (default) or the reference "
                          "gather-and-dequantize einsum")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="greedy speculative decoding: draft K tokens per "
+                         "step (prompt-lookup n-gram, no second model) and "
+                         "verify them in one batched multi-token pass over "
+                         "the paged MX cache — token-identical output, "
+                         "fewer steps")
+    ap.add_argument("--num-draft-tokens", type=int, default=4,
+                    help="drafts per sequence per verify step (K)")
     args = ap.parse_args(argv)
+    if args.spec_decode and args.engine != "continuous":
+        ap.error("--spec-decode requires --engine continuous (the "
+                 "fixed-slot reference engine has no verify path)")
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -73,11 +84,16 @@ def main(argv=None):
             quantize_kv_cache=args.quantize_kv))
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
     max_seq = args.shared_prefix + args.prompt_len + args.new_tokens
+    if args.spec_decode:
+        # room for the worst-case verify window near the end of a request
+        max_seq += args.num_draft_tokens
     serve_cfg = ServeConfig(
         max_seq=max_seq, temperature=args.temperature,
         max_slots=args.max_slots or args.batch, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
-        decode_kernel=args.decode_kernel)
+        decode_kernel=args.decode_kernel,
+        spec_decode=args.spec_decode,
+        num_draft_tokens=args.num_draft_tokens)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
     rng = np.random.default_rng(0)
 
@@ -104,6 +120,11 @@ def main(argv=None):
                  stats["peak_paged_bytes"] / 1024, stats["preemptions"],
                  stats["prefix_hit_rate"], stats["prefill_tokens_computed"],
                  stats["prompt_tokens"])
+        if args.spec_decode:
+            log.info("speculative decode: %.2f accepted tokens/step over "
+                     "%d verify steps (draft acceptance %.2f)",
+                     stats["accepted_per_step"], stats["spec_steps"],
+                     stats["draft_acceptance_rate"])
         return results
     # same workload shape as the continuous branch (minus raggedness): a
     # shared head plus per-request tails, so --engine A/Bs compare like

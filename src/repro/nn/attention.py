@@ -272,15 +272,18 @@ def gather_page_kv(pool, page_ids, cfg: AttnConfig, quant: QuantConfig,
 
 def _project_decode_qkv(params, x, posv, cfg: AttnConfig,
                         quant: QuantConfig, compute_dtype):
-    """Decode prologue shared by the fixed-slot and paged paths: QKV
-    projection + RoPE at per-row positions posv (B, 1). Keeping this (and
-    ``_quantize_kv_token`` / ``_read_cache``) single-sourced is what makes
-    continuous-batching outputs token-identical to the fixed-slot path."""
-    b = x.shape[0]
+    """Decode prologue shared by the fixed-slot, paged, and speculative
+    verify paths: QKV projection + RoPE at per-token positions posv
+    (B, S) for x (B, S, d_model) — S == 1 for one-token decode, S == Tq
+    for a verify chunk. Every op is token-row independent, and keeping
+    this (and ``_quantize_kv_token`` / ``_read_cache``) single-sourced is
+    what makes continuous-batching and speculative outputs
+    token-identical to the fixed-slot path."""
+    b, s = x.shape[:2]
     h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = linear.apply(params["wq"], x, quant, compute_dtype).reshape(b, 1, h, d)
-    k = linear.apply(params["wk"], x, quant, compute_dtype).reshape(b, 1, kvh, d)
-    v = linear.apply(params["wv"], x, quant, compute_dtype).reshape(b, 1, kvh, d)
+    q = linear.apply(params["wq"], x, quant, compute_dtype).reshape(b, s, h, d)
+    k = linear.apply(params["wk"], x, quant, compute_dtype).reshape(b, s, kvh, d)
+    v = linear.apply(params["wv"], x, quant, compute_dtype).reshape(b, s, kvh, d)
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
     return q, k, v
@@ -343,50 +346,90 @@ def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
         copy (wide or compact) is ever materialized and pages past
         ``ceil(seq_len / page_size)`` are skipped. Wide bf16 pools fall
         back to the einsum gather (there is nothing to dequantize).
+
+    Implemented as the Tq == 1 case of :func:`apply_verify_paged` (one
+    shared body, exactly as the kernel layer delegates decode to the
+    verify kernel) — a fix to either path cannot miss the other, which
+    the spec-vs-plain token-identity guarantee depends on.
+    """
+    return apply_verify_paged(params, x, pool, page_rows, pos, cfg, quant,
+                              compute_dtype)
+
+
+def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
+                       quant: QuantConfig, compute_dtype=jnp.bfloat16):
+    """Multi-token paged verify: x (B, Tq, d_model), pos (B,).
+
+    The speculative-decoding verify step: each slot feeds ``Tq`` tokens —
+    the pending sampled token plus ``Tq - 1`` drafts — at absolute
+    positions ``pos .. pos + Tq - 1``. All Tq tokens' K/V are quantized
+    and written into their pages first (page ``p // PS``, slot
+    ``p % PS``; inactive slots route out-of-bounds and are dropped), then
+    every query attends over the pages with *per-row causal masking*:
+    query ``i`` sees keys at positions ``<= pos + i`` only, so a draft
+    token's attention — and therefore its logits and its K/V, should it
+    be accepted — is bit-for-bit what a one-token decode at that position
+    would have produced. Rejected drafts leave K/V rows beyond the
+    accepted point; those rows are dead by masking (the host truncates
+    the sequence's position, nothing is zeroed) and the next write at
+    that position overwrites them.
+
+    Tq == 1 degenerates to :func:`apply_decode_paged`'s dataflow: the
+    projection/RoPE/cache-write path is literally shared
+    (``_project_decode_qkv`` / ``_quantize_kv_token``), and every op in
+    it is token-row independent — which is what keeps speculative output
+    token-identical to non-speculative decode.
+
+    Two attention paths, selected by ``cfg.decode_kernel`` exactly as in
+    :func:`apply_decode_paged`: the fused ``mx_attention_verify_fused``
+    kernel (one page walk feeds all Tq queries) or the einsum gather
+    reference (also the wide-bf16-pool fallback).
     """
     if cfg.decode_kernel not in ("einsum", "fused"):
         raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
-    b = x.shape[0]
-    h, d = cfg.num_heads, cfg.head_dim
+    b, tq, _ = x.shape
+    h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     pos = jnp.asarray(pos, jnp.int32)
-    posv = pos[:, None]  # (B, 1)
+    posv = pos[:, None] + jnp.arange(tq, dtype=jnp.int32)[None]  # (B, Tq)
     q, k, v = _project_decode_qkv(params, x, posv, cfg, quant, compute_dtype)
 
     lead = pool["k" if "k" in pool else "k_elems"]
     npages, ps = lead.shape[0], lead.shape[1]
     pmax = page_rows.shape[1]
-    page = jnp.take_along_axis(page_rows, (pos // ps)[:, None], axis=1)[:, 0]
+    widx = jnp.clip(posv // ps, 0, pmax - 1)  # (B, Tq) page-table columns
+    page = jnp.take_along_axis(page_rows, widx, axis=1)
     page = jnp.where(page < 0, npages, page)  # OOB: dropped by mode="drop"
-    slot = pos % ps
+    slot = posv % ps
 
     pool = dict(pool)
     if "k" in pool:
         pool["k"] = pool["k"].at[page, slot].set(
-            k[:, 0].astype(pool["k"].dtype), mode="drop")
+            k.astype(pool["k"].dtype), mode="drop")
         pool["v"] = pool["v"].at[page, slot].set(
-            v[:, 0].astype(pool["v"].dtype), mode="drop")
+            v.astype(pool["v"].dtype), mode="drop")
     else:
         kq, vq = _quantize_kv_token(k, v, cfg, quant)
         pool["k_elems"] = pool["k_elems"].at[page, slot].set(
-            kq.elements[:, 0], mode="drop")
+            kq.elements, mode="drop")
         pool["k_scales"] = pool["k_scales"].at[page, slot].set(
-            kq.scales[:, 0], mode="drop")
+            kq.scales, mode="drop")
         pool["v_elems"] = pool["v_elems"].at[page, slot].set(
-            vq.elements[:, 0], mode="drop")
+            vq.elements, mode="drop")
         pool["v_scales"] = pool["v_scales"].at[page, slot].set(
-            vq.scales[:, 0], mode="drop")
+            vq.scales, mode="drop")
 
     if cfg.decode_kernel == "fused" and "k_elems" in pool:
-        from repro.kernels import mx_attention_decode_fused
+        from repro.kernels import mx_attention_verify_fused
 
-        kvh = cfg.num_kv_heads
-        qk = q[:, 0].reshape(b, kvh, h // kvh, d)  # (B, KVH, G, D)
-        out = mx_attention_decode_fused(
+        # heads split (KVH major, G minor) as the decode path does
+        qk = q.reshape(b, tq, kvh, h // kvh, d).transpose(0, 2, 1, 3, 4)
+        out = mx_attention_verify_fused(
             qk, pool["k_elems"], pool["k_scales"], pool["v_elems"],
-            pool["v_scales"], page_rows, pos + 1,
+            pool["v_scales"], page_rows, pos + tq,
             fmt_name=quant.fmt, block_size=min(quant.block_size, d),
             softcap=cfg.softcap, window=cfg.window)
-        out = out.reshape(b, 1, h, d).astype(compute_dtype)
+        out = out.transpose(0, 2, 1, 3, 4).reshape(
+            b, tq, h, d).astype(compute_dtype)
     else:
         idx = jnp.clip(page_rows, 0, npages - 1)  # (B, P); garbage masked
 
@@ -398,7 +441,7 @@ def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
         t = kc.shape[1]
         kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
         out = _attend(q, kc, vc, posv, kpos, cfg)
-    y = linear.apply(params["wo"], out.reshape(b, 1, h * d), quant,
+    y = linear.apply(params["wo"], out.reshape(b, tq, h * d), quant,
                      compute_dtype, tp_on="in")
     return y, pool
 

@@ -239,6 +239,28 @@ def apply_decode_paged(params, x, cache, page_rows, pos, bd: BlockDef,
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
+def apply_verify_paged(params, x, cache, page_rows, pos, bd: BlockDef,
+                       cfg: ModelConfig):
+    """Speculative multi-token verify: x (B, Tq, d_model), pos (B,).
+
+    Attention-only: a rejected draft's K/V rows are dead by position
+    masking (page-exact rollback), but recurrent state has no position
+    axis to mask — rolling it back would need per-step state snapshots,
+    so the engine gates speculation to attention-only models.
+    """
+    if bd.mixer != "attn":
+        raise NotImplementedError(
+            f"speculative verify requires attention mixers, got "
+            f"{bd.mixer!r} (recurrent state cannot be rolled back "
+            "page-exactly — it has no position axis to truncate)")
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
+    h, cache = attention.apply_verify_paged(
+        params["mixer"], h, cache, page_rows, pos, _attn_cfg(cfg, bd),
+        quant, dt)
+    return _decode_tail(params, x, h, bd, cfg), cache
+
+
 def _attn_prefill_qkv(mixer_params, h, positions, acfg, quant, dt):
     """Shared prefill prologue: QKV projection + RoPE at ``positions``.
 

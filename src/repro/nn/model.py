@@ -226,6 +226,57 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     return logits, cache
 
 
+def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
+                      pos):
+    """Speculative-decoding verify: tokens (B, Tq), page_rows (B, P),
+    pos (B,) per-slot position of each row's *first* token.
+
+    Feeds each slot's pending sampled token plus its Tq - 1 drafts in
+    one batched pass: K/V for all Tq tokens land in the slot's pages
+    (positions pos .. pos + Tq - 1 — the host guarantees those pages
+    exist and are exclusively owned), and per-row causal masking keeps
+    every token's logits exactly what one-at-a-time decode would
+    produce. Returns (logits (B, Tq, V), new_cache); the host accepts a
+    prefix of the drafts by comparing greedy argmaxes and rolls back the
+    rest by simply not advancing the sequence position (rejected rows
+    are dead by masking — nothing is zeroed or copied).
+
+    Tq == 1 is :func:`decode_step_paged`'s dataflow; attention-only
+    models only (see ``blocks.apply_verify_paged``).
+    """
+    x = _embed_inputs(params, cfg, tokens)
+    b = x.shape[0]
+    cache = dict(cache)
+    for j, bd in enumerate(cfg.prologue):
+        x, cache[f"prologue{j}"] = blocks.apply_verify_paged(
+            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
+            pos, bd, cfg)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        new = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = blocks.apply_verify_paged(gparams[f"block{i}"], x,
+                                             gcache[i], page_rows, pos,
+                                             bd, cfg)
+            new.append(c)
+        return x, tuple(new)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        x, cache[f"epilogue{j}"] = blocks.apply_verify_paged(
+            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
+            pos, bd, cfg)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(b, x.shape[1], cfg.num_codebooks,
+                                cfg.vocab_size)
+    return logits, cache
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             max_seq: Optional[int] = None):
     """Process the prompt, build caches. Returns (last-token logits, cache)."""

@@ -1,11 +1,16 @@
 """Serving: MX weights + paged MX KV cache, continuous batching,
-radix-tree prefix caching over ref-counted copy-on-write pages."""
+radix-tree prefix caching over ref-counted copy-on-write pages, and
+greedy speculative decoding with batched multi-token verify."""
 from .engine import (ContinuousBatchingEngine, FixedSlotEngine, ServeConfig,
                      ServeEngine, make_serve_step)
-from .kv_cache import PagePool, pages_for
+from .kv_cache import PagePool, pages_for, pages_spanned
 from .prefix_cache import PrefixCache
 from .scheduler import Request, Scheduler
+from .spec_decode import (Drafter, NgramDrafter, ScriptedDrafter,
+                          greedy_accept)
 
-__all__ = ["ContinuousBatchingEngine", "FixedSlotEngine", "PagePool",
-           "PrefixCache", "Request", "Scheduler", "ServeConfig",
-           "ServeEngine", "make_serve_step", "pages_for"]
+__all__ = ["ContinuousBatchingEngine", "Drafter", "FixedSlotEngine",
+           "NgramDrafter", "PagePool", "PrefixCache", "Request",
+           "Scheduler", "ScriptedDrafter", "ServeConfig", "ServeEngine",
+           "greedy_accept", "make_serve_step", "pages_for",
+           "pages_spanned"]

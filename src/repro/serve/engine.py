@@ -26,7 +26,18 @@ The decode step runs the single-pass fused Pallas flash-decode kernel by
 default (``ServeConfig.decode_kernel="fused"``): attention walks the page
 table in-kernel, dequantizes compact MX tiles in-register, and skips
 unallocated pages, so per-step attention *work* also scales with resident
-tokens — not just the footprint. ``decode_kernel="einsum"`` is the escape
+tokens — not just the footprint.
+
+Speculative decoding (``ServeConfig.spec_decode``) feeds that kernel
+properly: instead of one token per step, each sequence drafts K cheap
+candidates (prompt-lookup n-gram by default — no second model) and one
+batched multi-token verify pass (``model.verify_step_paged`` over the
+Tq > 1 fused kernel) checks them all, amortizing the page walk and
+in-register dequant across the chunk. Greedy acceptance + page-exact
+rollback keep the output token stream identical to non-speculative
+decode for any drafter (see ``spec_decode``).
+
+``decode_kernel="einsum"`` is the escape
 hatch back to the gather-and-dequantize reference path (what wide bf16
 pools fall back to, and what ``benchmarks/decode_attention.py`` compares
 against). Numerics caveat: the fused kernel keeps the softmax in f32
@@ -49,7 +60,7 @@ import numpy as np
 from repro.nn import model
 from repro.nn.config import ModelConfig
 
-from . import kv_cache
+from . import kv_cache, spec_decode
 from .scheduler import Scheduler
 
 log = logging.getLogger("repro.serve")
@@ -77,6 +88,15 @@ class ServeConfig:
     # resident tokens; "einsum" is the escape hatch back to the reference
     # gather-and-dequantize path (also what wide bf16 pools fall back to)
     decode_kernel: str = "fused"
+    # speculative decoding (greedy only): draft num_draft_tokens per
+    # sequence per step and verify them all in one batched multi-token
+    # pass over the paged MX cache — token-identical to non-speculative
+    # decode for ANY drafter; a good drafter only raises tokens/step.
+    # ``drafter`` is "ngram" (prompt-lookup, no second model needed) or a
+    # spec_decode.Drafter instance.
+    spec_decode: bool = False
+    num_draft_tokens: int = 4
+    drafter: object = "ngram"
 
 
 def _sample(logits, key, temperature: float):
@@ -139,6 +159,26 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"unknown decode_kernel {serve_cfg.decode_kernel!r} "
                 "(expected 'fused' or 'einsum')")
+        mixers = {bd.mixer for bd in (*cfg.prologue, *cfg.pattern,
+                                      *cfg.epilogue)}
+        self.spec_enabled = bool(serve_cfg.spec_decode)
+        if self.spec_enabled:
+            if serve_cfg.num_draft_tokens < 1:
+                raise ValueError("spec_decode needs num_draft_tokens >= 1")
+            if serve_cfg.temperature > 0:
+                raise ValueError(
+                    "speculative decoding currently requires greedy "
+                    "sampling (temperature=0): acceptance compares greedy "
+                    "argmaxes (typical-acceptance sampling is a ROADMAP "
+                    "follow-on)")
+            if mixers - {"attn"}:
+                raise NotImplementedError(
+                    f"speculative decoding requires attention-only models, "
+                    f"got mixers {sorted(mixers - {'attn'})}: recurrent "
+                    "state has no position axis to roll rejected drafts "
+                    "back through")
+            self.drafter = spec_decode.resolve_drafter(
+                serve_cfg.drafter, cfg.vocab_size)
         self.params = params
         self.cfg = cfg
         # full-length (non-ring) prefill caches: slot == absolute position,
@@ -156,8 +196,6 @@ class ContinuousBatchingEngine:
         # prefix sharing needs every mixer to be attention: K/V pages are a
         # pure function of the token prefix, but recurrent state is not
         # paged (per-prefix snapshots are a follow-on — see ROADMAP)
-        mixers = {bd.mixer for bd in (*cfg.prologue, *cfg.pattern,
-                                      *cfg.epilogue)}
         self.prefix_enabled = bool(serve_cfg.prefix_cache
                                    and mixers <= {"attn"})
         if serve_cfg.prefix_cache and not self.prefix_enabled:
@@ -167,7 +205,9 @@ class ContinuousBatchingEngine:
             max_slots=serve_cfg.max_slots, num_pages=self.num_pages,
             page_size=ps, max_seq=serve_cfg.max_seq,
             prefix_cache=self.prefix_enabled,
-            admit_window=serve_cfg.admit_window)
+            admit_window=serve_cfg.admit_window,
+            num_draft_tokens=(serve_cfg.num_draft_tokens
+                              if self.spec_enabled else 0))
         self.cache = model.init_paged_cache(
             cfg, serve_cfg.max_slots, self.num_pages, ps)
         # donate the cache pytree: without donation every decode step /
@@ -178,6 +218,10 @@ class ContinuousBatchingEngine:
         cpu = jax.default_backend() == "cpu"
         self._decode = jax.jit(
             lambda p, c, tok, rows, pos: model.decode_step_paged(
+                p, self.cfg_decode, c, tok, rows, pos),
+            donate_argnums=() if cpu else (1,))
+        self._verify = jax.jit(
+            lambda p, c, tok, rows, pos: model.verify_step_paged(
                 p, self.cfg_decode, c, tok, rows, pos),
             donate_argnums=() if cpu else (1,))
         self._install = jax.jit(
@@ -195,6 +239,12 @@ class ContinuousBatchingEngine:
         self.steps = 0
         self.prompt_tokens = 0  # total prompt tokens admitted
         self.prefill_tokens = 0  # prompt tokens actually computed
+        # speculative decoding stats
+        self.spec_steps = 0  # verify steps run
+        self.spec_seq_steps = 0  # (sequence, verify step) participations
+        self.drafted_tokens = 0  # k per active sequence per verify step
+        self.accepted_tokens = 0  # drafts that matched the greedy target
+        self.emitted_tokens = 0  # tokens recorded by verify steps
 
     # -- internals ----------------------------------------------------------
 
@@ -345,39 +395,45 @@ class ContinuousBatchingEngine:
             if not self._relieve_pressure(seq):
                 return None
 
-    def _ensure_pages(self):
-        """Grow each active sequence's page list for this step's write,
-        swapping out the youngest sequences when the pool runs dry, and
-        give it exclusive ownership of the page it is about to write
-        (copy-on-write: shared pages are never scribbled on)."""
+    def _ensure_pages(self, num_tokens: int = 1):
+        """Grow each active sequence's page list for this step's write
+        window (``num_tokens`` rows at ``seq.pos..`` — 1 for decode,
+        1 + K for a speculative verify chunk), swapping out the youngest
+        sequences when the pool runs dry, and give it exclusive ownership
+        of *every* page in the window (copy-on-write: shared pages are
+        never scribbled on — which is also what makes speculative
+        rollback safe: a rejected draft's write only ever landed in a
+        page this sequence owns alone)."""
         sched = self.scheduler
         ps = self.serve_cfg.page_size
         for seq in list(sched.active()):
             if sched.slots[seq.slot] is not seq:
                 continue  # already preempted by an elder this pass
-            while not sched.try_grow(seq):
+            while not sched.try_grow(seq, num_tokens):
                 if not self._relieve_pressure(seq):
                     raise RuntimeError(
                         "page pool exhausted for a lone sequence")
-            wp = seq.pos // ps
-            pid = seq.pages[wp]
-            if sched.pool.ref(pid) > 1:
-                # copy-on-write: this step writes into a page other
-                # holders reference — copy it to a fresh page and repoint
-                new = self._alloc_one(seq)
-                if new is None:
-                    raise RuntimeError(
-                        "page pool exhausted for a lone sequence")
-                self.cache = self._copy_page(
-                    self.cache, jnp.asarray(pid, jnp.int32),
-                    jnp.asarray(new, jnp.int32))
-                sched.pool.free([pid])
-                seq.pages[wp] = new
-                sched.cow_copies += 1
+            last = seq.pos + num_tokens - 1
+            for wp in range(seq.pos // ps, last // ps + 1):
+                pid = seq.pages[wp]
+                if sched.pool.ref(pid) > 1:
+                    # copy-on-write: this step writes into a page other
+                    # holders reference — copy it to a fresh page and
+                    # repoint
+                    new = self._alloc_one(seq)
+                    if new is None:
+                        raise RuntimeError(
+                            "page pool exhausted for a lone sequence")
+                    self.cache = self._copy_page(
+                        self.cache, jnp.asarray(pid, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
+                    sched.pool.free([pid])
+                    seq.pages[wp] = new
+                    sched.cow_copies += 1
 
     def step(self) -> bool:
-        """Admit what fits, run one decode step. Returns True if any work
-        remains afterwards."""
+        """Admit what fits, run one decode (or speculative verify) step.
+        Returns True if any work remains afterwards."""
         sched = self.scheduler
         self._admit()
         if not sched.active():
@@ -387,6 +443,9 @@ class ContinuousBatchingEngine:
                 if sched.queue:
                     raise RuntimeError("scheduler stalled with queued work")
                 return sched.has_work
+        if self.spec_enabled:
+            self._spec_step()
+            return sched.has_work
         self._ensure_pages()
         tokens, pos, page_rows, act = sched.assemble()
         logits, self.cache = self._decode(
@@ -400,6 +459,61 @@ class ContinuousBatchingEngine:
             sched.record_token(seq, int(toks[seq.slot]),
                                eos_id=self.serve_cfg.eos_id)
         return sched.has_work
+
+    def _spec_step(self) -> None:
+        """One speculative draft + batched verify + rollback step.
+
+        Each active slot feeds its pending token plus K drafter
+        proposals; one ``verify_step_paged`` call writes all K + 1
+        tokens' K/V into the slot's (exclusively owned — see
+        ``_ensure_pages``) pages and returns per-position logits under
+        causal intra-chunk masking. Greedy acceptance keeps the longest
+        draft prefix matching the model's own argmaxes plus one bonus
+        token, so each sequence emits 1..K+1 tokens that are
+        token-identical to non-speculative decode regardless of the
+        drafter. Rejected drafts are rolled back page-exactly by simply
+        not advancing ``seq.pos`` past the accepted point: their rows are
+        dead by position masking and the next write there overwrites them
+        (nothing zeroed, nothing copied, shared pages never touched).
+        """
+        sched = self.scheduler
+        k = self.serve_cfg.num_draft_tokens
+        self._ensure_pages(1 + k)
+        tokens, pos, page_rows, act = sched.assemble(extra_tokens=k)
+        for seq in act:
+            history = np.concatenate(
+                [seq.req.prompt,
+                 np.asarray(seq.req.generated, np.int32)])
+            drafts = np.asarray(self.drafter.propose(history, k), np.int32)
+            if drafts.shape != (k,):
+                raise ValueError(
+                    f"drafter returned shape {drafts.shape}, wanted ({k},)")
+            tokens[seq.slot, 1:] = drafts
+        logits, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(page_rows), jnp.asarray(pos))
+        # greedy targets at every position (temperature 0 is validated at
+        # construction; _sample's argmax over the f32 cast, vectorized)
+        targets = np.asarray(
+            jnp.argmax(logits.astype(jnp.float32), axis=-1))
+        self.steps += 1
+        self.spec_steps += 1
+        for seq in act:
+            accepted, emitted = spec_decode.greedy_accept(
+                tokens[seq.slot, 1:], targets[seq.slot])
+            self.spec_seq_steps += 1
+            self.drafted_tokens += k
+            self.accepted_tokens += accepted
+            for tok in emitted:
+                # each emitted token validates one more written row
+                # (advance) before it is recorded — the verify-time
+                # mirror of the decode loop's advance/record pair; the
+                # loop stopping early (EOS / max_new) is the rollback
+                sched.advance(seq)
+                self.emitted_tokens += 1
+                if not sched.record_token(seq, int(tok),
+                                          eos_id=self.serve_cfg.eos_id):
+                    break
 
     # -- public API ---------------------------------------------------------
 
@@ -457,6 +571,23 @@ class ContinuousBatchingEngine:
                 1.0 - self.prefill_tokens / self.prompt_tokens
                 if self.prompt_tokens else 0.0),
         }
+        if self.spec_enabled:
+            stats.update({
+                "spec_steps": self.spec_steps,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "emitted_tokens": self.emitted_tokens,
+                # the speculative payoff: tokens a sequence emits per
+                # verify step it takes part in (1 = no better than plain
+                # decode, K+1 = perfect drafts) — normalized per sequence
+                # so continuous-batching parallelism doesn't inflate it
+                "accepted_per_step": (
+                    self.emitted_tokens / self.spec_seq_steps
+                    if self.spec_seq_steps else 0.0),
+                "draft_acceptance_rate": (
+                    self.accepted_tokens / self.drafted_tokens
+                    if self.drafted_tokens else 0.0),
+            })
         if sched.prefix is not None:
             stats.update(sched.prefix.stats())
         return stats

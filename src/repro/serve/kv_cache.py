@@ -41,6 +41,33 @@ def pages_for(num_tokens: int, page_size: int) -> int:
     return -(-num_tokens // page_size)
 
 
+def pages_spanned(pos0: int, num_tokens: int, page_size: int) -> int:
+    """Pages a write of ``num_tokens`` rows at positions ``pos0..`` needs.
+
+    The speculative-verify write window: a verify step writes the pending
+    token plus K drafts at positions ``pos0 .. pos0 + num_tokens - 1``,
+    so the sequence's page table must reach page
+    ``(pos0 + num_tokens - 1) // page_size`` *before* the step runs (and
+    the engine must own every page in the window exclusively — see the
+    rollback note below). Returns that page count (table length), i.e.
+    ``last_page + 1``.
+
+    Rollback contract (page-exact): rejected drafts are rolled back by
+    *truncation only* — the scheduler simply does not advance ``seq.pos``
+    past the accepted point. The rejected rows stay in the pages as
+    garbage; they are dead to every reader because all attention paths
+    mask keys by position (``kpos <= pos``), and the next write at that
+    position overwrites them in place. Nothing is zeroed, copied, or
+    freed, which is what makes rollback O(1) and COW-safe: because the
+    engine copy-on-writes the whole window before the speculative write,
+    shared prefix pages (radix tree, other sequences, swapped-out
+    holders) are never touched by a write that might be rolled back.
+    """
+    if num_tokens <= 0:
+        raise ValueError("write window must cover at least one token")
+    return (pos0 + num_tokens - 1) // page_size + 1
+
+
 class PagePool:
     """Ref-counted free-list allocator over a fixed set of physical page ids.
 

@@ -74,6 +74,7 @@ class PrefixCache:
         self.hits = 0
         self.hit_tokens = 0
         self.evictions = 0
+        self.dedupes = 0  # insert repointed a hit-cap duplicate page
 
     # -- introspection -------------------------------------------------------
 
@@ -140,6 +141,20 @@ class PrefixCache:
         are kept (first writer wins — the contents are identical by the
         exactness contract); each new node retains one pool reference that
         outlives the inserting sequence. Returns the node count added.
+
+        Dedupe-on-insert: when an existing node covers chunk ``i`` but the
+        sequence arrived with a *different* page there, the sequence holds
+        a redundant private copy of bytes already resident. The reachable
+        case is the :meth:`acquire` hit cap — a prompt of exactly N full
+        pages can only match N - 1 (one token must be prefilled for the
+        first logits), so a repeat admission of the same prompt prefills
+        its last page into a fresh private page that duplicates the
+        tree's. The table entry is repointed to the tree's page (the
+        caller's live list is mutated in place — the engine's next
+        assemble reads the shared id) and the duplicate is released,
+        which both frees a page *now* and makes the sequence's last page
+        preemption-shared (never extracted into swap snapshots). Safe by
+        the exactness contract: both pages hold bit-identical K/V.
         """
         node, created = self._root, 0
         for i, key in self._chunks(prompt, len(prompt) // self.page_size):
@@ -151,6 +166,13 @@ class PrefixCache:
                 self._clock += 1
                 child.last_use = self._clock
                 created += 1
+            elif pages[i] != child.page:
+                # the hit-cap duplicate: swap the sequence's reference
+                # from its private copy to the tree's identical page
+                self.pool.retain([child.page])
+                self.pool.free([pages[i]])
+                pages[i] = child.page
+                self.dedupes += 1
             node = child
         return created
 
@@ -205,5 +227,6 @@ class PrefixCache:
             "prefix_hits": self.hits,
             "prefix_hit_tokens": self.hit_tokens,
             "prefix_evictions": self.evictions,
+            "prefix_dedupes": self.dedupes,
             "prefix_nodes": self.num_nodes,
         }

@@ -26,6 +26,13 @@ page table — while requests enter and leave mid-stream:
     token-identical here: a re-prefill of *generated* tokens would attend
     over unquantized K/V where the original decode attended over the MX
     cache.
+  * **speculative verify windows** — with speculative decoding enabled
+    the engine writes 1 + K tokens per step, so ``try_grow`` covers the
+    whole window (possibly several fresh pages at once) and ``submit``
+    rejects requests whose worst-case window would overflow the page
+    table near max_seq (a silent clamp would drop speculated K/V writes
+    mid-verify). Rollback of rejected drafts is position truncation
+    only — ``advance`` is simply called once per *accepted* token.
   * **recycling** — EOS or max_new_tokens frees the slot and drops the
     sequence's page references in O(1); pages the prefix tree still
     references stay resident as cache, everything else returns to the
@@ -42,7 +49,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from .kv_cache import PagePool, pages_for
+from .kv_cache import PagePool, pages_for, pages_spanned
 from .prefix_cache import PrefixCache
 
 
@@ -85,7 +92,7 @@ class ActiveSeq:
 class Scheduler:
     def __init__(self, *, max_slots: int, num_pages: int, page_size: int,
                  max_seq: int, prefix_cache: bool = False,
-                 admit_window: int = 4):
+                 admit_window: int = 4, num_draft_tokens: int = 0):
         self.max_slots = max_slots
         self.page_size = page_size
         self.max_seq = max_seq
@@ -96,7 +103,13 @@ class Scheduler:
                 f"sequence (needs {self.pages_per_slot})")
         if admit_window < 1:
             raise ValueError("admit_window must be >= 1")
+        if num_draft_tokens < 0:
+            raise ValueError("num_draft_tokens must be >= 0")
         self.admit_window = admit_window
+        # speculative decoding: every verify step writes 1 + K tokens, so
+        # admission must guarantee the whole worst-case window fits inside
+        # max_seq's page table (see submit)
+        self.num_draft_tokens = num_draft_tokens
         self.pool = PagePool(num_pages)
         self.prefix = (PrefixCache(self.pool, page_size)
                        if prefix_cache else None)
@@ -134,6 +147,18 @@ class Scheduler:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) "
                 f"exceeds max_seq={self.max_seq}")
+        if (self.num_draft_tokens
+                and len(prompt) + max_new_tokens + self.num_draft_tokens
+                > self.max_seq):
+            # a silent clamp here would let a verify step write speculated
+            # K/V past the last page of the table mid-stream — reject at
+            # submission with the actual numbers instead
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) + "
+                f"speculative draft window ({self.num_draft_tokens}) "
+                f"exceeds max_seq={self.max_seq}: a verify step near the "
+                f"end of this request would overflow its page table "
+                f"(shrink num_draft_tokens or raise max_seq)")
         req = Request(self._next_id, prompt, int(max_new_tokens))
         self._next_id += 1
         self.queue.append(req)
@@ -219,11 +244,20 @@ class Scheduler:
         if self.prefix is not None:
             self.prefix.insert(seq.req.prompt, seq.pages)
 
-    def try_grow(self, seq: ActiveSeq) -> bool:
-        """Allocate the page for ``seq.pos`` if it crosses a boundary."""
-        if seq.pos // self.page_size < len(seq.pages):
+    def try_grow(self, seq: ActiveSeq, num_tokens: int = 1) -> bool:
+        """Grow ``seq``'s page table to cover this step's write window.
+
+        ``num_tokens`` is how many cache rows the step writes starting at
+        ``seq.pos`` — 1 for plain decode, 1 + K for a speculative verify
+        chunk (which may straddle a page boundary and need several fresh
+        pages at once). All-or-nothing: a partial grow would leave the
+        window half-backed and the verify write would drop rows silently.
+        """
+        need = pages_spanned(seq.pos, num_tokens, self.page_size) \
+            - len(seq.pages)
+        if need <= 0:
             return True
-        ids = self._alloc_with_evict(1)
+        ids = self._alloc_with_evict(need)
         if ids is None:
             return False
         seq.pages.extend(ids)
@@ -282,15 +316,18 @@ class Scheduler:
 
     # -- per-step batch assembly -------------------------------------------
 
-    def assemble(self):
-        """Fixed-shape numpy batch for the jitted decode step.
+    def assemble(self, extra_tokens: int = 0):
+        """Fixed-shape numpy batch for the jitted decode/verify step.
 
-        Returns (tokens (NS, 1), pos (NS,), page_rows (NS, P), active) —
-        inactive rows are token 0 / pos 0 / pages -1 (their device writes
-        are dropped and their logits ignored).
+        Returns (tokens (NS, 1 + extra_tokens), pos (NS,), page_rows
+        (NS, P), active) — inactive rows are token 0 / pos 0 / pages -1
+        (their device writes are dropped and their logits ignored).
+        Column 0 is each slot's pending token; the engine fills columns
+        1.. with its drafter's proposals (speculative verify). The shape
+        is static per ``extra_tokens``, so the verify step jits once.
         """
         ns, pps = self.max_slots, self.pages_per_slot
-        tokens = np.zeros((ns, 1), np.int32)
+        tokens = np.zeros((ns, 1 + extra_tokens), np.int32)
         pos = np.zeros((ns,), np.int32)
         page_rows = np.full((ns, pps), -1, np.int32)
         act = self.active()

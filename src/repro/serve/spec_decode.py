@@ -1,0 +1,154 @@
+"""Speculative decoding: draft proposals + greedy batched verification.
+
+One-token-per-step decode leaves the fused MX flash-decode kernel badly
+underfed: every step pays a full page-table walk, per-page DMA, and
+in-register dequant to attend *one* query token. Speculative decoding
+drafts K cheap candidate tokens per sequence and verifies all of them —
+plus the pending sampled token — in a single batched pass
+(``model.verify_step_paged``), so one walk over the compact MX pages
+feeds K+1 tokens of attention. That is the serving analogue of the
+paper's thesis that block-scaled compute only pays off when the
+mixed-precision dataflow stays dense and regular: the OCP Microscaling
+report and MXDOTP amortize scale handling across a dot-product block;
+we amortize the page walk and dequant across a verify chunk.
+
+Losslessness (greedy): the verify pass computes, for every fed token, the
+model's greedy next token under *per-row causal masking* — row ``i``
+attends exactly the keys a one-token decode at that position would. The
+engine accepts the longest draft prefix that matches those greedy
+targets and always emits one extra model token (the "bonus" token: the
+model's own prediction at the first mismatch, or after the last accepted
+draft). Emitted tokens are therefore **token-identical to non-speculative
+greedy decode for any drafter** — a good drafter only changes how many
+tokens each step emits (1 .. K+1), never which tokens.
+
+Rollback is page-exact and free: rejected drafts' K/V rows were written
+into pages the sequence exclusively owns (the engine COWs the whole
+write window first), and rejection simply does not advance the
+sequence's position past the accepted point. The stale rows are dead by
+position masking and are overwritten by the next write at that position
+— nothing is zeroed, copied, or reallocated, and shared prefix pages
+are never perturbed.
+
+Drafters are pluggable (``Drafter.propose``); the default needs no
+second model:
+
+  * :class:`NgramDrafter` — prompt-lookup decoding (Saxena-style n-gram
+    matching): find the most recent earlier occurrence of the current
+    tail n-gram in the sequence's own history and propose the tokens
+    that followed it. Free, and strong exactly where speculation wins —
+    repetitive spans (code, extraction, self-repeating generations).
+  * :class:`ScriptedDrafter` — deterministic pseudo-random proposals from
+    a seed; exists for tests: *any* drafts must leave the output token
+    stream unchanged, so adversarially bad drafts are the best probe of
+    the rollback machinery.
+
+A draft-model drafter (a small LM proposing tokens) and non-greedy
+acceptance (typical-acceptance / rejection sampling for temperature > 0)
+are ROADMAP follow-ons; the interface already carries them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Drafter:
+    """Interface: propose ``k`` draft tokens continuing ``history``."""
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        """history: (S,) int32 prompt + generated tokens so far (the last
+        entry is the pending token the verify step feeds first). Returns
+        (k,) int32 draft tokens. Must be deterministic per (history, k):
+        the engine may be replayed against a reference run."""
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting: continue the most recent n-gram match.
+
+    Scans for the latest earlier occurrence of the history's tail
+    ``n``-gram (longest ``n`` first, ``max_ngram`` down to
+    ``min_ngram``) and proposes the ``k`` tokens that followed that
+    occurrence; repetitive histories make these near-perfect drafts. No
+    match (or a match at the very end with nothing following) falls back
+    to repeating the last token — acceptance then just degrades, never
+    correctness.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int32)
+        out = np.full((k,), h[-1], np.int32)  # fallback: repeat last
+        for n in range(min(self.max_ngram, len(h) - 1), self.min_ngram - 1,
+                       -1):
+            # all candidate windows at once (one vectorized pass — this
+            # runs on the host every verify step, so O(S) python loops
+            # would grow drafting latency with generation length)
+            wins = np.lib.stride_tricks.sliding_window_view(h[:-1], n)
+            hits = np.nonzero((wins == h[-n:]).all(axis=1))[0]
+            if len(hits):
+                start = int(hits[-1])  # most recent earlier occurrence
+                cont = h[start + n:start + n + k]
+                out[:len(cont)] = cont
+                if 0 < len(cont) < k:
+                    out[len(cont):] = cont[-1]
+                return out
+        return out
+
+
+class ScriptedDrafter(Drafter):
+    """Deterministic pseudo-random drafts — the adversarial test drafter.
+
+    Proposals depend only on (seed, history, k), so a run can be replayed
+    exactly. Mostly-wrong drafts exercise the rollback path every step;
+    occasional accidental hits (small ``vocab``) exercise partial
+    acceptance.
+    """
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = int(vocab)
+        self.seed = int(seed)
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int64)
+        mix = int((h.sum() * 2654435761 + len(h) * 97 + self.seed)
+                  % (2 ** 31))
+        rng = np.random.default_rng(mix)
+        return rng.integers(0, self.vocab, size=(k,)).astype(np.int32)
+
+
+def resolve_drafter(spec, vocab_size: int) -> Drafter:
+    """ServeConfig.drafter -> Drafter instance ("ngram" | instance)."""
+    if isinstance(spec, Drafter):
+        return spec
+    if spec == "ngram":
+        return NgramDrafter()
+    raise ValueError(f"unknown drafter {spec!r} (expected 'ngram' or a "
+                     "Drafter instance)")
+
+
+def greedy_accept(drafts: np.ndarray, targets: np.ndarray):
+    """Longest accepted draft prefix + the tokens to emit.
+
+    ``targets[j]`` is the model's greedy next token after fed token ``j``
+    (j = 0 is the pending token, j >= 1 the drafts). Draft ``i`` is
+    accepted iff every earlier draft was and ``drafts[i] == targets[i]``
+    — i.e. the draft matches what greedy decode would have produced at
+    that position. Returns ``(accepted, emitted)`` where ``emitted =
+    targets[:accepted + 1]``: the accepted drafts *are* those targets,
+    and the final entry is the bonus token the model predicts after them
+    (so every verify step emits >= 1 token and the stream equals
+    non-speculative greedy decode exactly).
+    """
+    drafts = np.asarray(drafts)
+    targets = np.asarray(targets)
+    k = len(drafts)
+    a = 0
+    while a < k and drafts[a] == targets[a]:
+        a += 1
+    return a, targets[:a + 1]

@@ -21,7 +21,8 @@ import pytest
 from repro.core import quantize
 from repro.kernels import (gather_kv_pages, mx_attention_decode,
                            mx_attention_decode_fused,
-                           mx_attention_decode_paged)
+                           mx_attention_decode_paged,
+                           mx_attention_verify_fused)
 
 RNG = np.random.default_rng(123)
 
@@ -316,3 +317,158 @@ def test_fused_never_materializes_gathered_cache():
                         and t in (shape[1], shape[2])), (
                 f"gathered cache materialized: {eqn.primitive} -> {shape}")
     assert pallas_calls == 1, jaxpr
+
+
+# ---------------------------------------------------------------------------
+# Tq > 1 fused verify kernel (speculative decoding's batched verify)
+# ---------------------------------------------------------------------------
+
+
+def _verify_reference(q, kq, vq, lens, window=None):
+    """f32 oracle for the multi-query verify kernel, one query at a time.
+
+    q: (B, KVH, Tq, G, D). Query ``ti`` of sequence ``i`` sits at absolute
+    position ``lens[i] - Tq + ti`` and attends keys ``<= that position``
+    (minus the sliding window, if any) — per-row causal masking is the
+    whole point, so the oracle computes every row independently.
+    """
+    q = np.asarray(q, np.float32)
+    kd = np.asarray(kq.dequantize(jnp.float32))
+    vd = np.asarray(vq.dequantize(jnp.float32))
+    b, kvh, tq, g, d = q.shape
+    out = np.zeros((b, kvh, tq, g, d), np.float32)
+    for i in range(b):
+        for ti in range(tq):
+            p = int(lens[i]) - tq + ti
+            lo = 0 if window is None else max(0, p - window + 1)
+            s = np.einsum("kgd,ktd->kgt", q[i, :, ti],
+                          kd[i, :, lo:p + 1]) * d ** -0.5
+            pr = np.exp(s - s.max(-1, keepdims=True))
+            pr /= pr.sum(-1, keepdims=True)
+            out[i, :, ti] = np.einsum("kgt,ktd->kgd", pr, vd[i, :, lo:p + 1])
+    return out
+
+
+def _verify_case(fmt, block_size, b, kvh, g, d, t, ps, tq, lens, rng,
+                 **kw):
+    q = jnp.asarray(rng.normal(size=(b, kvh, tq, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), fmt, block_size)
+    vq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), fmt, block_size)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, rng)
+    got = mx_attention_verify_fused(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table,
+        jnp.asarray(lens), fmt_name=fmt, block_size=block_size, **kw)
+    window = kw.get("window")
+    if kw.get("debug_visits"):
+        out, visits = got
+        return (np.asarray(out), np.asarray(visits),
+                _verify_reference(q, kq, vq, lens, window))
+    return np.asarray(got), _verify_reference(q, kq, vq, lens, window)
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"])
+@pytest.mark.parametrize("block_size", [16, 32, 64])
+def test_verify_matches_einsum_reference(fmt, block_size):
+    rng = np.random.default_rng(31)
+    lens = np.array([61, 23], np.int32)
+    got, want = _verify_case(fmt, block_size, b=2, kvh=2, g=2, d=64, t=64,
+                             ps=16, tq=4, lens=lens, rng=rng)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("tq", [1, 2, 3, 4, 5])
+def test_verify_every_chunk_length(tq):
+    """Chunk lengths 1..K: the per-row causal mask must be exact at every
+    draft count the engine can run, including the Tq == 1 decode case."""
+    rng = np.random.default_rng(37)
+    lens = np.array([29, 40, tq], np.int32)  # incl. a chunk-only sequence
+    got, want = _verify_case("fp8_e4m3", 32, b=3, kvh=2, g=2, d=32, t=40,
+                             ps=8, tq=tq, lens=lens, rng=rng)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp4_e2m1"])
+@pytest.mark.parametrize(
+    "lens",
+    [np.array([18, 33], np.int32),   # chunk straddles a page boundary
+     np.array([16, 32], np.int32),   # chunk ends exactly on a boundary
+     np.array([4, 20], np.int32),    # chunk is the whole first page tail
+     np.array([64, 50], np.int32)],  # fully-packed table / interior
+    ids=["straddle", "boundary-end", "first-page", "packed"])
+def test_verify_page_boundary_straddling_chunks(fmt, lens):
+    """A verify chunk whose tokens span two pages: rows of the same chunk
+    live in different page tiles and the online softmax must stitch them
+    per query row."""
+    rng = np.random.default_rng(41)
+    got, want = _verify_case(fmt, 32, b=2, kvh=2, g=2, d=64, t=64, ps=16,
+                             tq=4, lens=lens, rng=rng)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+def test_verify_sliding_window_matches_masked_reference():
+    rng = np.random.default_rng(43)
+    lens = np.array([61, 30], np.int32)
+    got, want = _verify_case("fp8_e4m3", 32, b=2, kvh=2, g=2, d=64, t=64,
+                             ps=16, tq=3, lens=lens, rng=rng, window=12)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+def test_verify_visits_exactly_the_resident_pages():
+    """The page-skip audit holds for multi-query chunks too: visits per
+    (batch, kv-head) cell == ceil(seq_len / PS), independent of Tq."""
+    rng = np.random.default_rng(47)
+    lens = np.array([3, 17, 40], np.int32)
+    got, visits, want = _verify_case(
+        "fp8_e4m3", 32, b=3, kvh=2, g=2, d=32, t=40, ps=8, tq=3,
+        lens=lens, rng=rng, debug_visits=True)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+    expect = np.broadcast_to(np.ceil(lens / 8).astype(np.int32)[:, None],
+                             (3, 2))
+    np.testing.assert_array_equal(visits[:, :, 0], expect)
+
+
+def test_verify_tq1_is_bitwise_the_decode_kernel():
+    """decode_fused is the Tq == 1 case of verify_fused by delegation;
+    pin that equivalence bit-for-bit so the two can never drift."""
+    rng = np.random.default_rng(53)
+    b, kvh, g, d, t, ps = 2, 2, 2, 64, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, rng)
+    lens = jnp.asarray([61, 17], jnp.int32)
+    dec = np.asarray(mx_attention_decode_fused(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table, lens))
+    ver = np.asarray(mx_attention_verify_fused(
+        q[:, :, None], pools["ke"], pools["ks"], pools["ve"], pools["vs"],
+        table, lens))[:, :, 0]
+    np.testing.assert_array_equal(dec.view(np.uint32), ver.view(np.uint32))
+
+
+def test_verify_rejected_region_never_contributes():
+    """Rows past seq_len hold garbage (e.g. rejected speculated K/V from
+    an earlier, longer chunk): flipping the garbage pages' ids to -1 must
+    not change any query row's output — the rollback-by-truncation
+    guarantee at the kernel level."""
+    rng = np.random.default_rng(59)
+    b, kvh, g, d, t, ps, tq = 1, 2, 2, 32, 32, 8, 3
+    q = jnp.asarray(rng.normal(size=(b, kvh, tq, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, rng)
+    seq_len = jnp.asarray([ps + 3], jnp.int32)  # only the first 2 pages valid
+    base = np.asarray(mx_attention_verify_fused(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table,
+        seq_len))
+    table2 = np.asarray(table).copy()
+    table2[0, 2:] = -1
+    got = np.asarray(mx_attention_verify_fused(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"],
+        jnp.asarray(table2), seq_len))
+    np.testing.assert_array_equal(got.view(np.uint32), base.view(np.uint32))

@@ -397,3 +397,59 @@ def test_prefix_cache_auto_disabled_for_recurrent_mixers():
         max_seq=16, max_slots=1, page_size=4, prefix_cache=True))
     assert not eng.prefix_enabled
     assert eng.scheduler.prefix is None
+
+
+# ---------------------------------------------------------------------------
+# dedupe-on-insert: the hit-cap duplicate last page
+# ---------------------------------------------------------------------------
+
+
+def test_insert_dedupes_hit_cap_duplicate_last_page():
+    """Two identical, exactly-page-aligned prompts: the second admission
+    can only hit N-1 pages (the cap leaves one token to prefill), so it
+    arrives at insert with a private duplicate of the last page. Insert
+    must repoint its table entry to the tree's page and free the copy."""
+    tree, pool = _tree(num_pages=8, ps=4)
+    prompt = np.arange(8, dtype=np.int32)  # exactly 2 pages
+    first = pool.alloc(2)
+    assert tree.insert(prompt, first) == 2
+    pool.free(first)  # first sequence finishes; the tree keeps its pages
+    # second admission: acquire hits page 0 only (the cap), tail page is
+    # freshly prefilled
+    hit, cached = tree.acquire(prompt)
+    assert hit == first[:1] and cached == 4
+    dup = pool.alloc(1)
+    table = hit + dup
+    assert tree.insert(prompt, table) == 0  # nothing new in the tree
+    assert table == first, "table must be repointed to the shared pages"
+    assert pool.ref(dup[0]) == 0, "the duplicate page must be freed"
+    assert pool.ref(first[1]) == 2  # tree + the second sequence
+    assert tree.dedupes == 1 and tree.stats()["prefix_dedupes"] == 1
+    pool.free(table)  # second sequence finishes
+    assert pool.ref(first[1]) == 1  # only the tree holds it again
+
+
+def test_engine_same_prompt_admissions_share_all_pages():
+    """End-to-end dedupe regression: two same-prompt admissions end up
+    with identical prompt page tables (one physical copy), the pool holds
+    exactly the tree's pages after the run, and outputs stay
+    token-identical to the fixed-slot reference."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(2).integers(
+        0, 128, (16,)).astype(np.int32)  # exactly 2 pages of 8
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=32, max_slots=2, page_size=8, prefix_cache=True))
+    i1, i2 = eng.submit(prompt, 4), eng.submit(prompt, 4)
+    eng.step()  # admits both
+    seqs = eng.scheduler.active()
+    assert len(seqs) == 2
+    assert seqs[0].pages[:2] == seqs[1].pages[:2], \
+        "dedupe-on-insert must share the hit-cap duplicate last page"
+    stats = eng.scheduler.prefix.stats()
+    assert stats["prefix_dedupes"] == 1
+    out = eng.run()
+    want = FixedSlotEngine(params, cfg, ServeConfig(max_seq=32)).generate(
+        prompt[None], 4)[0]
+    np.testing.assert_array_equal(out[i1], want)
+    np.testing.assert_array_equal(out[i2], want)

@@ -272,3 +272,139 @@ def test_extract_restore_roundtrip():
                 idx = (slice(None), 0) if grouped else (0,)
                 np.testing.assert_array_equal(np.asarray(lb[idx]),
                                               np.asarray(lo[idx]))
+
+
+# ---------------------------------------------------------------------------
+# speculative verify / rollback invariants (property-tested)
+# ---------------------------------------------------------------------------
+
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.serve import ScriptedDrafter  # noqa: E402
+
+
+def _seq_cache_rows(eng, seq, n_rows):
+    """The first ``n_rows`` K/V cache rows of ``seq``, per pool leaf,
+    gathered through its page table — the sequence's *logical* cache, the
+    thing speculation must leave byte-identical to plain decode."""
+    out = {}
+    pages = np.asarray(seq.pages, np.int32)
+    for path, blk, grouped in KV._iter_blocks(eng.cache):
+        if not KV._is_pool(blk):
+            continue
+        for key, leaf in blk.items():
+            arr = np.asarray(leaf[:, pages] if grouped else leaf[pages])
+            if grouped:
+                arr = arr.reshape(arr.shape[0], -1,
+                                  *arr.shape[3:])[:, :n_rows]
+            else:
+                arr = arr.reshape(-1, *arr.shape[2:])[:n_rows]
+            out[(path, key)] = (arr if arr.dtype == np.uint8
+                                else arr.astype(np.float32))
+    return out
+
+
+@settings(max_examples=6)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_spec_verify_rollback_cache_equivalence_property(seed):
+    """Arbitrary draft prefixes ⇒ after every verify step, the sequence's
+    cache pages, position, and token stream are byte-identical to having
+    decoded the accepted tokens one at a time.
+
+    A speculative engine (pseudo-random adversarial drafts, so accept
+    counts vary 0..K per step) and a plain engine serve the same request
+    in lock-step: after each verify step the plain engine decodes until
+    its position catches up, then every pool leaf's rows [0, pos) must
+    match bit-for-bit — rejected drafts' writes beyond pos are exactly
+    rolled back (dead by truncation), accepted drafts' writes are exactly
+    what one-at-a-time decode would have written.
+    """
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompt = rng.integers(0, 128, (int(rng.integers(2, 7)),)).astype(
+        np.int32)
+    max_new = int(rng.integers(4, 11))
+    k = int(rng.integers(1, 5))
+    base = dict(max_seq=24, max_slots=1, page_size=4, prefix_cache=False)
+    spec = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        **base, spec_decode=True, num_draft_tokens=k,
+        drafter=ScriptedDrafter(vocab=128, seed=seed)))
+    plain = ContinuousBatchingEngine(params, cfg, ServeConfig(**base))
+    sid = spec.submit(prompt, max_new)
+    pid = plain.submit(prompt, max_new)
+
+    guard = 0
+    while spec.step():
+        guard += 1
+        assert guard < 100, "speculative engine failed to make progress"
+        if not spec.scheduler.active():
+            break
+        sseq = spec.scheduler.active()[0]
+        # engine invariant: pos counts exactly the accepted resident rows
+        assert sseq.pos == len(prompt) + len(sseq.req.generated) - 1
+        # catch the plain engine up to the speculative one's position
+        # (identical token streams mean it gets there while still active)
+        while not plain.scheduler.active() or \
+                plain.scheduler.active()[0].pos < sseq.pos:
+            assert plain.step() or plain.scheduler.active(), \
+                "plain engine drained before reaching the spec position"
+        pseq = plain.scheduler.active()[0]
+        assert pseq.pos == sseq.pos
+        assert pseq.req.generated == sseq.req.generated[:len(
+            pseq.req.generated)]
+        got = _seq_cache_rows(spec, sseq, sseq.pos)
+        want = _seq_cache_rows(plain, pseq, pseq.pos)
+        assert got.keys() == want.keys()
+        for key in got:
+            np.testing.assert_array_equal(got[key], want[key], err_msg=str(key))
+        # every page either sequence maps is live in its pool
+        for eng, seq in ((spec, sseq), (plain, pseq)):
+            for pg in seq.pages:
+                assert eng.scheduler.pool.ref(pg) >= 1
+    out_s = spec.run()
+    while plain.step():
+        pass
+    out_p = plain.run()
+    np.testing.assert_array_equal(out_s[sid], out_p[pid])
+    # drained engines hold no pages (no prefix tree in this scenario)
+    assert spec.scheduler.pool.pages_in_use == 0
+    assert plain.scheduler.pool.pages_in_use == 0
+
+
+@settings(max_examples=6)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_spec_engine_churn_property_refcounts_and_identity(seed):
+    """Randomized shared-head workloads under a speculative engine with
+    adversarial drafts: outputs match the plain engine per request, and
+    after draining, every page's refcount equals the prefix tree's holds
+    (speculative growth/rollback neither leaks nor double-frees)."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    head = rng.integers(0, 128, (int(rng.integers(0, 9)),)).astype(np.int32)
+    reqs = []
+    for _ in range(int(rng.integers(2, 5))):
+        tail = rng.integers(0, 128, (int(rng.integers(1, 5)),)).astype(
+            np.int32)
+        reqs.append((np.concatenate([head, tail]),
+                     int(rng.integers(2, 8))))
+    k = int(rng.integers(1, 4))
+    base = dict(max_seq=28, max_slots=2, page_size=4, prefix_cache=True)
+    plain = ContinuousBatchingEngine(params, cfg, ServeConfig(**base))
+    ids_p = [plain.submit(p, m) for p, m in reqs]
+    out_p = plain.run()
+    spec = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        **base, spec_decode=True, num_draft_tokens=k,
+        drafter=ScriptedDrafter(vocab=128, seed=seed + 1)))
+    ids_s = [spec.submit(p, m) for p, m in reqs]
+    out_s = spec.run()
+    for i_s, i_p in zip(ids_s, ids_p):
+        np.testing.assert_array_equal(out_s[i_s], out_p[i_p])
+    pool = spec.scheduler.pool
+    held = (spec.scheduler.prefix.pages_held
+            if spec.scheduler.prefix is not None else [])
+    for pg in range(pool.num_pages):
+        assert pool.ref(pg) == held.count(pg), (pg, held)
+    assert pool.pages_in_use == len(held)

@@ -1,0 +1,340 @@
+"""Speculative decoding: drafters, greedy acceptance, engine equivalence.
+
+The load-bearing claim (the losslessness guarantee): the speculative
+engine's greedy output is token-identical to the non-speculative
+fused-kernel ContinuousBatchingEngine — and to the FixedSlotEngine golden
+— for ANY drafter, at multiple draft lengths, under slot churn, swap
+preemption, and with the prefix cache enabled. A drafter can only change
+how many tokens a verify step emits, never which tokens.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MXFP8
+from repro.nn import BlockDef, ModelConfig, model
+from repro.serve import (ContinuousBatchingEngine, FixedSlotEngine,
+                         NgramDrafter, ScriptedDrafter, ServeConfig,
+                         greedy_accept)
+from repro.serve.spec_decode import resolve_drafter
+
+
+# ---------------------------------------------------------------------------
+# drafters + acceptance rule (pure host logic)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_continues_the_latest_match():
+    d = NgramDrafter(max_ngram=2)
+    hist = np.asarray([7, 1, 2, 9, 1, 2], np.int32)
+    # tail bigram (1, 2) last occurred at index 1; its continuation in the
+    # history is 9, 1, 2 — exactly the cycle continuing
+    np.testing.assert_array_equal(d.propose(hist, 3), [9, 1, 2])
+    # a short continuation pads with its own last token
+    d1 = NgramDrafter(max_ngram=1)
+    np.testing.assert_array_equal(
+        d1.propose(np.asarray([4, 9, 4], np.int32), 3), [9, 4, 4])
+    # prefers the longest n-gram: with the trigram present, use it
+    d3 = NgramDrafter(max_ngram=3)
+    hist2 = np.asarray([5, 1, 2, 3, 8, 1, 2, 3], np.int32)
+    np.testing.assert_array_equal(d3.propose(hist2, 2), [8, 1])
+
+
+def test_ngram_drafter_most_recent_occurrence_wins():
+    d = NgramDrafter(max_ngram=1)
+    hist = np.asarray([4, 10, 4, 20, 4], np.int32)
+    # unigram 4 occurs at 0 (-> 10) and 2 (-> 20): most recent wins
+    np.testing.assert_array_equal(d.propose(hist, 1), [20])
+
+
+def test_ngram_drafter_no_match_repeats_last_token():
+    d = NgramDrafter()
+    np.testing.assert_array_equal(
+        d.propose(np.asarray([1, 2, 3], np.int32), 2), [3, 3])
+    # single-token history: nothing to match against
+    np.testing.assert_array_equal(
+        d.propose(np.asarray([9], np.int32), 2), [9, 9])
+
+
+def test_scripted_drafter_is_deterministic():
+    d = ScriptedDrafter(vocab=64, seed=3)
+    h = np.asarray([1, 2, 3], np.int32)
+    np.testing.assert_array_equal(d.propose(h, 4), d.propose(h, 4))
+    assert d.propose(h, 4).dtype == np.int32
+    assert (d.propose(h, 4) < 64).all() and (d.propose(h, 4) >= 0).all()
+
+
+def test_greedy_accept_prefix_rule():
+    # all drafts match -> all accepted + bonus
+    a, em = greedy_accept([5, 6, 7], [5, 6, 7, 8])
+    assert a == 3 and list(em) == [5, 6, 7, 8]
+    # first mismatch cuts the prefix; the bonus is the model's own token
+    a, em = greedy_accept([5, 9, 7], [5, 6, 7, 8])
+    assert a == 1 and list(em) == [5, 6]
+    # nothing matches -> still one token per step (plain decode's rate)
+    a, em = greedy_accept([9, 9], [5, 6, 7])
+    assert a == 0 and list(em) == [5]
+
+
+def test_resolve_drafter():
+    assert isinstance(resolve_drafter("ngram", 128), NgramDrafter)
+    d = ScriptedDrafter(8)
+    assert resolve_drafter(d, 128) is d
+    with pytest.raises(ValueError):
+        resolve_drafter("medusa", 128)
+
+
+# ---------------------------------------------------------------------------
+# engine goldens: lossless for any drafter, any draft length
+# ---------------------------------------------------------------------------
+
+
+def _cfg(quantize_kv=True):
+    return ModelConfig(
+        name="t", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=quantize_kv))
+
+
+def _churn_reqs(rng):
+    return [(rng.integers(0, 128, (s,)).astype(np.int32), m)
+            for s, m in [(4, 12), (4, 12), (7, 5), (3, 8)]]
+
+
+@pytest.mark.parametrize("num_draft", [2, 4])
+@pytest.mark.parametrize("drafter_name", ["ngram", "scripted"])
+def test_spec_decode_token_identical_under_churn_and_preemption(
+        num_draft, drafter_name):
+    """The acceptance-criteria regression: speculative output equals the
+    non-speculative fused-kernel engine AND the fixed-slot golden, per
+    request, under slot churn + swap preemption, with the prefix cache
+    enabled, at two draft lengths and for a good and an adversarial
+    drafter."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    reqs = _churn_reqs(np.random.default_rng(3))
+    base = dict(max_seq=24, max_slots=2, page_size=4, num_pages=7,
+                prefix_cache=True)
+
+    plain = ContinuousBatchingEngine(params, cfg, ServeConfig(**base))
+    ids_p = [plain.submit(p, m) for p, m in reqs]
+    out_p = plain.run()
+    assert plain.scheduler.preemptions >= 1, "pool sizing must force a swap"
+
+    drafter = ("ngram" if drafter_name == "ngram"
+               else ScriptedDrafter(vocab=128, seed=11))
+    spec = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        **base, spec_decode=True, num_draft_tokens=num_draft,
+        drafter=drafter))
+    ids_s = [spec.submit(p, m) for p, m in reqs]
+    out_s = spec.run()
+    assert spec.scheduler.preemptions >= 1, "pool sizing must force a swap"
+
+    fixed = FixedSlotEngine(params, cfg, ServeConfig(max_seq=24))
+    for (i_s, i_p, (p, m)) in zip(ids_s, ids_p, reqs):
+        np.testing.assert_array_equal(out_s[i_s], out_p[i_p])
+        np.testing.assert_array_equal(out_s[i_s],
+                                      fixed.generate(p[None], m)[0])
+    stats = spec.cache_stats()
+    assert stats["spec_steps"] > 0
+    assert stats["accepted_per_step"] >= 1.0  # every step emits >= 1
+
+
+@pytest.mark.parametrize("decode_kernel", ["fused", "einsum"])
+def test_spec_decode_kernel_paths_agree_with_their_plain_engine(
+        decode_kernel):
+    """Both attention paths support verify; each must match its own
+    non-speculative engine (fused vs fused, einsum vs einsum — across
+    paths logits differ at bf16-rounding level, see README)."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    reqs = _churn_reqs(np.random.default_rng(5))
+    base = dict(max_seq=24, max_slots=2, page_size=4,
+                decode_kernel=decode_kernel)
+    plain = ContinuousBatchingEngine(params, cfg, ServeConfig(**base))
+    ids_p = [plain.submit(p, m) for p, m in reqs]
+    out_p = plain.run()
+    spec = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        **base, spec_decode=True, num_draft_tokens=3))
+    ids_s = [spec.submit(p, m) for p, m in reqs]
+    out_s = spec.run()
+    for i_s, i_p in zip(ids_s, ids_p):
+        np.testing.assert_array_equal(out_s[i_s], out_p[i_p])
+
+
+def test_spec_decode_eos_mid_chunk_stops_exactly():
+    """An EOS accepted mid-verify-chunk must end the request at the EOS
+    token — accepted drafts beyond it are discarded, exactly as plain
+    decode would never have produced them."""
+    cfg = _cfg(False)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(1).integers(
+        0, 128, (2, 6)).astype(np.int32)
+    ref = FixedSlotEngine(params, cfg, ServeConfig(max_seq=24)).generate(
+        prompts[:1], 8)[0]
+    eos = int(ref[6 + 2])  # the 3rd greedy token becomes the eos id
+    stop = 6 + 1 + int(np.argmax(ref[6:] == eos))
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=24, max_slots=1, page_size=8, eos_id=eos,
+        spec_decode=True, num_draft_tokens=4))
+    ids = [eng.submit(prompts[0], 8), eng.submit(prompts[1], 8)]
+    out = eng.run()
+    first = out[ids[0]]
+    assert first[-1] == eos and len(first) == stop
+    np.testing.assert_array_equal(first, ref[: len(first)])
+    assert len(out[ids[1]]) == 6 + 8
+
+
+def test_spec_decode_rejects_bad_configs():
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="num_draft_tokens"):
+        ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=24, spec_decode=True, num_draft_tokens=0))
+    with pytest.raises(ValueError, match="greedy"):
+        ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=24, spec_decode=True, temperature=0.7))
+    with pytest.raises(ValueError, match="drafter"):
+        ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=24, spec_decode=True, drafter="medusa"))
+    rglru_cfg = ModelConfig(
+        name="t", family="hybrid", d_model=64, vocab_size=128,
+        pattern=(BlockDef("rglru"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, rnn_width=64,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False))
+    rparams, _ = model.init(jax.random.PRNGKey(0), rglru_cfg)
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ContinuousBatchingEngine(rparams, rglru_cfg, ServeConfig(
+            max_seq=24, spec_decode=True))
+
+
+def test_submit_rejects_draft_window_overflow():
+    """A request whose worst-case verify window would write past the page
+    table is rejected at submission — loudly, not clamped (the clamp
+    would silently drop speculated K/V writes mid-verify)."""
+    from repro.serve import Scheduler
+
+    s = Scheduler(max_slots=1, num_pages=4, page_size=4, max_seq=16,
+                  num_draft_tokens=4)
+    # 8 + 4 fits max_seq=16, but + the 4-token draft window it does not
+    with pytest.raises(ValueError, match="draft window"):
+        s.submit(np.arange(8, dtype=np.int32), 5)
+    assert not s.queue
+    # the same request is fine without speculation
+    s2 = Scheduler(max_slots=1, num_pages=4, page_size=4, max_seq=16)
+    s2.submit(np.arange(8, dtype=np.int32), 5)
+    # and a smaller request is fine with it
+    s.submit(np.arange(4, dtype=np.int32), 5)
+    with pytest.raises(ValueError):
+        Scheduler(max_slots=1, num_pages=4, page_size=4, max_seq=16,
+                  num_draft_tokens=-1)
+
+
+def test_spec_decode_with_prefix_sharing():
+    """Shared-head prompts + speculation: prefix hits fire and outputs
+    stay identical to the non-speculative engine."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    head = rng.integers(0, 128, (8,)).astype(np.int32)
+    prompts = [np.concatenate([head,
+                               rng.integers(0, 128, (3,)).astype(np.int32)])
+               for _ in range(3)]
+    base = dict(max_seq=28, max_slots=3, page_size=4, prefix_cache=True)
+    plain = ContinuousBatchingEngine(params, cfg, ServeConfig(**base))
+    ids_p = [plain.submit(p, 8) for p in prompts]
+    out_p = plain.run()
+    spec = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        **base, spec_decode=True, num_draft_tokens=3))
+    ids_s = [spec.submit(p, 8) for p in prompts]
+    out_s = spec.run()
+    for i_s, i_p in zip(ids_s, ids_p):
+        np.testing.assert_array_equal(out_s[i_s], out_p[i_p])
+    assert spec.cache_stats()["prefix_hit_tokens"] > 0
+
+
+def _page_bytes(eng, pid):
+    """Every pool leaf's bytes for physical page ``pid``."""
+    from repro.serve import kv_cache as KV
+
+    out = []
+    for _, blk, grouped in KV._iter_blocks(eng.cache):
+        if not KV._is_pool(blk):
+            continue
+        for key in sorted(blk):
+            leaf = blk[key]
+            arr = np.asarray(leaf[:, pid] if grouped else leaf[pid])
+            out.append(arr if arr.dtype == np.uint8
+                       else arr.astype(np.float32))
+    return out
+
+
+def test_spec_verify_cow_protects_shared_window_page():
+    """Pin the page a verify chunk is about to write into (as a
+    partial-page prefix hit would): the engine must give the sequence a
+    private copy before the speculative write, the pinned page's bytes
+    must survive untouched — even though most of the chunk's writes get
+    rolled back — and the token stream must not change."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(0).integers(0, 128, (6,)).astype(np.int32)
+    want = FixedSlotEngine(params, cfg, ServeConfig(max_seq=24)).generate(
+        prompt[None], 8)[0]
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=24, max_slots=1, page_size=8, spec_decode=True,
+        num_draft_tokens=3, drafter=ScriptedDrafter(vocab=128, seed=5)))
+    eng.submit(prompt, 8)
+    eng.step()  # admit + first verify chunk
+    seq = eng.scheduler.active()[0]
+    pinned = seq.pages[seq.pos // 8]
+    eng.scheduler.pool.retain([pinned])  # simulate another holder
+    before = _page_bytes(eng, pinned)
+    eng.step()  # verify chunk would write into the pinned page
+    assert eng.scheduler.cow_copies >= 1
+    assert pinned not in seq.pages, "repointed to a private copy"
+    for a, b in zip(before, _page_bytes(eng, pinned)):
+        np.testing.assert_array_equal(a, b)
+    while eng.step():
+        pass
+    eng.scheduler.pool.free([pinned])
+    out = np.concatenate([prompt, eng.scheduler.finished[0].generated])
+    np.testing.assert_array_equal(out, want)
+
+
+def test_verify_fused_path_never_materializes_gathered_cache():
+    """Structural guarantee for the verify hot path: exactly one
+    pallas_call per attention layer and no wide (B, T, ...) gathered
+    cache intermediate — the amortization claim depends on the chunk
+    sharing one in-kernel page walk, not on a gather feeding an einsum."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import QuantConfig
+    from repro.nn import attention as A
+
+    acfg = A.AttnConfig(d_model=64, num_heads=4, num_kv_heads=2,
+                        head_dim=16, decode_kernel="fused")
+    quant = QuantConfig(fmt="fp8_e4m3", block_size=16,
+                        quantize_kv_cache=True)
+    params, _ = A.init(jax.random.PRNGKey(0), acfg)
+    pool = A.init_paged_pool(8, 4, acfg, quant)
+    x = jnp.zeros((2, 4, 64), jnp.bfloat16)  # Tq == 4
+    rows = jnp.zeros((2, 6), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: A.apply_verify_paged(*a, acfg, quant))(
+        params, x, pool, rows, pos)
+    t = 6 * 4  # padded table rows
+    pallas_calls = 0
+    for eqn in jaxpr.jaxpr.eqns:
+        pallas_calls += eqn.primitive.name == "pallas_call"
+        for var in eqn.outvars:
+            shape = getattr(var.aval, "shape", ())
+            dt = str(getattr(var.aval, "dtype", ""))
+            assert not (len(shape) == 4 and shape[0] == 2
+                        and t in shape[1:3]
+                        and dt.startswith(("bfloat", "float32"))), (
+                f"gathered cache materialized: {eqn.primitive} -> {shape}")
+    assert pallas_calls == 1, jaxpr
