@@ -10,8 +10,9 @@ import pathlib
 import traceback
 
 from . import (block_size_sweep, common, decode_attention, e2e_step,
-               emulation_breakdown, format_comparison, serve_prefix,
-               serve_throughput, spec_decode, speedup, throughput_sweep)
+               emulation_breakdown, format_comparison, prefill,
+               serve_prefix, serve_throughput, spec_decode, speedup,
+               throughput_sweep)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -24,6 +25,7 @@ SUITES = [
     ("serve_prefix", serve_prefix.run),
     ("decode_attention", decode_attention.run),
     ("spec_decode", spec_decode.run),
+    ("prefill", prefill.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -33,6 +35,7 @@ _JSON_FILES = {
     "BENCH_serve.json": ("serve_throughput", "serve_prefix"),
     "BENCH_decode.json": ("decode_attention",),
     "BENCH_spec.json": ("spec_decode",),
+    "BENCH_prefill.json": ("prefill",),
 }
 
 

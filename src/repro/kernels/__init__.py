@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the performance-critical MX compute hot-spots.
 
   mx_matmul.py    fused MX matmul (VMXDOTP analogue): vv + weight-only
-  mx_attention.py decode attention over MX KV caches: contiguous, paged
-                  two-pass (gather oracle), and the single-pass fused
-                  paged flash-decode kernel the serve engine runs
+  mx_attention.py decode/prefill attention over MX KV caches: contiguous,
+                  paged two-pass (gather oracle), the single-pass fused
+                  paged flash-decode/verify kernels the serve engine
+                  runs, and the fused chunked-prefill kernel that
+                  quantize-writes each chunk's K/V into its pages
   mx_quantize.py  fused block quantization (amax + E8M0 + RNE cast)
   ops.py          jit'd public wrappers (MXTensor-aware)
   ref.py          pure-jnp oracles defining exact semantics
@@ -12,12 +14,13 @@ from . import ref
 from .mx_attention import (gather_kv_pages, mx_attention_decode,
                            mx_attention_decode_fused,
                            mx_attention_decode_paged,
+                           mx_attention_prefill_fused,
                            mx_attention_verify_fused)
 from .mx_matmul import mx_matmul_dgrad
 from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
 __all__ = ["gather_kv_pages", "mx_attention_decode",
            "mx_attention_decode_fused", "mx_attention_decode_paged",
-           "mx_attention_verify_fused",
+           "mx_attention_prefill_fused", "mx_attention_verify_fused",
            "mx_matmul", "mx_matmul_dgrad", "mx_matmul_trainable",
            "quantize_pallas", "ref"]

@@ -68,6 +68,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import formats as F
+
 from .compat import CompilerParams
 from .mx_matmul import _decode_e8m0, _decode_tile
 
@@ -270,6 +272,79 @@ def mx_attention_decode_paged(q, ke_pool, ks_pool, ve_pool, vs_pool,
 # ---------------------------------------------------------------------------
 
 
+def _quantize_rows(x, fmt_name: str, block_size: int):
+    """(T, D) f32 -> (elements (T, ED) storage, scales (T, D//k) uint8).
+
+    The exact math of ``core.quantize`` (f32 work dtype) inlined for the
+    kernel: block amax -> E8M0 shared exponent (exponent-field floor-log2,
+    no transcendentals and no lookup tables — Pallas rejects captured
+    constant arrays) -> RNE saturating element cast. Bit-identical to the
+    host cache-write path (``attention._quantize_kv_token``), which is
+    what lets the fused prefill kernel's in-kernel page writes substitute
+    for the host ``jnp.at[].set`` install without perturbing a single
+    cache byte. Shares the arithmetic encoders with ``mx_quantize``'s
+    kernel, the repo's other in-kernel quantizer.
+    """
+    from .mx_quantize import _encode_fp4_codes, _floor_log2, _pack_fp4
+
+    fmt = F.get_format(fmt_name)
+    t, d = x.shape
+    nb = d // block_size
+    blocked = x.reshape(t, nb, block_size)
+    amax = jnp.max(jnp.abs(blocked), axis=-1)  # (t, nb)
+    e_unb = _floor_log2(amax) - fmt.emax + F.E8M0_BIAS
+    e_biased = jnp.clip(jnp.where(amax > 0, e_unb, 0), 0,
+                        254).astype(jnp.uint8)
+    scale = _decode_e8m0(e_biased)[..., None]
+    ratio = jnp.where(scale > 0, blocked / scale, 0.0)
+    ratio = jnp.clip(ratio, -fmt.max, fmt.max).reshape(t, d)
+    if fmt.name == "fp4_e2m1":
+        return _pack_fp4(_encode_fp4_codes(ratio)), e_biased
+    return F.snap_to_fp8_grid(ratio, fmt).astype(fmt.storage_dtype), e_biased
+
+
+def _flash_update(m_ref, l_ref, acc_ref, q, k, v, mask, softcap):
+    """One online-softmax accumulation step over a (PS, D) key/value tile.
+
+    Shared by the decode/verify and prefill kernels so the accumulation
+    order (and therefore the f32 rounding) of every fused path is
+    identical by construction. ``q`` (R, D) f32, ``mask`` (R, PS) bool.
+    """
+    d = q.shape[-1]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * (d ** -0.5)  # (R, PS)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]  # (R, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # the explicit mask (not just exp(NEG_INF - m)) guards the
+    # all-masked tile: there m_new == NEG_INF and the difference is 0
+    probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (R, PS)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
+                                              keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _first_window_page(qpos_min, window, page_size: int):
+    """Index of the first page any query can see under a sliding window.
+
+    The earliest key row any of the chunk's queries attends is
+    ``qpos_min - window + 1`` (the *oldest* query bounds it); pages wholly
+    below that hold only masked keys, so both the kernel body and the
+    BlockSpec index maps can skip them — the head-page analogue of the
+    past-``seq_len`` tail skip. ``window is None`` disables the clamp.
+    """
+    if window is None:
+        return 0
+    return jnp.maximum((qpos_min - window + 1) // page_size, 0)
+
+
 def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
                           vs_ref, o_ref, visits_ref, m_ref, l_ref, acc_ref,
                           *, page_size: int, fmt_name: str, block_size: int,
@@ -292,6 +367,13 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
     query ``i`` sees keys ``kpos <= seq_len - num_q + i`` (intra-chunk
     causality), so drafted tokens never attend to their own successors.
     ``num_q == 1`` is exactly the decode kernel this generalizes.
+
+    Sliding-window head skip: pages wholly below the oldest query's
+    window (``p < _first_window_page``) are skipped exactly like tail
+    pages past ``seq_len`` — their keys are fully masked, so the body is
+    predicated away (``visits`` counts only pages actually inside the
+    window) and the index maps re-point them at the first in-window page
+    so their DMA is elided by the revisit rule.
     """
     i = pl.program_id(0)
     p = pl.program_id(2)
@@ -306,23 +388,19 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
 
     seq_len = lens_ref[i]  # wrapper-clamped to >= num_q
     valid_pages = pl.cdiv(seq_len, page_size)
+    first_page = _first_window_page(seq_len - num_q, window, page_size)
 
-    @pl.when(p < valid_pages)
+    @pl.when((p >= first_page) & (p < valid_pages))
     def _page():
         # the skip predicate's audit trail: counts page bodies actually
         # executed, so tests/benchmarks can assert work == resident pages
+        # inside the window
         visits_ref[0, 0, 0] += 1
         q = q_ref[0, 0].astype(jnp.float32)  # (num_q * G, D)
         k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
                           fmt_name, block_size)  # (PS, D)
         v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
                           fmt_name, block_size)
-        d = q.shape[-1]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * (d ** -0.5)  # (R, PS)
-        if softcap:
-            s = jnp.tanh(s / softcap) * softcap
         kpos = p * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, page_size), 1)
         rows = num_q * group
@@ -333,19 +411,7 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         mask = kpos <= qpos  # (R, PS)
         if window is not None:
             mask &= kpos > qpos - window
-        s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]  # (R, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        # the explicit mask (not just exp(NEG_INF - m)) guards the
-        # all-masked tile: there m_new == NEG_INF and the difference is 0
-        probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (R, PS)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
-                                                  keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            probs, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _flash_update(m_ref, l_ref, acc_ref, q, k, v, mask, softcap)
 
     @pl.when(p == last)
     def _finish():
@@ -386,10 +452,13 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     ``debug_visits=True`` additionally returns a (B, KVH, 1) i32 count of
     page bodies actually executed per cell — the kernel always maintains
     it (one scalar store per visited tile), and tests/benchmarks assert
-    it equals ``ceil(seq_lens / PS)`` exactly, making the page-skip
-    predicate falsifiable on every backend (off-TPU, interpret-mode
-    wall-clock cannot see the skip: the grid loop visits every cell and
-    only the body is predicated away).
+    it equals ``ceil(seq_lens / PS)`` exactly (minus, under a sliding
+    window, the head pages wholly below the oldest query's window, which
+    are skipped like tail pages — visits is then exactly the page count
+    actually *inside* the window), making the page-skip predicate
+    falsifiable on every backend (off-TPU, interpret-mode wall-clock
+    cannot see the skip: the grid loop visits every cell and only the
+    body is predicated away).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -406,11 +475,15 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
 
     def pool_spec(width):
         def imap(i, j, p, tbl, ln):
-            # clamp skipped steps to the last valid page (ln is
-            # wrapper-clamped >= Tq >= 1, so valid >= 1): an unchanged
-            # block index means the pipeline elides the DMA entirely
+            # clamp skipped steps into the live page range: tail steps
+            # (p >= valid) re-point at the last valid page, head steps
+            # wholly below the sliding window at the first in-window
+            # page (ln is wrapper-clamped >= Tq >= 1, so valid >= 1).
+            # An unchanged block index means the pipeline elides the
+            # DMA entirely, so skipped pages cost no HBM traffic.
             valid = pl.cdiv(ln[i], ps)
-            return (tbl[i, jnp.minimum(p, valid - 1)], 0, j, 0)
+            first = _first_window_page(ln[i] - tq, window, ps)
+            return (tbl[i, jnp.clip(p, first, valid - 1)], 0, j, 0)
         return pl.BlockSpec((1, ps, 1, width), imap)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -489,3 +562,262 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
         out, visits = res
         return out[:, :, 0], visits
     return res[:, :, 0]
+
+
+# ---------------------------------------------------------------------------
+# single-pass fused chunked prefill: page walk + quantize-write + attention
+# ---------------------------------------------------------------------------
+
+
+def _mx_attn_prefill_kernel(tbl_ref, start_ref, lens_ref, q_ref, kc_ref,
+                            vc_ref, ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
+                            oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
+                            m_ref, l_ref, acc_ref, *, page_size: int,
+                            fmt_name: str, block_size: int, softcap, window,
+                            chunk: int, group: int):
+    """One page tile of one (batch, kv-head) prefill cell.
+
+    The page walk splits into three regions per cell:
+
+      * ``p < c0`` (resident pages, written by earlier chunks / a shared
+        prefix): read the compact pool tile, dequantize in-register, fold
+        into the online softmax — exactly the verify kernel's body.
+      * ``c0 <= p < valid`` (this chunk's own pages): quantize the
+        chunk's wide K/V page slice in-register (``_quantize_rows``, the
+        exact ``core.quantize`` math), store the compact tile to the
+        sequence's pool page through the *output* index map, and attend
+        over the in-register dequantized snap — the same bytes any later
+        reader will load, so prefill, decode and verify agree
+        bit-for-bit. The wide K/V rows never touch HBM beyond the
+        one-chunk projection output.
+      * ``p >= valid`` / ``p < first`` (past the resident rows / wholly
+        below the sliding window): body predicated away, DMA elided by
+        index-map clamping.
+
+    Chunk alignment contract (enforced by the nn wrapper): chunk starts
+    are page-aligned and the chunk covers whole pages, so every visited
+    page is *either* fully resident *or* fully owned by this chunk —
+    never a blend. The last chunk of a prompt is padded up to the fixed
+    chunk length; ``seq_len`` counts only the real rows, so wholly-padded
+    pages are never written and the partial last page's padding rows are
+    dead by position masking (exactly like rejected speculative drafts).
+    """
+    i = pl.program_id(0)
+    p = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        visits_ref[0, 0, 0] = 0
+
+    start = start_ref[i]  # chunk start row, page-aligned
+    seq_len = lens_ref[i]  # resident rows incl. this chunk's real tokens
+    c0 = start // page_size
+    valid_pages = pl.cdiv(seq_len, page_size)
+    first_page = _first_window_page(start, window, page_size)
+
+    def _attend_tile(k, v):
+        q = q_ref[0, 0].astype(jnp.float32)  # (chunk * G, D)
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        rows = chunk * group
+        # row r belongs to chunk query r // group at absolute position
+        # start + r // group (intra-chunk causality per row)
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, 1), 0) // group
+        mask = kpos <= qpos  # (R, PS)
+        if window is not None:
+            mask &= kpos > qpos - window
+        _flash_update(m_ref, l_ref, acc_ref, q, k, v, mask, softcap)
+
+    @pl.when((p >= first_page) & (p < c0))
+    def _resident_page():
+        visits_ref[0, 0, 0] += 1
+        k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                          fmt_name, block_size)  # (PS, D)
+        v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                          fmt_name, block_size)
+        _attend_tile(k, v)
+
+    @pl.when((p >= c0) & (p < valid_pages))
+    def _chunk_page():
+        visits_ref[0, 0, 0] += 1
+        kw = kc_ref[0, :, 0, :].astype(jnp.float32)  # (PS, D) wide
+        vw = vc_ref[0, :, 0, :].astype(jnp.float32)
+        kq_e, kq_s = _quantize_rows(kw, fmt_name, block_size)
+        vq_e, vq_s = _quantize_rows(vw, fmt_name, block_size)
+        oke_ref[0, :, 0, :] = kq_e
+        oks_ref[0, :, 0, :] = kq_s
+        ove_ref[0, :, 0, :] = vq_e
+        ovs_ref[0, :, 0, :] = vq_s
+        # attend over the in-register dequantized snap — identical bytes
+        # (and therefore identical f32 values) to what a later page read
+        # would produce, without a round trip through HBM
+        _attend_tile(_dequant_rows(kq_e, kq_s, fmt_name, block_size),
+                     _dequant_rows(vq_e, vq_s, fmt_name, block_size))
+
+    @pl.when(p == last)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
+                               ve_pool, vs_pool, page_table, chunk_start,
+                               seq_lens, *, fmt_name: str = "fp8_e4m3",
+                               block_size: int = 32, softcap=None,
+                               window=None, debug_visits: bool = False,
+                               interpret: bool | None = None):
+    """Single-pass fused chunked paged prefill (quantize-into-pages).
+
+    One prompt chunk of ``C`` tokens runs against the MX page pool in a
+    single Pallas kernel: the chunk's queries attend over every page
+    written so far *plus* the chunk itself (per-row causal masking, the
+    prefill generalization of :func:`mx_attention_verify_fused`'s draft
+    chunk), and the chunk's own K/V is quantized in-register and written
+    straight into its pool pages through aliased outputs whose index maps
+    walk the scalar-prefetched page table. No wide prefill cache is ever
+    materialized and no separate install pass runs: per-chunk work scales
+    with the tokens resident so far, and the serve engine's jitted trace
+    population for prefill is O(1) fixed chunk shapes.
+
+    Layouts::
+
+      q          (B, KVH, C, G, D)  wide chunk queries (RoPE'd)
+      k_chunk    (B, C, KVH, D)     wide chunk keys (RoPE'd)
+      v_chunk    (B, C, KVH, D)     wide chunk values
+      pools      (NP, PS, KVH, ED/NB) as the decode/verify kernels
+      page_table (B, P) i32         entries < 0 = unallocated (clamped)
+      chunk_start (B,) i32          chunk's first absolute row; must be
+                                    page-aligned (see alignment contract)
+      seq_lens   (B,) i32           resident rows *including* the chunk's
+                                    real tokens, i.e. chunk_start + the
+                                    number of non-padding chunk rows
+
+    Alignment contract (the nn layer enforces it statically): ``C`` is a
+    page multiple and ``chunk_start`` is page-aligned, so every page is
+    either fully resident or fully this chunk's — the kernel never blends
+    pool rows and chunk rows inside one tile. The last chunk of a prompt
+    is padded up to ``C``; ``seq_lens`` counts only real rows, so pages
+    wholly past ``seq_lens`` are neither written nor read, and padding
+    rows sharing the final partial page are written as garbage that every
+    reader masks by position (the same dead-row contract as rejected
+    speculative drafts). Padding queries produce garbage output rows the
+    caller ignores.
+
+    Returns ``(out (B, KVH, C, G, D) f32, (ke, ks, ve, vs) updated
+    pools)`` — the pool outputs alias the inputs (in-place page writes
+    under jit donation). With ``debug_visits=True`` additionally returns
+    the (B, KVH, 1) executed-page counter; it must equal
+    ``ceil(seq_lens / PS)`` minus the pages wholly below the sliding
+    window, exactly as in the decode/verify kernels.
+
+    When ``B > 1``, rows must not share pages between one row's chunk
+    range and another row's read range (the serve engine prefills one
+    sequence per call; batched calls are for tests/benchmarks with
+    disjoint tables).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _check_fmt(ke_pool, fmt_name)
+    b, kvh, c, g, d = q.shape
+    rows = c * g
+    npages, ps = ke_pool.shape[0], ke_pool.shape[1]
+    ed = ke_pool.shape[-1]
+    nb = ks_pool.shape[-1]
+    pmax = page_table.shape[1]
+    if c % ps != 0:
+        raise ValueError(
+            f"chunk length {c} must be a whole number of pages "
+            f"(page_size={ps}): a partial chunk page would blend resident "
+            "and chunk rows inside one tile")
+    cps = c // ps  # chunk pages (static)
+    table = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, npages - 1)
+    start = jnp.asarray(chunk_start, jnp.int32)
+    # at least one real token per chunk, at most the whole chunk
+    lens = jnp.clip(jnp.asarray(seq_lens, jnp.int32), start + 1, start + c)
+    qr = q.reshape(b, kvh, rows, d)
+
+    def pool_in_spec(width):
+        def imap(i, j, p, tbl, st, ln):
+            # resident pages map to themselves; chunk pages (whose pool
+            # bytes are stale — the kernel writes them this pass) and
+            # below-window head pages re-point at the nearest live
+            # resident page so their DMA is elided by the revisit rule.
+            # A chunk starting at row 0 has no resident pages at all;
+            # the clamp then parks every read on the first chunk page's
+            # pool slot, whose bytes the body never uses.
+            c0 = st[i] // ps
+            first = _first_window_page(st[i], window, ps)
+            hi = jnp.maximum(c0 - 1, first)
+            return (tbl[i, jnp.clip(p, first, hi)], 0, j, 0)
+        return pl.BlockSpec((1, ps, 1, width), imap)
+
+    def chunk_in_spec():
+        def imap(i, j, p, tbl, st, ln):
+            # page p of the walk is chunk page p - c0; steps outside the
+            # chunk range clamp to its ends (same-index revisit = no DMA)
+            return (i, jnp.clip(p - st[i] // ps, 0, cps - 1), j, 0)
+        return pl.BlockSpec((1, ps, 1, d), imap)
+
+    def pool_out_spec(width):
+        def imap(i, j, p, tbl, st, ln):
+            # steps below the chunk park on the first chunk page (it is
+            # written before the index ever changes), steps past the
+            # last written page park on it (flushed once at cell end)
+            c0 = st[i] // ps
+            valid = pl.cdiv(ln[i], ps)
+            return (tbl[i, jnp.clip(p, c0, valid - 1)], 0, j, 0)
+        return pl.BlockSpec((1, ps, 1, width), imap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, tbl, st, ln: (i, j, 0, 0)),
+            chunk_in_spec(), chunk_in_spec(),
+            pool_in_spec(ed), pool_in_spec(nb),
+            pool_in_spec(ed), pool_in_spec(nb),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, tbl, st, ln: (i, j, 0, 0)),
+            pool_out_spec(ed), pool_out_spec(nb),
+            pool_out_spec(ed), pool_out_spec(nb),
+            pl.BlockSpec((1, 1, 1), lambda i, j, p, tbl, st, ln: (i, j, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),  # running max m
+            pltpu.VMEM((rows, 1), jnp.float32),  # running denominator l
+            pltpu.VMEM((rows, d), jnp.float32),  # rescaled partial output
+        ],
+    )
+    kernel = functools.partial(
+        _mx_attn_prefill_kernel, page_size=ps, fmt_name=fmt_name,
+        block_size=block_size, softcap=softcap, window=window,
+        chunk=c, group=g)
+    out, oke, oks, ove, ovs, visits = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct(ke_pool.shape, ke_pool.dtype),
+            jax.ShapeDtypeStruct(ks_pool.shape, ks_pool.dtype),
+            jax.ShapeDtypeStruct(ve_pool.shape, ve_pool.dtype),
+            jax.ShapeDtypeStruct(vs_pool.shape, vs_pool.dtype),
+            jax.ShapeDtypeStruct((b, kvh, 1), jnp.int32),
+        ],
+        # pools update in place (indices count the scalar-prefetch
+        # operands: tbl=0, start=1, lens=2, q=3, k_chunk=4, v_chunk=5)
+        input_output_aliases={6: 1, 7: 2, 8: 3, 9: 4},
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(table, start, lens, qr, k_chunk, v_chunk,
+      ke_pool, ks_pool, ve_pool, vs_pool)
+    out = out.reshape(b, kvh, c, g, d)
+    pools = (oke, oks, ove, ovs)
+    return (out, pools, visits) if debug_visits else (out, pools)

@@ -59,6 +59,20 @@ def main(argv=None):
                     help="paged decode attention path: single-pass fused "
                          "Pallas flash-decode (default) or the reference "
                          "gather-and-dequantize einsum")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "monolithic"],
+                    help="prompt prefill path: 'chunked' (default) streams "
+                         "fixed-size chunks straight into MX pages "
+                         "(fused quantize-into-pages kernel, O(1) jit "
+                         "traces, decode-interleaved admission); "
+                         "'monolithic' is the dense reference oracle")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="chunked-prefill chunk length in tokens (must be "
+                         "a multiple of --page-size)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="max prefill tokens per engine step, spent "
+                         "round-robin across admitted prompts "
+                         "(default: one chunk)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="greedy speculative decoding: draft K tokens per "
                          "step (prompt-lookup n-gram, no second model) and "
@@ -93,7 +107,10 @@ def main(argv=None):
         prefix_cache=not args.no_prefix_cache,
         decode_kernel=args.decode_kernel,
         spec_decode=args.spec_decode,
-        num_draft_tokens=args.num_draft_tokens)
+        num_draft_tokens=args.num_draft_tokens,
+        prefill_mode=args.prefill_mode,
+        prefill_chunk=args.prefill_chunk,
+        prefill_token_budget=args.prefill_token_budget or None)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
     rng = np.random.default_rng(0)
 
@@ -120,6 +137,16 @@ def main(argv=None):
                  stats["peak_paged_bytes"] / 1024, stats["preemptions"],
                  stats["prefix_hit_rate"], stats["prefill_tokens_computed"],
                  stats["prompt_tokens"])
+        if "admission_latency_p95" in stats:
+            log.info("admission latency (submit -> first token): "
+                     "p50 %.3fs p95 %.3fs mean %.3fs over %d requests "
+                     "(%s prefill, %d chunks, %d live prefill traces)",
+                     stats["admission_latency_p50"],
+                     stats["admission_latency_p95"],
+                     stats["admission_latency_mean"],
+                     len(engine.admission_latencies) or len(ids),
+                     "chunked" if engine.chunked else "monolithic",
+                     stats["prefill_chunks"], stats["prefill_traces"])
         if args.spec_decode:
             log.info("speculative decode: %.2f accepted tokens/step over "
                      "%d verify steps (draft acceptance %.2f)",

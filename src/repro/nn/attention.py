@@ -396,9 +396,15 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
     lead = pool["k" if "k" in pool else "k_elems"]
     npages, ps = lead.shape[0], lead.shape[1]
     pmax = page_rows.shape[1]
-    widx = jnp.clip(posv // ps, 0, pmax - 1)  # (B, Tq) page-table columns
-    page = jnp.take_along_axis(page_rows, widx, axis=1)
-    page = jnp.where(page < 0, npages, page)  # OOB: dropped by mode="drop"
+    widx = posv // ps  # (B, Tq) page-table columns
+    page = jnp.take_along_axis(page_rows, jnp.clip(widx, 0, pmax - 1),
+                               axis=1)
+    # OOB: dropped by mode="drop". Unallocated entries are -1, and a
+    # position past the table's extent must drop too, not clamp into the
+    # last column — a padded final prefill chunk can reach past the
+    # table while the sequence legitimately owns its last page, and a
+    # clamped write would scatter garbage over live cache rows there.
+    page = jnp.where((page < 0) | (widx > pmax - 1), npages, page)
     slot = posv % ps
 
     pool = dict(pool)
@@ -444,6 +450,67 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
     y = linear.apply(params["wo"], out.reshape(b, tq, h * d), quant,
                      compute_dtype, tp_on="in")
     return y, pool
+
+
+def apply_prefill_chunked(params, x, pool, page_rows, pos, num_valid,
+                          cfg: AttnConfig, quant: QuantConfig,
+                          compute_dtype=jnp.bfloat16):
+    """One chunk of paged prefill: x (B, C, d_model), pos (B,), num_valid
+    (B,).
+
+    The chunked-prefill generalization of :func:`apply_verify_paged`:
+    ``C`` prompt tokens at absolute positions ``pos .. pos + C - 1``
+    (``pos`` page-aligned, ``C`` a page multiple — the engine enforces
+    both) attend over every page written so far plus themselves
+    intra-causally, and the chunk's K/V lands in the sequence's pages.
+    ``num_valid`` is how many chunk rows are real prompt tokens (the last
+    chunk of a prompt is padded up to the fixed ``C``; padding rows write
+    only dead-by-masking garbage and their outputs are ignored).
+
+    Two paths, selected by ``cfg.decode_kernel`` exactly as decode/verify:
+
+      * ``"fused"`` (MX pools) — :func:`mx_attention_prefill_fused`: one
+        Pallas kernel walks the page table, quantizes the chunk's K/V
+        in-register and writes it straight into its pages (aliased
+        outputs — no host-side install), and folds both resident pages
+        and the chunk's own quantized snap into one online softmax. No
+        wide K/V beyond the chunk's own (B, C, KVH, D) projection output
+        ever exists, and per-chunk work scales with resident tokens.
+      * ``"einsum"`` (reference oracle, and wide bf16 pools) — delegate
+        to :func:`apply_verify_paged` with Tq == C: host-side quantized
+        page writes, then the gather-and-dequantize masked attention.
+
+    Both share ``_project_decode_qkv`` / the ``core.quantize`` math with
+    decode and verify, so the cache bytes a chunk writes are bit-for-bit
+    what one-token decode at those positions would have written — the
+    invariant chunked-vs-monolithic token identity rests on.
+    """
+    if cfg.decode_kernel not in ("einsum", "fused"):
+        raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
+    if cfg.decode_kernel == "fused" and "k_elems" in pool:
+        from repro.kernels import mx_attention_prefill_fused
+
+        b, c, _ = x.shape
+        h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        pos = jnp.asarray(pos, jnp.int32)
+        posv = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        q, k, v = _project_decode_qkv(params, x, posv, cfg, quant,
+                                      compute_dtype)
+        qk = q.reshape(b, c, kvh, h // kvh, d).transpose(0, 2, 1, 3, 4)
+        out, (ke, ks, ve, vs) = mx_attention_prefill_fused(
+            qk, k, v, pool["k_elems"], pool["k_scales"], pool["v_elems"],
+            pool["v_scales"], page_rows, pos,
+            pos + jnp.asarray(num_valid, jnp.int32),
+            fmt_name=quant.fmt, block_size=min(quant.block_size, d),
+            softcap=cfg.softcap, window=cfg.window)
+        pool = dict(pool, k_elems=ke, k_scales=ks, v_elems=ve, v_scales=vs)
+        out = out.transpose(0, 2, 1, 3, 4).reshape(
+            b, c, h, d).astype(compute_dtype)
+        y = linear.apply(params["wo"], out.reshape(b, c, h * d), quant,
+                         compute_dtype, tp_on="in")
+        return y, pool
+    return apply_verify_paged(params, x, pool, page_rows, pos, cfg, quant,
+                              compute_dtype)
 
 
 def prefill_cache(params, x, positions, cfg: AttnConfig, quant: QuantConfig,

@@ -261,6 +261,29 @@ def apply_verify_paged(params, x, cache, page_rows, pos, bd: BlockDef,
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
+def apply_prefill_chunked(params, x, cache, page_rows, pos, num_valid,
+                          bd: BlockDef, cfg: ModelConfig):
+    """One chunk of paged prefill: x (B, C, d_model), pos (B,) chunk
+    starts, num_valid (B,) real tokens in the chunk.
+
+    Attention-only, like the verify path it generalizes: a recurrent
+    mixer's state is not paged, so chunk-at-a-time prefill against pages
+    has nothing to resume from (the engine falls back to monolithic
+    prefill for such models).
+    """
+    if bd.mixer != "attn":
+        raise NotImplementedError(
+            f"chunked paged prefill requires attention mixers, got "
+            f"{bd.mixer!r} (recurrent state is per-slot, not paged — "
+            "chunk-at-a-time prefill has no pages to resume from)")
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
+    h, cache = attention.apply_prefill_chunked(
+        params["mixer"], h, cache, page_rows, pos, num_valid,
+        _attn_cfg(cfg, bd), quant, dt)
+    return _decode_tail(params, x, h, bd, cfg), cache
+
+
 def _attn_prefill_qkv(mixer_params, h, positions, acfg, quant, dt):
     """Shared prefill prologue: QKV projection + RoPE at ``positions``.
 

@@ -277,6 +277,68 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     return logits, cache
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
+                        pos, num_valid, logit_idx):
+    """One fixed-size chunk of paged prefill: tokens (B, C), page_rows
+    (B, P), pos (B,) chunk start positions, num_valid (B,) real tokens in
+    the chunk, logit_idx (B,) which chunk row's logits to return.
+
+    The chunked-prefill analogue of :func:`verify_step_paged`: each slot
+    feeds ``C`` prompt tokens at absolute positions ``pos .. pos + C - 1``
+    straight against the paged MX cache — the chunk's K/V is quantized
+    into its pages (inside the fused kernel on the default path) and
+    every chunk query attends over the pages written so far plus the
+    chunk itself under per-row causal masking. Because ``C``, ``P`` and
+    the scalar shapes are fixed, a serve engine needs exactly ONE jitted
+    trace of this function for every prompt length and prefix-hit
+    combination — admission latency is O(chunk) and the trace population
+    is O(1), versus the monolithic path's O(distinct prompt lengths x
+    prefix pages).
+
+    Returns (logits (B, 1, V) of row ``logit_idx`` per slot, new cache).
+    Mid-prompt chunks pass a throwaway index (their logits are unused);
+    the final chunk passes its last real token's row, whose logits sample
+    the first generated token. Attention-only models (see
+    ``blocks.apply_prefill_chunked``).
+    """
+    x = _embed_inputs(params, cfg, tokens)
+    b = x.shape[0]
+    cache = dict(cache)
+    for j, bd in enumerate(cfg.prologue):
+        x, cache[f"prologue{j}"] = blocks.apply_prefill_chunked(
+            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
+            pos, num_valid, bd, cfg)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        new = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = blocks.apply_prefill_chunked(gparams[f"block{i}"], x,
+                                                gcache[i], page_rows, pos,
+                                                num_valid, bd, cfg)
+            new.append(c)
+        return x, tuple(new)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        x, cache[f"epilogue{j}"] = blocks.apply_prefill_chunked(
+            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
+            pos, num_valid, bd, cfg)
+    # slice the requested row BEFORE the final norm + lm head: every op is
+    # row-independent, so this matches the monolithic prefill's last-token
+    # logits bit-for-bit while paying the vocab matmul for one row only
+    idx = jnp.asarray(logit_idx, jnp.int32)[:, None, None]
+    x = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(b, 1, cfg.num_codebooks, cfg.vocab_size)
+    return logits, cache
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             max_seq: Optional[int] = None):
     """Process the prompt, build caches. Returns (last-token logits, cache)."""

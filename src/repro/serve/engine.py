@@ -37,6 +37,23 @@ in-register dequant across the chunk. Greedy acceptance + page-exact
 rollback keep the output token stream identical to non-speculative
 decode for any drafter (see ``spec_decode``).
 
+Prefill is chunked by default (``ServeConfig.prefill_mode="chunked"``):
+instead of one monolithic dense prefill per prompt — which materializes
+wide bf16 K/V for the whole prompt, installs it into pages afterwards,
+retraces per prompt length, and blocks every resident decoder for the
+full prompt duration — each prompt streams through fixed-size
+page-aligned chunks that run straight against the MX page pool
+(``model.prefill_chunk_paged`` over ``mx_attention_prefill_fused``: the
+chunk's K/V is quantized and written into its pages *inside* the kernel,
+and the chunk attends over everything resident plus itself). Chunks are
+interleaved with decode steps under a per-step token budget
+(Sarathi-style), so admission latency is O(chunk), head-of-line blocking
+disappears, and the engine needs exactly ONE jitted prefill trace.
+``prefill_mode="monolithic"`` keeps the dense path as the validated
+reference oracle (its per-length trace caches now LRU-bounded); both
+modes produce token-identical greedy streams because prefill, decode and
+verify share one projection/RoPE/quantize path.
+
 ``decode_kernel="einsum"`` is the escape
 hatch back to the gather-and-dequantize reference path (what wide bf16
 pools fall back to, and what ``benchmarks/decode_attention.py`` compares
@@ -51,6 +68,8 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
+from collections import OrderedDict, deque
 from typing import Dict, Optional
 
 import jax
@@ -97,6 +116,28 @@ class ServeConfig:
     spec_decode: bool = False
     num_draft_tokens: int = 4
     drafter: object = "ngram"
+    # prefill path: "chunked" (default) streams each prompt through
+    # fixed-size page-aligned chunks straight against the MX page pool
+    # (fused quantize-into-pages kernel, O(1) jitted traces, admission
+    # interleaved with decode under a per-step token budget);
+    # "monolithic" is the validated reference oracle — one dense prefill
+    # per prompt + page install, retracing per prompt length. Models with
+    # recurrent mixers fall back to monolithic automatically (their state
+    # is per-slot, not paged — chunks have nothing to resume from).
+    prefill_mode: str = "chunked"
+    # chunk length in tokens; must be a multiple of page_size so chunk
+    # starts stay page-aligned (no page ever blends two chunks)
+    prefill_chunk: int = 64
+    # max prefill tokens processed per engine step (Sarathi-style budget;
+    # default = one chunk). The budget is spent round-robin across
+    # admitted-but-prefilling sequences, so a short prompt's first token
+    # never waits for a long neighbour's full prompt.
+    prefill_token_budget: Optional[int] = None
+    # LRU bound on the monolithic path's per-(length, prefix) jitted
+    # prefill traces — a long-running server on the fallback path must
+    # not grow trace memory without limit (the chunked path needs no
+    # bound: its trace population is 1 by construction)
+    prefill_trace_cache: int = 32
 
 
 def _sample(logits, key, temperature: float):
@@ -201,13 +242,41 @@ class ContinuousBatchingEngine:
         if serve_cfg.prefix_cache and not self.prefix_enabled:
             log.info("prefix cache disabled: mixers %s are not attention-only",
                      sorted(mixers - {"attn"}))
+        if serve_cfg.prefill_mode not in ("chunked", "monolithic"):
+            raise ValueError(
+                f"unknown prefill_mode {serve_cfg.prefill_mode!r} "
+                "(expected 'chunked' or 'monolithic')")
+        # chunked prefill streams prompts through the paged attention
+        # pools, so it needs every mixer paged — recurrent state is
+        # per-slot and has no chunk to resume from; fall back like the
+        # prefix cache does rather than failing the whole engine
+        self.chunked = (serve_cfg.prefill_mode == "chunked"
+                        and mixers <= {"attn"})
+        if serve_cfg.prefill_mode == "chunked" and not self.chunked:
+            log.info("chunked prefill disabled: mixers %s are not "
+                     "attention-only; using monolithic prefill",
+                     sorted(mixers - {"attn"}))
+        if self.chunked:
+            if serve_cfg.prefill_chunk <= 0:
+                raise ValueError("prefill_chunk must be >= 1")
+            budget = serve_cfg.prefill_token_budget
+            if budget is not None and budget <= 0:
+                raise ValueError("prefill_token_budget must be >= 1")
+            # budget in whole chunks; anything below one chunk still
+            # makes progress (one chunk per step)
+            self._chunks_per_step = max(
+                1, (budget or serve_cfg.prefill_chunk)
+                // serve_cfg.prefill_chunk)
+        if serve_cfg.prefill_trace_cache < 1:
+            raise ValueError("prefill_trace_cache must be >= 1")
         self.scheduler = Scheduler(
             max_slots=serve_cfg.max_slots, num_pages=self.num_pages,
             page_size=ps, max_seq=serve_cfg.max_seq,
             prefix_cache=self.prefix_enabled,
             admit_window=serve_cfg.admit_window,
             num_draft_tokens=(serve_cfg.num_draft_tokens
-                              if self.spec_enabled else 0))
+                              if self.spec_enabled else 0),
+            prefill_chunk=(serve_cfg.prefill_chunk if self.chunked else 0))
         self.cache = model.init_paged_cache(
             cfg, serve_cfg.max_slots, self.num_pages, ps)
         # donate the cache pytree: without donation every decode step /
@@ -233,12 +302,31 @@ class ContinuousBatchingEngine:
                                 donate_argnums=() if cpu else (0, 1))
         self._copy_page = jax.jit(kv_cache.copy_page,
                                   donate_argnums=() if cpu else (0,))
-        self._prefill_fns = {}  # prompt length -> jitted prefill
-        self._prefill_tail_fns = {}  # (tail len, prefix pages) -> jitted
+        # monolithic-path trace caches, LRU-bounded (satellite of the
+        # chunked-prefill work: a long-running server on the fallback
+        # path must not grow trace memory with every novel length)
+        self._prefill_fns = OrderedDict()  # prompt length -> jitted
+        self._prefill_tail_fns = OrderedDict()  # (tail, prefix pages) ->
+        # the chunked path's ONE jitted trace: fixed (1, C) tokens, full
+        # page-table row, dynamic scalars — every prompt length and
+        # prefix hit reuses it
+        self._prefill_chunk = jax.jit(
+            lambda p, c, toks, rows, pos, nv, idx: model.prefill_chunk_paged(
+                p, self.cfg_decode, c, toks, rows, pos, nv, idx),
+            donate_argnums=() if cpu else (1,))
         self._key = jax.random.PRNGKey(0)
         self.steps = 0
         self.prompt_tokens = 0  # total prompt tokens admitted
         self.prefill_tokens = 0  # prompt tokens actually computed
+        self.prefill_chunks = 0  # chunked-prefill kernel invocations
+        self._rr_clock = 0  # cross-step round-robin cursor over prefills
+        # admission latency: wall seconds from submit() to the request's
+        # first sampled token (the serving-side tail-latency metric
+        # chunked prefill exists to improve). Bounded sliding window so a
+        # long-running server's stats stay O(1) memory — the same
+        # unbounded-growth class the LRU trace cap closes.
+        self._submit_time: Dict[int, float] = {}
+        self.admission_latencies: deque = deque(maxlen=4096)
         # speculative decoding stats
         self.spec_steps = 0  # verify steps run
         self.spec_seq_steps = 0  # (sequence, verify step) participations
@@ -248,42 +336,62 @@ class ContinuousBatchingEngine:
 
     # -- internals ----------------------------------------------------------
 
+    def _lru_trace(self, store: OrderedDict, key, build):
+        """Fetch-or-build a jitted trace with LRU eviction at the cap.
+
+        The monolithic path traces per prompt length (and per
+        (tail, prefix) pair), so an unbounded dict grows with every novel
+        length a long-running server sees; evicting the LRU entry drops
+        the jit wrapper and its compiled executables with it.
+        """
+        fn = store.get(key)
+        if fn is None:
+            fn = build()
+            store[key] = fn
+        else:
+            store.move_to_end(key)
+        while len(store) > self.serve_cfg.prefill_trace_cache:
+            store.popitem(last=False)
+        return fn
+
     def _prefill_for(self, length: int):
-        """Jitted single-request prefill, cached per prompt length.
+        """Jitted single-request prefill, LRU-cached per prompt length.
 
         max_seq rounds up to the page boundary so the cache T dim factors
         into whole pages. No padding of the tokens themselves: prefill
         numerics stay exactly those of the fixed-slot batch prefill.
         """
-        fn = self._prefill_fns.get(length)
-        if fn is None:
-            ps = self.serve_cfg.page_size
-            max_seq = kv_cache.pages_for(length, ps) * ps
-            fn = jax.jit(lambda p, toks: model.prefill(
-                p, self.cfg_prefill, tokens=toks, max_seq=max_seq))
-            self._prefill_fns[length] = fn
-        return fn
+        ps = self.serve_cfg.page_size
+        max_seq = kv_cache.pages_for(length, ps) * ps
+        return self._lru_trace(
+            self._prefill_fns, length,
+            lambda: jax.jit(lambda p, toks: model.prefill(
+                p, self.cfg_prefill, tokens=toks, max_seq=max_seq)))
 
     def _prefill_tail_for(self, tail_len: int, n_prefix: int):
-        """Jitted tail prefill, cached per (tail length, prefix pages).
+        """Jitted tail prefill, LRU-cached per (tail length, prefix pages).
 
         Reads the shared prefix pages out of the live paged cache and
         prefills only the uncached tail at absolute positions — the
-        prefix-cache fast path.
+        prefix-cache fast path of the monolithic mode.
         """
-        fn = self._prefill_tail_fns.get((tail_len, n_prefix))
-        if fn is None:
-            ps = self.serve_cfg.page_size
-            max_seq = kv_cache.pages_for(tail_len, ps) * ps
-            fn = jax.jit(lambda p, c, toks, rows: model.prefill_with_prefix(
+        ps = self.serve_cfg.page_size
+        max_seq = kv_cache.pages_for(tail_len, ps) * ps
+        return self._lru_trace(
+            self._prefill_tail_fns, (tail_len, n_prefix),
+            lambda: jax.jit(lambda p, c, toks, rows: model.prefill_with_prefix(
                 p, self.cfg_prefill, c, toks, rows, n_prefix * ps,
-                max_seq=max_seq))
-            self._prefill_tail_fns[(tail_len, n_prefix)] = fn
-        return fn
+                max_seq=max_seq)))
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def _record_first_token(self, req_id: int) -> None:
+        """Admission-latency sample: submit() -> first sampled token."""
+        t0 = self._submit_time.pop(req_id, None)
+        if t0 is not None:
+            self.admission_latencies.append(time.perf_counter() - t0)
 
     def _admit(self):
         sched = self.scheduler
@@ -295,7 +403,8 @@ class ContinuousBatchingEngine:
                 # swapped-out sequence: restore the exact bytes of the
                 # pages it exclusively owned into their fresh replacements
                 # (shared prefix pages stayed resident under other refs);
-                # its pending token decodes next step
+                # its pending token decodes — or its prefill resumes —
+                # next step
                 snapshot, owned_idx, *_ = seq.req.swap
                 seq.req.swap = None
                 if owned_idx:
@@ -307,6 +416,11 @@ class ContinuousBatchingEngine:
                 continue
             prompt = seq.req.prompt
             self.prompt_tokens += len(prompt)
+            if seq.prefill_pos is not None:
+                # chunked mode: admission only binds the slot and pages;
+                # the prompt streams through _run_prefill_chunks under
+                # the per-step token budget
+                continue
             cached = seq.cached_tokens
             if cached:
                 # prefix hit: prefill only the uncached tail against the
@@ -331,6 +445,62 @@ class ContinuousBatchingEngine:
             sched.register_prefix(seq)
             tok = int(_sample(logits, self._next_key(),
                               self.serve_cfg.temperature)[0])
+            self._record_first_token(seq.req.id)
+            sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
+
+    def _run_prefill_chunks(self) -> None:
+        """Advance chunked prefills by up to the per-step token budget.
+
+        The budget is spent round-robin across prefilling sequences, with
+        the rotation carried *across* steps (``_rr_clock``): a short
+        prompt admitted behind a long one gets its first token after its
+        own few chunks, not after the long prompt completes — the
+        processor-sharing schedule that moves the admission-latency tail
+        (a per-step restart from the oldest sequence would let a long
+        prompt hog every one-chunk budget). Each chunk is one call of
+        the single jitted trace; the final chunk of a prompt samples the
+        request's first token and flips the sequence to decoding.
+        """
+        if not self.chunked:
+            return
+        sched = self.scheduler
+        budget = self._chunks_per_step
+        while budget > 0:
+            pref = sched.prefilling()
+            if not pref:
+                return
+            self._prefill_one_chunk(pref[self._rr_clock % len(pref)])
+            self._rr_clock += 1
+            budget -= 1
+
+    def _prefill_one_chunk(self, seq) -> None:
+        """Run one fixed-size chunk of ``seq``'s prompt through the paged
+        prefill step; on the final chunk, sample the first token."""
+        sched = self.scheduler
+        c = self.serve_cfg.prefill_chunk
+        prompt = seq.req.prompt
+        start = seq.prefill_pos
+        real = min(c, len(prompt) - start)
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :real] = prompt[start:start + real]
+        rows = np.full((1, sched.pages_per_slot), -1, np.int32)
+        rows[0, : len(seq.pages)] = seq.pages
+        final = start + real >= len(prompt)
+        logits, self.cache = self._prefill_chunk(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(rows), jnp.asarray([start], jnp.int32),
+            jnp.asarray([real], jnp.int32),
+            jnp.asarray([real - 1], jnp.int32))
+        self.prefill_tokens += real
+        self.prefill_chunks += 1
+        seq.pos = start + real
+        seq.prefill_pos = start + c
+        if final:
+            seq.prefill_pos = None
+            sched.register_prefix(seq)
+            tok = int(_sample(logits, self._next_key(),
+                              self.serve_cfg.temperature)[0])
+            self._record_first_token(seq.req.id)
             sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
 
     def _swap_out(self, victim) -> None:
@@ -360,7 +530,7 @@ class ContinuousBatchingEngine:
         for req in sched.queue:
             if req.swap is None:
                 continue
-            snapshot, owned_idx, pages, pos, cached = req.swap
+            snapshot, owned_idx, pages, pos, cached, prefill_pos = req.swap
             owned = set(owned_idx)
             shared_idx = [i for i in range(len(pages)) if i not in owned]
             if not shared_idx:
@@ -369,7 +539,8 @@ class ContinuousBatchingEngine:
                 self.cache, jnp.asarray(0, jnp.int32),
                 jnp.asarray([pages[i] for i in shared_idx], jnp.int32))
             req.swap = (kv_cache.merge_snapshots(snapshot, extra),
-                        owned_idx + shared_idx, pages, pos, cached)
+                        owned_idx + shared_idx, pages, pos, cached,
+                        prefill_pos)
             sched.pool.free([pages[i] for i in shared_idx])
             released = True
         return released
@@ -406,7 +577,7 @@ class ContinuousBatchingEngine:
         page this sequence owns alone)."""
         sched = self.scheduler
         ps = self.serve_cfg.page_size
-        for seq in list(sched.active()):
+        for seq in list(sched.decode_ready()):
             if sched.slots[seq.slot] is not seq:
                 continue  # already preempted by an elder this pass
             while not sched.try_grow(seq, num_tokens):
@@ -432,8 +603,9 @@ class ContinuousBatchingEngine:
                     sched.cow_copies += 1
 
     def step(self) -> bool:
-        """Admit what fits, run one decode (or speculative verify) step.
-        Returns True if any work remains afterwards."""
+        """Admit what fits, advance prefill chunks under the token
+        budget, run one decode (or speculative verify) step over the
+        decode-ready slots. Returns True if any work remains afterwards."""
         sched = self.scheduler
         self._admit()
         if not sched.active():
@@ -443,6 +615,11 @@ class ContinuousBatchingEngine:
                 if sched.queue:
                     raise RuntimeError("scheduler stalled with queued work")
                 return sched.has_work
+        self._run_prefill_chunks()
+        if not sched.decode_ready():
+            # every active sequence is still streaming its prompt; the
+            # chunk(s) above were this step's progress
+            return sched.has_work
         if self.spec_enabled:
             self._spec_step()
             return sched.has_work
@@ -519,7 +696,9 @@ class ContinuousBatchingEngine:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         """Queue one request; returns its id. Use with :meth:`run`."""
-        return self.scheduler.submit(prompt, max_new_tokens)
+        rid = self.scheduler.submit(prompt, max_new_tokens)
+        self._submit_time[rid] = time.perf_counter()
+        return rid
 
     def run(self) -> Dict[int, np.ndarray]:
         """Serve until drained. Returns {request_id: prompt + generated}."""
@@ -564,13 +743,26 @@ class ContinuousBatchingEngine:
             "preemptions": sched.preemptions,
             "peak_paged_bytes": page_bytes * sched.peak_pages,
             "skipped_admissions": sched.skipped_admissions,
+            "deferred_admissions": sched.deferred_admissions,
             "cow_copies": sched.cow_copies,
             "prompt_tokens": self.prompt_tokens,
             "prefill_tokens_computed": self.prefill_tokens,
             "prefix_hit_rate": (
                 1.0 - self.prefill_tokens / self.prompt_tokens
                 if self.prompt_tokens else 0.0),
+            "prefill_chunks": self.prefill_chunks,
+            # the monolithic fallback's live jitted-trace population
+            # (LRU-bounded); the chunked path keeps exactly one trace
+            "prefill_traces": (len(self._prefill_fns)
+                               + len(self._prefill_tail_fns)),
         }
+        if self.admission_latencies:
+            lat = np.sort(np.asarray(self.admission_latencies))
+            stats["admission_latency_p50"] = float(
+                lat[int(0.50 * (len(lat) - 1))])
+            stats["admission_latency_p95"] = float(
+                lat[int(round(0.95 * (len(lat) - 1)))])
+            stats["admission_latency_mean"] = float(lat.mean())
         if self.spec_enabled:
             stats.update({
                 "spec_steps": self.spec_steps,

@@ -14,6 +14,21 @@ page table — while requests enter and leave mid-stream:
     matched pages are retained (ref-counted) into the request's page
     table and only the uncached tail is prefilled. Fresh full prompt
     pages are inserted back into the radix tree after install.
+  * **chunked prefill** — with ``prefill_chunk`` set, admission only binds
+    the slot and pages (the prompt's worth, exactly as monolithic) and
+    marks the sequence ``prefill_pos = cached_tokens``; the engine then
+    streams the prompt through fixed-size page-aligned chunks under a
+    per-step token budget, interleaved with decode steps (Sarathi-style),
+    so resident decoders never stall behind a long prompt and admission
+    latency is O(chunk). ``assemble`` skips prefilling sequences — they
+    have no pending token until the final chunk's logits are sampled.
+    Preempting a mid-prefill sequence is legal: the swap tuple carries
+    ``prefill_pos`` and re-admission resumes chunking where it stopped.
+    Because admission is decoupled from prefill, a request sharing an
+    unregistered page-aligned head with a still-prefilling sequence is
+    *deferred* (``deferred_admissions``) until those pages register in
+    the prefix tree — otherwise a shared-prefix burst would race past
+    the tree and prefill private copies of the same pages.
   * **decode paging** — each step, a slot crossing a page boundary pulls a
     fresh page from the pool. A dry pool first evicts LRU unreferenced
     prefix-tree leaves; if still dry, the *youngest* other active request
@@ -53,6 +68,14 @@ from .kv_cache import PagePool, pages_for, pages_spanned
 from .prefix_cache import PrefixCache
 
 
+def _common_pages(a: np.ndarray, b: np.ndarray, page_size: int) -> int:
+    """Whole pages of identical leading tokens between two prompts."""
+    n = min(len(a), len(b))
+    diff = np.flatnonzero(a[:n] != b[:n])
+    common = int(diff[0]) if len(diff) else n
+    return common // page_size
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request. ``generated`` and ``swap`` survive preemption."""
@@ -62,11 +85,16 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     # preemption snapshot: (cache_snapshot, owned_idx, pages, resident
-    # tokens, cached_tokens). ``owned_idx`` are the page-table positions
-    # that were exclusively owned (extracted + freed); the remaining
-    # entries of ``pages`` stayed retained (shared) across the swap.
-    # Restored verbatim on re-admission so generation stays bit-identical.
+    # tokens, cached_tokens, prefill_pos). ``owned_idx`` are the
+    # page-table positions that were exclusively owned (extracted +
+    # freed); the remaining entries of ``pages`` stayed retained (shared)
+    # across the swap. ``prefill_pos`` is the chunked-prefill resume
+    # point (None once prefill completed). Restored verbatim on
+    # re-admission so generation stays bit-identical.
     swap: Optional[tuple] = None
+    # chunked admission deferred this request at least once (the stat
+    # counts requests, not retries — admit_next re-tries every step)
+    deferred: bool = False
 
     @property
     def remaining(self) -> int:
@@ -87,15 +115,31 @@ class ActiveSeq:
     pages: List[int]
     order: int  # admission sequence number (preemption picks the youngest)
     cached_tokens: int = 0  # page-aligned prefix-cache hit at admission
+    # chunked prefill: next chunk's start row (a multiple of the chunk
+    # length past ``cached_tokens``); None once the prompt is fully
+    # resident and the sequence decodes. While set, the sequence owns a
+    # slot but is skipped by assemble() — it has no pending token yet.
+    prefill_pos: Optional[int] = None
 
 
 class Scheduler:
     def __init__(self, *, max_slots: int, num_pages: int, page_size: int,
                  max_seq: int, prefix_cache: bool = False,
-                 admit_window: int = 4, num_draft_tokens: int = 0):
+                 admit_window: int = 4, num_draft_tokens: int = 0,
+                 prefill_chunk: int = 0):
         self.max_slots = max_slots
         self.page_size = page_size
         self.max_seq = max_seq
+        # chunked prefill (0 = monolithic): admission only binds the slot
+        # and pages; the engine streams the prompt through fixed-size
+        # chunks (page-aligned, so every chunk page is wholly owned by
+        # one chunk) interleaved with decode steps
+        if prefill_chunk and prefill_chunk % page_size != 0:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must be a multiple of "
+                f"page_size={page_size}: chunk starts must stay "
+                "page-aligned so no page blends two chunks")
+        self.prefill_chunk = prefill_chunk
         self.pages_per_slot = pages_for(max_seq, page_size)
         if num_pages < self.pages_per_slot:
             raise ValueError(
@@ -124,6 +168,7 @@ class Scheduler:
         self.preemptions = 0
         self.skipped_admissions = 0
         self.cow_copies = 0
+        self.deferred_admissions = 0  # chunked: waited for a prefix match
 
     # -- submission ---------------------------------------------------------
 
@@ -169,6 +214,16 @@ class Scheduler:
     def active(self) -> List[ActiveSeq]:
         return [s for s in self.slots if s is not None]
 
+    def prefilling(self) -> List[ActiveSeq]:
+        """Active sequences still streaming prompt chunks, oldest first."""
+        return sorted((s for s in self.active()
+                       if s.prefill_pos is not None),
+                      key=lambda s: s.order)
+
+    def decode_ready(self) -> List[ActiveSeq]:
+        """Active sequences with a pending token (prefill complete)."""
+        return [s for s in self.active() if s.prefill_pos is None]
+
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
@@ -189,7 +244,7 @@ class Scheduler:
     def _try_admit(self, req: Request, slot: int) -> Optional[ActiveSeq]:
         """Bind ``req`` to ``slot`` if its pages fit; None leaves no trace."""
         if req.swap is not None:
-            snapshot, owned_idx, pages, pos0, cached = req.swap
+            snapshot, owned_idx, pages, pos0, cached, prefill_pos = req.swap
             ids = self._alloc_with_evict(len(owned_idx))
             if ids is None:
                 return None
@@ -205,8 +260,30 @@ class Scheduler:
             hit, cached = ([], 0)
             if self.prefix is not None:
                 hit, cached = self.prefix.acquire(req.prompt)
-            pos0 = len(req.prompt)
-            ids = self._alloc_with_evict(pages_for(pos0, self.page_size)
+            if self.prefill_chunk and self.prefix is not None:
+                # chunked admission is decoupled from prefill, so a burst
+                # of shared-prefix prompts could race past the radix tree
+                # (monolithic admission registered each prompt's pages
+                # before the next request's lookup, making the race
+                # impossible). Defer a request whose prompt shares an
+                # unregistered page-aligned head with a sequence still
+                # streaming chunks: once that sequence registers, this
+                # request re-admits with a real tree hit and shares the
+                # pages instead of prefilling a private copy.
+                cap = (len(req.prompt) - 1) // self.page_size
+                for s in self.prefilling():
+                    shared = min(
+                        _common_pages(req.prompt, s.req.prompt,
+                                      self.page_size), cap)
+                    if shared * self.page_size > cached:
+                        if hit:
+                            self.pool.free(hit)
+                        if not req.deferred:
+                            req.deferred = True
+                            self.deferred_admissions += 1
+                        return None
+            prompt_len = len(req.prompt)
+            ids = self._alloc_with_evict(pages_for(prompt_len, self.page_size)
                                          - len(hit))
             if ids is None:
                 if hit:
@@ -215,8 +292,16 @@ class Scheduler:
             pages = hit + ids
             if self.prefix is not None:
                 self.prefix.record_lookup(cached)
+            if self.prefill_chunk:
+                # chunked: only the prefix hit is resident so far; the
+                # engine streams the tail through fixed chunks, advancing
+                # ``pos``/``prefill_pos`` as each chunk's rows land
+                pos0, prefill_pos = cached, cached
+            else:
+                pos0, prefill_pos = prompt_len, None
         seq = ActiveSeq(req=req, slot=slot, pos=pos0, pages=pages,
-                        order=self._order, cached_tokens=cached)
+                        order=self._order, cached_tokens=cached,
+                        prefill_pos=prefill_pos)
         self._order += 1
         self.slots[slot] = seq
         return seq
@@ -291,7 +376,8 @@ class Scheduler:
         self.pool.free([victim.pages[i] for i in owned_idx])
         self.slots[victim.slot] = None
         victim.req.swap = (snapshot, owned_idx, list(victim.pages),
-                           victim.pos, victim.cached_tokens)
+                           victim.pos, victim.cached_tokens,
+                           victim.prefill_pos)
         self.queue.appendleft(victim.req)
         self.preemptions += 1
 
@@ -322,15 +408,18 @@ class Scheduler:
         Returns (tokens (NS, 1 + extra_tokens), pos (NS,), page_rows
         (NS, P), active) — inactive rows are token 0 / pos 0 / pages -1
         (their device writes are dropped and their logits ignored).
-        Column 0 is each slot's pending token; the engine fills columns
-        1.. with its drafter's proposals (speculative verify). The shape
-        is static per ``extra_tokens``, so the verify step jits once.
+        Sequences still in chunked prefill are treated as inactive: they
+        hold a slot but have no pending token until their final chunk's
+        logits are sampled. Column 0 is each slot's pending token; the
+        engine fills columns 1.. with its drafter's proposals
+        (speculative verify). The shape is static per ``extra_tokens``,
+        so the verify step jits once.
         """
         ns, pps = self.max_slots, self.pages_per_slot
         tokens = np.zeros((ns, 1 + extra_tokens), np.int32)
         pos = np.zeros((ns,), np.int32)
         page_rows = np.full((ns, pps), -1, np.int32)
-        act = self.active()
+        act = self.decode_ready()
         for seq in act:
             # every activation path records a pending token before the
             # first assemble (admission samples from prefill logits;
@@ -339,7 +428,10 @@ class Scheduler:
             tokens[seq.slot, 0] = seq.req.generated[-1]
             pos[seq.slot] = seq.pos
             page_rows[seq.slot, : len(seq.pages)] = seq.pages
-        resident = int(sum(s.pos + 1 for s in act))
+        # resident rows: decode-ready sequences are about to write their
+        # pending token (+1); prefilling ones count what chunks landed
+        resident = int(sum(s.pos + (1 if s.prefill_pos is None else 0)
+                           for s in self.active()))
         # both stats sampled at the same step: a strict new peak resets the
         # resident count; ties keep the smaller resident (conservative —
         # reports the larger bytes/token)

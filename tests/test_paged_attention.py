@@ -429,6 +429,60 @@ def test_verify_visits_exactly_the_resident_pages():
     np.testing.assert_array_equal(visits[:, :, 0], expect)
 
 
+def test_fused_window_head_pages_skipped_exactly():
+    """Sliding-window head skip audit: pages wholly below the query's
+    window must not execute (visits == pages actually inside the
+    window), and the output must equal the masked reference — too few
+    visits would drop in-window context, too many means the head DMA
+    and dequant work came back."""
+    rng = np.random.default_rng(61)
+    b, kvh, g, d, t, ps, window = 3, 2, 2, 64, 64, 8, 10
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, d)).astype(np.float32))
+    kq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    vq = quantize(jnp.asarray(
+        rng.normal(size=(b, kvh, t, d)).astype(np.float32)), "fp8_e4m3", 32)
+    pools, table = _paged_layout(kq, vq, b, kvh, t, ps, rng)
+    lens = np.array([64, 41, 7], np.int32)  # deep, mid, shorter-than-window
+    got, visits = mx_attention_decode_fused(
+        q, pools["ke"], pools["ks"], pools["ve"], pools["vs"], table,
+        jnp.asarray(lens), window=window, debug_visits=True)
+    first = np.maximum((lens - 1 - window + 1) // ps, 0)
+    want_visits = np.ceil(lens / ps).astype(np.int32) - first
+    np.testing.assert_array_equal(
+        np.asarray(visits)[:, :, 0],
+        np.broadcast_to(want_visits[:, None], (b, kvh)))
+    kd = np.asarray(kq.dequantize(jnp.float32))
+    vd = np.asarray(vq.dequantize(jnp.float32))
+    for i in range(b):
+        pos = int(lens[i]) - 1
+        lo = max(0, pos - window + 1)
+        s = np.einsum("kgd,ktd->kgt", np.asarray(q[i], np.float32),
+                      kd[i, :, lo:pos + 1]) * d ** -0.5
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        want = np.einsum("kgt,ktd->kgd", p, vd[i, :, lo:pos + 1])
+        np.testing.assert_allclose(np.asarray(got)[i], want, atol=1e-5,
+                                   rtol=0)
+
+
+def test_verify_window_head_pages_skipped_exactly():
+    """The multi-query chunk's head skip is bounded by the *oldest*
+    query: visits == ceil(len/PS) - max(0, (len - Tq - W + 1) // PS),
+    and every row still matches the per-row masked oracle."""
+    rng = np.random.default_rng(67)
+    tq, ps, window = 3, 8, 10
+    lens = np.array([62, 30, 11], np.int32)
+    got, visits, want = _verify_case(
+        "fp8_e4m3", 32, b=3, kvh=2, g=2, d=64, t=64, ps=ps, tq=tq,
+        lens=lens, rng=rng, window=window, debug_visits=True)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+    first = np.maximum((lens - tq - window + 1) // ps, 0)
+    expect = np.ceil(lens / ps).astype(np.int32) - first
+    np.testing.assert_array_equal(
+        visits[:, :, 0], np.broadcast_to(expect[:, None], (3, 2)))
+
+
 def test_verify_tq1_is_bitwise_the_decode_kernel():
     """decode_fused is the Tq == 1 case of verify_fused by delegation;
     pin that equivalence bit-for-bit so the two can never drift."""

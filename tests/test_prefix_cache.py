@@ -441,7 +441,13 @@ def test_engine_same_prompt_admissions_share_all_pages():
     eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
         max_seq=32, max_slots=2, page_size=8, prefix_cache=True))
     i1, i2 = eng.submit(prompt, 4), eng.submit(prompt, 4)
-    eng.step()  # admits both
+    # chunked admission defers the second request one step so it can hit
+    # the first one's freshly registered pages instead of racing past
+    # the tree (monolithic admitted both in a single step)
+    for _ in range(4):
+        eng.step()
+        if len(eng.scheduler.active()) == 2:
+            break
     seqs = eng.scheduler.active()
     assert len(seqs) == 2
     assert seqs[0].pages[:2] == seqs[1].pages[:2], \
