@@ -12,7 +12,7 @@ import traceback
 from . import (block_size_sweep, common, decode_attention, e2e_step,
                emulation_breakdown, format_comparison, prefill,
                serve_prefix, serve_throughput, spec_decode, speedup,
-               throughput_sweep)
+               throughput_sweep, tiered_kv)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -26,6 +26,7 @@ SUITES = [
     ("decode_attention", decode_attention.run),
     ("spec_decode", spec_decode.run),
     ("prefill", prefill.run),
+    ("tiered_kv", tiered_kv.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -36,6 +37,7 @@ _JSON_FILES = {
     "BENCH_decode.json": ("decode_attention",),
     "BENCH_spec.json": ("spec_decode",),
     "BENCH_prefill.json": ("prefill",),
+    "BENCH_tiered.json": ("tiered_kv",),
 }
 
 

@@ -6,7 +6,7 @@ software-defined block sizes — lives here as a composable JAX module.
 from . import formats
 from .dot import MODES, fake_quant, mx_dot, qat_matmul
 from .mx_tensor import MXTensor
-from .policy import MXFP4, MXFP8, WIDE, QuantConfig
+from .policy import MXFP4, MXFP6, MXFP8, WIDE, QuantConfig
 from .quantize import dequantize, quantize, quantize_value
 
 __all__ = [
@@ -15,6 +15,7 @@ __all__ = [
     "QuantConfig",
     "WIDE",
     "MXFP8",
+    "MXFP6",
     "MXFP4",
     "quantize",
     "dequantize",

@@ -2,8 +2,9 @@
 
 This module defines the *numerics* of the formats used by VMXDOTP:
 
-  * element formats: FP8 E4M3 (``float8_e4m3fn``), FP8 E5M2 (``float8_e5m2``)
-    and FP4 E2M1 (2-per-byte nibble packing),
+  * element formats: FP8 E4M3 (``float8_e4m3fn``), FP8 E5M2 (``float8_e5m2``),
+    FP6 E3M2 / E2M3 (4 codes packed per 3 storage bytes) and FP4 E2M1
+    (2-per-byte nibble packing),
   * the shared-scale format E8M0 (8-bit biased power-of-two exponent,
     bias 127, ``0xFF`` reserved for NaN).
 
@@ -42,6 +43,31 @@ class ElementFormat:
         return self.bits == 4
 
     @property
+    def sub_byte(self) -> bool:
+        """True if elements are stored packed below one byte each (FP4/FP6)."""
+        return self.bits < 8
+
+    @property
+    def bias(self) -> int:
+        """IEEE-style exponent bias (2^(exp_bits-1) - 1)."""
+        return 2 ** (self.exp_bits - 1) - 1
+
+    @property
+    def min_subnormal(self) -> float:
+        """Smallest positive magnitude: 2^(1 - bias - mantissa_bits)."""
+        return 2.0 ** (1 - self.bias - self.mantissa_bits)
+
+    def storage_len(self, n: int) -> int:
+        """Storage entries covering ``n`` logical elements along the packed
+        axis (``n`` for FP8, ``n/2`` bytes for FP4, ``3n/4`` bytes for FP6)."""
+        if self.bits % 8 == 0:
+            return n
+        if (n * self.bits) % 8 != 0:
+            raise ValueError(
+                f"{self.name}: {n} elements do not pack into whole bytes")
+        return n * self.bits // 8
+
+    @property
     def eps(self) -> float:
         """Machine epsilon of the element format (2^-mantissa_bits)."""
         return 2.0 ** (-self.mantissa_bits)
@@ -67,6 +93,26 @@ FP8_E5M2 = ElementFormat(
     storage_dtype=jnp.float8_e5m2,
 )
 
+FP6_E3M2 = ElementFormat(
+    name="fp6_e3m2",
+    bits=6,
+    exp_bits=3,
+    mantissa_bits=2,
+    emax=4,
+    max=28.0,
+    storage_dtype=jnp.uint8,  # four 6-bit codes per three bytes
+)
+
+FP6_E2M3 = ElementFormat(
+    name="fp6_e2m3",
+    bits=6,
+    exp_bits=2,
+    mantissa_bits=3,
+    emax=2,
+    max=7.5,
+    storage_dtype=jnp.uint8,  # four 6-bit codes per three bytes
+)
+
 FP4_E2M1 = ElementFormat(
     name="fp4_e2m1",
     bits=4,
@@ -77,7 +123,21 @@ FP4_E2M1 = ElementFormat(
     storage_dtype=jnp.uint8,  # two E2M1 nibbles per byte
 )
 
-FORMATS = {f.name: f for f in (FP8_E4M3, FP8_E5M2, FP4_E2M1)}
+FORMATS = {f.name: f for f in (FP8_E4M3, FP8_E5M2, FP6_E3M2, FP6_E2M3,
+                               FP4_E2M1)}
+
+# Stable numeric ids for per-page format tags (tiered KV cache): the fused
+# kernels receive these as scalar-prefetch operands and select the dequant
+# path per grid step. Order is wide->narrow so a repack ladder only ever
+# increases the id.
+FORMAT_IDS = {
+    "fp8_e4m3": 0,
+    "fp8_e5m2": 1,
+    "fp6_e3m2": 2,
+    "fp6_e2m3": 3,
+    "fp4_e2m1": 4,
+}
+FORMAT_BY_ID = {v: k for k, v in FORMAT_IDS.items()}
 
 # Positive representable magnitudes of FP4 E2M1, in encoding order. Index i
 # is the nibble value i (sign bit cleared).
@@ -188,6 +248,9 @@ def cast_to_format_value(x: jnp.ndarray, fmt) -> jnp.ndarray:
     x = x.astype(jnp.float32)
     if fmt.name == "fp4_e2m1":
         return cast_fp4_value(x)
+    # The exponent-field snap is generic over (exp_bits, mantissa_bits):
+    # it covers FP8 E4M3/E5M2 and FP6 E3M2/E2M3 alike (min_norm_exp
+    # = 2 - 2^(exp_bits-1) gives -6/-14/-2/0 respectively).
     return _cast_fp8_value(x, fmt)
 
 
@@ -236,12 +299,100 @@ def fp4_unpack(packed: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# FP6 code encode/decode (storage space): [sign | exp_bits | mantissa_bits]
+# ---------------------------------------------------------------------------
+
+
+def fp6_encode(x: jnp.ndarray, fmt) -> jnp.ndarray:
+    """Encode f32 values to 6-bit FP6 codes (uint8 in [0, 63]), RNE+saturate.
+
+    The value is first snapped onto the format grid (exact RNE), then the
+    code fields are recovered arithmetically — exact because the snapped
+    magnitude is a grid point, so every division below is a power of two.
+    """
+    import jax
+
+    fmt = get_format(fmt)
+    if fmt.bits != 6:
+        raise ValueError(f"fp6_encode got {fmt.name}")
+    def pow2(e):  # exact 2^e via the f32 exponent field (cf. e8m0_to_scale)
+        return jax.lax.bitcast_convert_type(
+            ((e + 127) << 23).astype(jnp.uint32), jnp.float32)
+
+    v = _cast_fp8_value(x.astype(jnp.float32), fmt)
+    sign_bit = (v < 0) | ((v == 0) & jnp.signbit(x))
+    mag = jnp.abs(v)
+    min_norm = 2.0 ** (1 - fmt.bias)
+    # floor(log2 mag) via the f32 exponent field (exact for grid points)
+    bits = jax.lax.bitcast_convert_type(mag, jnp.uint32)
+    e = (bits >> 23).astype(jnp.int32) - 127
+    is_norm = mag >= min_norm
+    e_field = jnp.where(is_norm, e + fmt.bias, 0)
+    quantum = jnp.where(is_norm, pow2(e - fmt.mantissa_bits),
+                        jnp.float32(fmt.min_subnormal))
+    frac = mag - jnp.where(is_norm, pow2(e), 0.0)
+    m = jnp.round(frac / quantum).astype(jnp.int32)
+    code = (e_field << fmt.mantissa_bits) | m
+    code = jnp.where(sign_bit, code | 0x20, code)
+    return code.astype(jnp.uint8)
+
+
+def fp6_decode(code: jnp.ndarray, fmt, dtype=jnp.float32) -> jnp.ndarray:
+    """Decode 6-bit FP6 codes (uint8 in [0, 63]) to float values."""
+    fmt = get_format(fmt)
+    if fmt.bits != 6:
+        raise ValueError(f"fp6_decode got {fmt.name}")
+    import jax
+
+    code = code.astype(jnp.int32)
+    m = (code & ((1 << fmt.mantissa_bits) - 1)).astype(jnp.float32)
+    e_field = (code >> fmt.mantissa_bits) & ((1 << fmt.exp_bits) - 1)
+    scale = jax.lax.bitcast_convert_type(
+        ((e_field - fmt.bias + 127) << 23).astype(jnp.uint32), jnp.float32)
+    mag = jnp.where(e_field == 0, m * fmt.min_subnormal,
+                    (1.0 + m * fmt.eps) * scale)
+    sign = jnp.where((code & 0x20) != 0, -1.0, 1.0)
+    return (sign * mag).astype(dtype)
+
+
+def fp6_pack(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack quads of 6-bit codes along the last axis: (..., 4n) -> (..., 3n).
+
+    Little-endian bit order: code ``4i`` occupies the low 6 bits of byte
+    ``3i``, and each following code continues in the next-higher bits.
+    """
+    if codes.shape[-1] % 4 != 0:
+        raise ValueError("fp6_pack needs a multiple-of-4 last axis")
+    c = codes.reshape(*codes.shape[:-1], -1, 4).astype(jnp.uint8)
+    c0, c1, c2, c3 = c[..., 0], c[..., 1], c[..., 2], c[..., 3]
+    b0 = c0 | (c1 << 6)
+    b1 = (c1 >> 2) | (c2 << 4)
+    b2 = (c2 >> 4) | (c3 << 2)
+    packed = jnp.stack([b0, b1, b2], axis=-1)
+    return packed.reshape(*codes.shape[:-1], -1).astype(jnp.uint8)
+
+
+def fp6_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`fp6_pack`: (..., 3n) -> (..., 4n) codes."""
+    if packed.shape[-1] % 3 != 0:
+        raise ValueError("fp6_unpack needs a multiple-of-3 last axis")
+    b = packed.reshape(*packed.shape[:-1], -1, 3)
+    b0, b1, b2 = b[..., 0], b[..., 1], b[..., 2]
+    c0 = b0 & 0x3F
+    c1 = ((b0 >> 6) | (b1 << 2)) & 0x3F
+    c2 = ((b1 >> 4) | (b2 << 4)) & 0x3F
+    c3 = (b2 >> 2) & 0x3F
+    codes = jnp.stack([c0, c1, c2, c3], axis=-1)
+    return codes.reshape(*packed.shape[:-1], -1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
 # Storage encode/decode for any format
 # ---------------------------------------------------------------------------
 
 
 def encode_elements(x: jnp.ndarray, fmt) -> jnp.ndarray:
-    """float values -> storage array (fp8 dtype, or packed-uint8 for FP4).
+    """float values -> storage array (fp8 dtype, or packed-uint8 for FP4/FP6).
 
     Dtype-preserving for the FP8 clip (bf16 in, bf16 clip, fp8 out) so the
     in-graph quantizer doesn't materialize f32 copies of bf16 activations.
@@ -249,16 +400,21 @@ def encode_elements(x: jnp.ndarray, fmt) -> jnp.ndarray:
     fmt = get_format(fmt)
     if fmt.name == "fp4_e2m1":
         return fp4_pack(fp4_encode(x))
+    if fmt.bits == 6:
+        return fp6_pack(fp6_encode(x, fmt))
     work = x if x.dtype in (jnp.float32, jnp.bfloat16) else x.astype(jnp.float32)
     snapped = snap_to_fp8_grid(jnp.clip(work, -fmt.max, fmt.max), fmt)
     return snapped.astype(fmt.storage_dtype)  # exact: value is on the grid
 
 
 def decode_elements(stored: jnp.ndarray, fmt, dtype=jnp.float32) -> jnp.ndarray:
-    """Storage array -> values in ``dtype`` (last axis doubles for FP4)."""
+    """Storage array -> values in ``dtype`` (last axis grows 2x for FP4,
+    4/3x for FP6)."""
     fmt = get_format(fmt)
     if fmt.name == "fp4_e2m1":
         return fp4_decode(fp4_unpack(stored)).astype(dtype)
+    if fmt.bits == 6:
+        return fp6_decode(fp6_unpack(stored), fmt, dtype)
     return stored.astype(dtype)
 
 
@@ -266,14 +422,68 @@ def storage_bits_per_element(fmt) -> int:
     return get_format(fmt).bits
 
 
+def scalar_code_grid(fmt) -> np.ndarray:
+    """All representable magnitudes of ``fmt``, indexed by magnitude code.
+
+    Built scalar-by-scalar from the OCP MX spec field layout (sign |
+    exp_bits | mantissa_bits, bias 2^(e-1)-1, exponent field 0 =>
+    subnormal, no inf/nan) — the independent reference the jnp
+    encoders/decoders are bit-checked against.
+    """
+    fmt = get_format(fmt)
+    half = 1 << (fmt.bits - 1)
+    grid = np.empty(half, np.float64)
+    for code in range(half):
+        m = code & ((1 << fmt.mantissa_bits) - 1)
+        e_field = code >> fmt.mantissa_bits
+        if e_field == 0:
+            grid[code] = m * 2.0 ** (1 - fmt.bias - fmt.mantissa_bits)
+        else:
+            grid[code] = (1.0 + m * 2.0 ** -fmt.mantissa_bits) * 2.0 ** (
+                e_field - fmt.bias)
+    return grid
+
+
+def scalar_cast_oracle(x: np.ndarray, fmt) -> np.ndarray:
+    """Pure-scalar RNE + saturate cast onto the ``fmt`` grid (OCP §5.2.1).
+
+    Enumerates the code grid and resolves exact ties to the even code —
+    the from-first-principles reference for every element format,
+    independent of both the jnp implementation and ml_dtypes.
+    """
+    fmt = get_format(fmt)
+    grid = scalar_code_grid(fmt)
+    x = np.asarray(x, np.float64)
+    out = np.empty(x.shape, np.float64)
+    for idx in np.ndindex(x.shape):
+        v = x[idx]
+        mag = min(abs(v), fmt.max)
+        diffs = np.abs(grid - mag)
+        best = np.min(diffs)
+        cands = np.nonzero(diffs == best)[0]
+        code = cands[0] if len(cands) == 1 else cands[cands % 2 == 0][0]
+        out[idx] = -grid[code] if v < 0 else grid[code]
+    return out.astype(np.float32)
+
+
 def numpy_cast_oracle(x: np.ndarray, fmt) -> np.ndarray:
-    """ml_dtypes-based cast oracle (tests cross-check against this)."""
+    """ml_dtypes-based cast oracle (tests cross-check against this).
+
+    FP6 falls back to :func:`scalar_cast_oracle` when the installed
+    ml_dtypes predates float6 support.
+    """
     fmt = get_format(fmt)
     x = np.asarray(x, np.float32)
     if fmt.name == "fp4_e2m1":
         x = np.clip(x, -fmt.max, fmt.max)
         return x.astype(ml_dtypes.float4_e2m1fn).astype(np.float32)
     x = np.clip(x, -fmt.max, fmt.max)
+    if fmt.bits == 6:
+        dt = getattr(ml_dtypes, {"fp6_e3m2": "float6_e3m2fn",
+                                 "fp6_e2m3": "float6_e2m3fn"}[fmt.name], None)
+        if dt is None:
+            return scalar_cast_oracle(x, fmt)
+        return x.astype(dt).astype(np.float32)
     dt = {"fp8_e4m3": ml_dtypes.float8_e4m3fn, "fp8_e5m2": ml_dtypes.float8_e5m2}[
         fmt.name
     ]

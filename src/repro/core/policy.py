@@ -19,7 +19,8 @@ class QuantConfig:
 
     Attributes:
       enabled: master switch; False means wide (bf16/f32) everywhere.
-      fmt: element format for weights ("fp8_e4m3" | "fp8_e5m2" | "fp4_e2m1").
+      fmt: element format for weights ("fp8_e4m3" | "fp8_e5m2" |
+        "fp6_e3m2" | "fp6_e2m3" | "fp4_e2m1").
       act_fmt: element format for activations (defaults to ``fmt``; E5M2 is
         the usual choice for gradients/activations due to range).
       block_size: software-defined MX block size k (divides contraction dims).
@@ -56,4 +57,9 @@ class QuantConfig:
 
 WIDE = QuantConfig(enabled=False)
 MXFP8 = QuantConfig(fmt="fp8_e4m3", act_fmt="fp8_e5m2")
+# FP6 sits between FP8 and FP4: same 6-bit-per-element cache footprint gain
+# the paper's software-defined formats make reachable. Matmul kernels do not
+# take FP6 operands yet (KV pages and the repack ladder do), so FP6 presets
+# keep activations at e5m2 and are primarily a KV-cache/serving policy.
+MXFP6 = QuantConfig(fmt="fp6_e3m2", act_fmt="fp8_e5m2")
 MXFP4 = QuantConfig(fmt="fp4_e2m1", act_fmt="fp8_e5m2")

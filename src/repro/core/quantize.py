@@ -33,7 +33,8 @@ def quantize(
 
     Args:
       x: array to quantize (any float dtype).
-      fmt: element format ("fp8_e4m3" | "fp8_e5m2" | "fp4_e2m1").
+      fmt: element format ("fp8_e4m3" | "fp8_e5m2" | "fp6_e3m2" |
+        "fp6_e2m3" | "fp4_e2m1").
       block_size: MX block size k (must divide ``x.shape[axis]``).
       axis: axis along which blocks run (the contraction axis for matmuls).
     """

@@ -7,6 +7,8 @@
                   runs, and the fused chunked-prefill kernel that
                   quantize-writes each chunk's K/V into its pages
   mx_quantize.py  fused block quantization (amax + E8M0 + RNE cast)
+  mx_repack.py    in-place page requantization down the tier ladder
+                  (fp8 -> fp6 -> fp4) for the mixed-format KV pool
   ops.py          jit'd public wrappers (MXTensor-aware)
   ref.py          pure-jnp oracles defining exact semantics
 """
@@ -17,10 +19,11 @@ from .mx_attention import (gather_kv_pages, mx_attention_decode,
                            mx_attention_prefill_fused,
                            mx_attention_verify_fused)
 from .mx_matmul import mx_matmul_dgrad
+from .mx_repack import mx_repack_pages
 from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
 __all__ = ["gather_kv_pages", "mx_attention_decode",
            "mx_attention_decode_fused", "mx_attention_decode_paged",
            "mx_attention_prefill_fused", "mx_attention_verify_fused",
            "mx_matmul", "mx_matmul_dgrad", "mx_matmul_trainable",
-           "quantize_pallas", "ref"]
+           "mx_repack_pages", "quantize_pallas", "ref"]

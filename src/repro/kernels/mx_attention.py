@@ -76,18 +76,26 @@ from .mx_matmul import _decode_e8m0, _decode_tile
 NEG_INF = -2.0e38
 
 
-def _check_fmt(elems, fmt_name: str):
+def _check_fmt(elems, fmt_name: str, mixed: bool = False):
     """Fail loudly when ``fmt_name`` contradicts the storage dtype.
 
-    fp4 packs two nibbles per uint8 byte, so decoding it as fp8 (or vice
-    versa) produces shape garbage deep inside the kernel; catching the
-    mismatch at the wrapper names the actual mistake.
+    fp4/fp6 pack sub-byte codes into uint8 bytes, so decoding them as fp8
+    (or vice versa) produces shape garbage deep inside the kernel; catching
+    the mismatch at the wrapper names the actual mistake. Mixed-format
+    (tiered) pools are always raw uint8 bytes regardless of ``fmt_name``
+    (which then names the hot/write format).
     """
-    packed = elems.dtype == jnp.uint8
-    if packed != (fmt_name == "fp4_e2m1"):
+    if mixed:
+        if elems.dtype != jnp.uint8:
+            raise ValueError(
+                "mixed-format (tiered) pools must store raw uint8 bytes, "
+                f"got {elems.dtype}")
+        return
+    stored_u8 = elems.dtype == jnp.uint8
+    if stored_u8 != F.get_format(fmt_name).sub_byte:
         raise ValueError(
             f"fmt_name {fmt_name!r} does not match the cache storage dtype "
-            f"{elems.dtype} (packed fp4 pools need fmt_name='fp4_e2m1', "
+            f"{elems.dtype} (packed fp4/fp6 pools need a sub-byte fmt_name, "
             "fp8 pools an fp8 format)")
 
 
@@ -105,6 +113,81 @@ def _dequant_rows(elems, scales, fmt_name: str, block_size: int):
     nb = d // block_size
     s = _decode_e8m0(scales)  # (T, nb)
     return (vals.reshape(t, nb, block_size) * s[:, :, None]).reshape(t, d)
+
+
+# ---------------------------------------------------------------------------
+# mixed-format (tiered) pools: full-width uint8 rows, per-page format id
+# ---------------------------------------------------------------------------
+
+# the repack ladder (hot -> cold); also the default candidate set the mixed
+# kernels compile decode branches for
+MIXED_FMTS_DEFAULT = ("fp8_e4m3", "fp6_e3m2", "fp4_e2m1")
+
+
+def _decode_u8_codes(codes, ebits: int, mant: int) -> jnp.ndarray:
+    """Arithmetic decode of byte-stored fp8 codes (sign/exp/mant fields).
+
+    Used only on mixed pools, where fp8 elements live as raw bytes rather
+    than an fp8 dtype. Exact: the normal-path power of two comes from an
+    f32 exponent-field bitcast and ``(1 + m * 2^-mant)`` is exact in f32,
+    so the result is bit-identical to ``astype(f32)`` on the fp8 view
+    (our encoders never emit inf/NaN codes — saturating RNE).
+    """
+    bias = 2 ** (ebits - 1) - 1
+    c = codes.astype(jnp.int32)
+    sign = jnp.where((c & 0x80) != 0, -1.0, 1.0).astype(jnp.float32)
+    e = (c >> mant) & ((1 << ebits) - 1)
+    m = (c & ((1 << mant) - 1)).astype(jnp.float32)
+    eps = 2.0 ** -mant
+    min_sub = 2.0 ** (1 - bias - mant)
+    scale_bits = ((e - bias + 127) << 23).astype(jnp.uint32)
+    scale = jax.lax.bitcast_convert_type(scale_bits, jnp.float32)
+    mag = jnp.where(e == 0, min_sub * m, scale * (1.0 + eps * m))
+    return sign * mag
+
+
+def _decode_bytes_as(bytes_tile, fmt_name: str) -> jnp.ndarray:
+    """Decode a (T, D) full-width uint8 row tile as ``fmt_name``.
+
+    Tiered pool rows are D bytes wide regardless of element format; a
+    narrower format's codes occupy the row *prefix* (fp8 = D bytes,
+    fp6 = 3D/4, fp4 = D/2) and the tail bytes are dead. Always returns
+    (T, D) f32 — one decoded value per logical element.
+    """
+    fmt = F.get_format(fmt_name)
+    d = bytes_tile.shape[-1]
+    w = fmt.storage_len(d)
+    prefix = bytes_tile[..., :w]
+    if fmt.name == "fp4_e2m1":
+        from .mx_matmul import _unpack_fp4
+        return _unpack_fp4(prefix)
+    if fmt.bits == 6:
+        from .mx_matmul import _unpack_fp6
+        return _unpack_fp6(prefix, fmt.name)
+    return _decode_u8_codes(prefix, fmt.exp_bits, fmt.mantissa_bits)
+
+
+def _dequant_rows_mixed(bytes_tile, scales, fmt_id, mixed_fmts,
+                        block_size: int):
+    """(T, D) uint8 rows + scales + scalar page format id -> (T, D) f32.
+
+    ``fmt_id`` is a traced scalar (the page's entry in the prefetched
+    per-page format array); ``mixed_fmts`` is the *static* tuple of
+    formats this kernel was compiled for. Every candidate decode runs and
+    a scalar-predicate select picks the live one — branchless, the same
+    shape every grid step, which is what keeps the page walk a single
+    trace. The E8M0 scale fold is format-independent (scales are
+    recomputed at repack time because emax differs per format).
+    """
+    t, d = bytes_tile.shape
+    out = None
+    for name in mixed_fmts:
+        vals = _decode_bytes_as(bytes_tile, name)
+        sel = fmt_id == F.FORMAT_IDS[name]
+        out = vals if out is None else jnp.where(sel, vals, out)
+    nb = d // block_size
+    s = _decode_e8m0(scales)  # (T, nb)
+    return (out.reshape(t, nb, block_size) * s[:, :, None]).reshape(t, d)
 
 
 def _mx_attn_kernel(q_ref, ke_ref, ks_ref, ve_ref, vs_ref, kpos_ref,
@@ -285,7 +368,8 @@ def _quantize_rows(x, fmt_name: str, block_size: int):
     cache byte. Shares the arithmetic encoders with ``mx_quantize``'s
     kernel, the repo's other in-kernel quantizer.
     """
-    from .mx_quantize import _encode_fp4_codes, _floor_log2, _pack_fp4
+    from .mx_quantize import (_encode_fp4_codes, _encode_fp6_codes,
+                              _floor_log2, _pack_fp4, _pack_fp6)
 
     fmt = F.get_format(fmt_name)
     t, d = x.shape
@@ -300,6 +384,8 @@ def _quantize_rows(x, fmt_name: str, block_size: int):
     ratio = jnp.clip(ratio, -fmt.max, fmt.max).reshape(t, d)
     if fmt.name == "fp4_e2m1":
         return _pack_fp4(_encode_fp4_codes(ratio)), e_biased
+    if fmt.bits == 6:
+        return _pack_fp6(_encode_fp6_codes(ratio, fmt)), e_biased
     return F.snap_to_fp8_grid(ratio, fmt).astype(fmt.storage_dtype), e_biased
 
 
@@ -345,10 +431,9 @@ def _first_window_page(qpos_min, window, page_size: int):
     return jnp.maximum((qpos_min - window + 1) // page_size, 0)
 
 
-def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
-                          vs_ref, o_ref, visits_ref, m_ref, l_ref, acc_ref,
-                          *, page_size: int, fmt_name: str, block_size: int,
-                          softcap, window, num_q: int, group: int):
+def _mx_attn_fused_kernel(*refs, page_size: int, fmt_name: str,
+                          block_size: int, softcap, window, num_q: int,
+                          group: int, mixed_fmts=None):
     """One page tile of one (batch, kv-head) cell, flash-style.
 
     Grid is (B, KVH, P) with P innermost ("arbitrary"), so the VMEM
@@ -374,7 +459,21 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
     predicated away (``visits`` counts only pages actually inside the
     window) and the index maps re-point them at the first in-window page
     so their DMA is elided by the revisit rule.
+
+    Mixed-format (tiered) pools: when ``mixed_fmts`` is set, a third
+    scalar-prefetch operand carries one format id per *pool page*, and
+    the page's id — read through the same page-table walk the BlockSpec
+    index maps use (``fmts[tbl[i, p]]``) — selects the dequant path for
+    that grid step (branchless select over the static candidate set, so
+    the walk stays one trace).
     """
+    if mixed_fmts is None:
+        (tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref, vs_ref,
+         o_ref, visits_ref, m_ref, l_ref, acc_ref) = refs
+        fmts_ref = None
+    else:
+        (tbl_ref, lens_ref, fmts_ref, q_ref, ke_ref, ks_ref, ve_ref, vs_ref,
+         o_ref, visits_ref, m_ref, l_ref, acc_ref) = refs
     i = pl.program_id(0)
     p = pl.program_id(2)
     last = pl.num_programs(2) - 1
@@ -397,10 +496,17 @@ def _mx_attn_fused_kernel(tbl_ref, lens_ref, q_ref, ke_ref, ks_ref, ve_ref,
         # inside the window
         visits_ref[0, 0, 0] += 1
         q = q_ref[0, 0].astype(jnp.float32)  # (num_q * G, D)
-        k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
-                          fmt_name, block_size)  # (PS, D)
-        v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
-                          fmt_name, block_size)
+        if mixed_fmts is None:
+            k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                              fmt_name, block_size)  # (PS, D)
+            v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                              fmt_name, block_size)
+        else:
+            fid = fmts_ref[tbl_ref[i, p]]
+            k = _dequant_rows_mixed(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
+            v = _dequant_rows_mixed(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
         kpos = p * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, page_size), 1)
         rows = num_q * group
@@ -422,7 +528,8 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
                               page_table, seq_lens, *,
                               fmt_name: str = "fp8_e4m3",
                               block_size: int = 32, softcap=None,
-                              window=None, debug_visits: bool = False,
+                              window=None, page_fmts=None, mixed_fmts=None,
+                              debug_visits: bool = False,
                               interpret: bool | None = None):
     """Single-pass fused paged attention for ``Tq >= 1`` query tokens.
 
@@ -459,10 +566,22 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     falsifiable on every backend (off-TPU, interpret-mode wall-clock
     cannot see the skip: the grid loop visits every cell and only the
     body is predicated away).
+
+    ``page_fmts`` switches the kernel to mixed-format (tiered) pools:
+    a (NP,) i32 array of per-*pool-page* format ids
+    (:data:`repro.core.formats.FORMAT_IDS`), prefetched alongside the
+    page table; the pools must then be full-width uint8 byte rows
+    (narrower formats occupy the row prefix). ``mixed_fmts`` is the
+    static candidate-format tuple compiled into the dequant select
+    (default :data:`MIXED_FMTS_DEFAULT`).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    _check_fmt(ke_pool, fmt_name)
+    mixed = page_fmts is not None
+    _check_fmt(ke_pool, fmt_name, mixed=mixed)
+    if mixed and mixed_fmts is None:
+        mixed_fmts = MIXED_FMTS_DEFAULT
+    mixed_fmts = tuple(mixed_fmts) if mixed else None
     b, kvh, tq, g, d = q.shape
     rows = tq * g
     npages, ps = ke_pool.shape[0], ke_pool.shape[1]
@@ -474,7 +593,7 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     qr = q.reshape(b, kvh, rows, d)
 
     def pool_spec(width):
-        def imap(i, j, p, tbl, ln):
+        def imap(i, j, p, tbl, ln, *_fmts):
             # clamp skipped steps into the live page range: tail steps
             # (p >= valid) re-point at the last valid page, head steps
             # wholly below the sliding window at the first in-window
@@ -486,18 +605,21 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
             return (tbl[i, jnp.clip(p, first, valid - 1)], 0, j, 0)
         return pl.BlockSpec((1, ps, 1, width), imap)
 
+    scalar_ops = [table, lens]
+    if mixed:
+        scalar_ops.append(jnp.asarray(page_fmts, jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalar_ops),
         grid=(b, kvh, pmax),
         in_specs=[
             pl.BlockSpec((1, 1, rows, d),
-                         lambda i, j, p, tbl, ln: (i, j, 0, 0)),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
             pool_spec(ed), pool_spec(nb), pool_spec(ed), pool_spec(nb),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, rows, d),
-                         lambda i, j, p, tbl, ln: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, p, tbl, ln: (i, j, 0)),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, p, *_: (i, j, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((rows, 1), jnp.float32),  # running max m
@@ -508,7 +630,7 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     kernel = functools.partial(
         _mx_attn_fused_kernel, page_size=ps, fmt_name=fmt_name,
         block_size=block_size, softcap=softcap, window=window,
-        num_q=tq, group=g)
+        num_q=tq, group=g, mixed_fmts=mixed_fmts)
     out, visits = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -519,7 +641,7 @@ def mx_attention_verify_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(table, lens, qr, ke_pool, ks_pool, ve_pool, vs_pool)
+    )(*scalar_ops, qr, ke_pool, ks_pool, ve_pool, vs_pool)
     out = out.reshape(b, kvh, tq, g, d)
     return (out, visits) if debug_visits else out
 
@@ -528,7 +650,8 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
                               page_table, seq_lens, *,
                               fmt_name: str = "fp8_e4m3",
                               block_size: int = 32, softcap=None,
-                              window=None, debug_visits: bool = False,
+                              window=None, page_fmts=None, mixed_fmts=None,
+                              debug_visits: bool = False,
                               interpret: bool | None = None):
     """Single-pass fused paged decode attention (the serve-engine hot path).
 
@@ -556,7 +679,8 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
     res = mx_attention_verify_fused(
         q[:, :, None], ke_pool, ks_pool, ve_pool, vs_pool, page_table,
         seq_lens, fmt_name=fmt_name, block_size=block_size,
-        softcap=softcap, window=window, debug_visits=debug_visits,
+        softcap=softcap, window=window, page_fmts=page_fmts,
+        mixed_fmts=mixed_fmts, debug_visits=debug_visits,
         interpret=interpret)
     if debug_visits:
         out, visits = res
@@ -569,12 +693,9 @@ def mx_attention_decode_fused(q, ke_pool, ks_pool, ve_pool, vs_pool,
 # ---------------------------------------------------------------------------
 
 
-def _mx_attn_prefill_kernel(tbl_ref, start_ref, lens_ref, q_ref, kc_ref,
-                            vc_ref, ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
-                            oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
-                            m_ref, l_ref, acc_ref, *, page_size: int,
-                            fmt_name: str, block_size: int, softcap, window,
-                            chunk: int, group: int):
+def _mx_attn_prefill_kernel(*refs, page_size: int, fmt_name: str,
+                            block_size: int, softcap, window, chunk: int,
+                            group: int, mixed_fmts=None):
     """One page tile of one (batch, kv-head) prefill cell.
 
     The page walk splits into three regions per cell:
@@ -601,7 +722,25 @@ def _mx_attn_prefill_kernel(tbl_ref, start_ref, lens_ref, q_ref, kc_ref,
     chunk length; ``seq_len`` counts only the real rows, so wholly-padded
     pages are never written and the partial last page's padding rows are
     dead by position masking (exactly like rejected speculative drafts).
+
+    Mixed-format (tiered) pools (``mixed_fmts`` set): resident pages
+    dequantize through the per-page format id (fourth scalar-prefetch
+    operand, indexed via the page table exactly like the verify kernel);
+    chunk pages are always written in the hot format ``fmt_name`` (an
+    fp8 — the engine marks freshly written pages hot) with the fp8 bytes
+    bitcast into the full-width uint8 rows.
     """
+    if mixed_fmts is None:
+        (tbl_ref, start_ref, lens_ref, q_ref, kc_ref, vc_ref,
+         ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
+         oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
+         m_ref, l_ref, acc_ref) = refs
+        fmts_ref = None
+    else:
+        (tbl_ref, start_ref, lens_ref, fmts_ref, q_ref, kc_ref, vc_ref,
+         ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
+         oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
+         m_ref, l_ref, acc_ref) = refs
     i = pl.program_id(0)
     p = pl.program_id(2)
     last = pl.num_programs(2) - 1
@@ -636,10 +775,17 @@ def _mx_attn_prefill_kernel(tbl_ref, start_ref, lens_ref, q_ref, kc_ref,
     @pl.when((p >= first_page) & (p < c0))
     def _resident_page():
         visits_ref[0, 0, 0] += 1
-        k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
-                          fmt_name, block_size)  # (PS, D)
-        v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
-                          fmt_name, block_size)
+        if mixed_fmts is None:
+            k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                              fmt_name, block_size)  # (PS, D)
+            v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                              fmt_name, block_size)
+        else:
+            fid = fmts_ref[tbl_ref[i, p]]
+            k = _dequant_rows_mixed(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
+            v = _dequant_rows_mixed(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
         _attend_tile(k, v)
 
     @pl.when((p >= c0) & (p < valid_pages))
@@ -649,9 +795,16 @@ def _mx_attn_prefill_kernel(tbl_ref, start_ref, lens_ref, q_ref, kc_ref,
         vw = vc_ref[0, :, 0, :].astype(jnp.float32)
         kq_e, kq_s = _quantize_rows(kw, fmt_name, block_size)
         vq_e, vq_s = _quantize_rows(vw, fmt_name, block_size)
-        oke_ref[0, :, 0, :] = kq_e
+        if mixed_fmts is None:
+            oke_ref[0, :, 0, :] = kq_e
+            ove_ref[0, :, 0, :] = vq_e
+        else:
+            # hot-format fp8 bytes into the full-width uint8 rows
+            oke_ref[0, :, 0, :] = jax.lax.bitcast_convert_type(
+                kq_e, jnp.uint8)
+            ove_ref[0, :, 0, :] = jax.lax.bitcast_convert_type(
+                vq_e, jnp.uint8)
         oks_ref[0, :, 0, :] = kq_s
-        ove_ref[0, :, 0, :] = vq_e
         ovs_ref[0, :, 0, :] = vq_s
         # attend over the in-register dequantized snap — identical bytes
         # (and therefore identical f32 values) to what a later page read
@@ -668,7 +821,8 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
                                ve_pool, vs_pool, page_table, chunk_start,
                                seq_lens, *, fmt_name: str = "fp8_e4m3",
                                block_size: int = 32, softcap=None,
-                               window=None, debug_visits: bool = False,
+                               window=None, page_fmts=None, mixed_fmts=None,
+                               debug_visits: bool = False,
                                interpret: bool | None = None):
     """Single-pass fused chunked paged prefill (quantize-into-pages).
 
@@ -718,10 +872,32 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
     range and another row's read range (the serve engine prefills one
     sequence per call; batched calls are for tests/benchmarks with
     disjoint tables).
+
+    When ``B > 1`` every row's chunk pages must be freshly allocated
+    (never shared), which the engine guarantees — chunk pages are new
+    allocations by construction. Same-shape chunks from *different*
+    concurrently-prefilling sequences may therefore batch into one
+    dispatch (each row reads only its own table row; resident pages may
+    be COW-shared across rows since they are read-only here).
+
+    ``page_fmts``/``mixed_fmts`` switch to mixed-format (tiered) pools
+    exactly as in :func:`mx_attention_verify_fused`; ``fmt_name`` must
+    then be an fp8 (the hot format freshly written pages get).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    _check_fmt(ke_pool, fmt_name)
+    mixed = page_fmts is not None
+    _check_fmt(ke_pool, fmt_name, mixed=mixed)
+    if mixed:
+        if mixed_fmts is None:
+            mixed_fmts = MIXED_FMTS_DEFAULT
+        mixed_fmts = tuple(mixed_fmts)
+        if F.get_format(fmt_name).bits != 8:
+            raise ValueError(
+                "tiered prefill writes chunk pages in the hot format, "
+                f"which must be an fp8; got {fmt_name!r}")
+    else:
+        mixed_fmts = None
     b, kvh, c, g, d = q.shape
     rows = c * g
     npages, ps = ke_pool.shape[0], ke_pool.shape[1]
@@ -741,7 +917,7 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
     qr = q.reshape(b, kvh, rows, d)
 
     def pool_in_spec(width):
-        def imap(i, j, p, tbl, st, ln):
+        def imap(i, j, p, tbl, st, ln, *_fmts):
             # resident pages map to themselves; chunk pages (whose pool
             # bytes are stale — the kernel writes them this pass) and
             # below-window head pages re-point at the nearest live
@@ -756,14 +932,14 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
         return pl.BlockSpec((1, ps, 1, width), imap)
 
     def chunk_in_spec():
-        def imap(i, j, p, tbl, st, ln):
+        def imap(i, j, p, tbl, st, ln, *_fmts):
             # page p of the walk is chunk page p - c0; steps outside the
             # chunk range clamp to its ends (same-index revisit = no DMA)
             return (i, jnp.clip(p - st[i] // ps, 0, cps - 1), j, 0)
         return pl.BlockSpec((1, ps, 1, d), imap)
 
     def pool_out_spec(width):
-        def imap(i, j, p, tbl, st, ln):
+        def imap(i, j, p, tbl, st, ln, *_fmts):
             # steps below the chunk park on the first chunk page (it is
             # written before the index ever changes), steps past the
             # last written page park on it (flushed once at cell end)
@@ -772,22 +948,26 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
             return (tbl[i, jnp.clip(p, c0, valid - 1)], 0, j, 0)
         return pl.BlockSpec((1, ps, 1, width), imap)
 
+    scalar_ops = [table, start, lens]
+    if mixed:
+        scalar_ops.append(jnp.asarray(page_fmts, jnp.int32))
+    ns = len(scalar_ops)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=ns,
         grid=(b, kvh, pmax),
         in_specs=[
             pl.BlockSpec((1, 1, rows, d),
-                         lambda i, j, p, tbl, st, ln: (i, j, 0, 0)),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
             chunk_in_spec(), chunk_in_spec(),
             pool_in_spec(ed), pool_in_spec(nb),
             pool_in_spec(ed), pool_in_spec(nb),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, rows, d),
-                         lambda i, j, p, tbl, st, ln: (i, j, 0, 0)),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
             pool_out_spec(ed), pool_out_spec(nb),
             pool_out_spec(ed), pool_out_spec(nb),
-            pl.BlockSpec((1, 1, 1), lambda i, j, p, tbl, st, ln: (i, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, p, *_: (i, j, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((rows, 1), jnp.float32),  # running max m
@@ -798,7 +978,7 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
     kernel = functools.partial(
         _mx_attn_prefill_kernel, page_size=ps, fmt_name=fmt_name,
         block_size=block_size, softcap=softcap, window=window,
-        chunk=c, group=g)
+        chunk=c, group=g, mixed_fmts=mixed_fmts)
     out, oke, oks, ove, ovs, visits = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -810,13 +990,13 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
             jax.ShapeDtypeStruct(vs_pool.shape, vs_pool.dtype),
             jax.ShapeDtypeStruct((b, kvh, 1), jnp.int32),
         ],
-        # pools update in place (indices count the scalar-prefetch
-        # operands: tbl=0, start=1, lens=2, q=3, k_chunk=4, v_chunk=5)
-        input_output_aliases={6: 1, 7: 2, 8: 3, 9: 4},
+        # pools update in place (operand indices count the scalar-prefetch
+        # operands, then q, k_chunk, v_chunk, then the four pools)
+        input_output_aliases={ns + 3 + k: 1 + k for k in range(4)},
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(table, start, lens, qr, k_chunk, v_chunk,
+    )(*scalar_ops, qr, k_chunk, v_chunk,
       ke_pool, ks_pool, ve_pool, vs_pool)
     out = out.reshape(b, kvh, c, g, d)
     pools = (oke, oks, ove, ovs)

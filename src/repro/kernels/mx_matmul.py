@@ -70,10 +70,49 @@ def _unpack_fp4(packed: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
 
 
+def _decode_fp6_codes(codes: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
+    """Arithmetic FP6 E3M2/E2M3 decode of 6-bit codes (no gather/table).
+
+    Subnormals (exponent field 0) decode as m * 2^(1 - bias - mant); the
+    normal-path power of two is built by integer shift, exact and
+    Pallas-safe like :func:`_decode_fp4_codes`.
+    """
+    mant = 2 if fmt_name == "fp6_e3m2" else 3
+    ebits = 3 if fmt_name == "fp6_e3m2" else 2
+    bias = 2 ** (ebits - 1) - 1
+    eps = 2.0 ** -mant
+    min_sub = 2.0 ** (1 - bias - mant)
+    c = codes.astype(jnp.int32)
+    sign = jnp.where((c & 0x20) != 0, -1.0, 1.0).astype(jnp.float32)
+    e = (c >> mant) & ((1 << ebits) - 1)
+    m = (c & ((1 << mant) - 1)).astype(jnp.float32)
+    # 2^(e - bias) for normals: shift against the worst negative exponent
+    # (e3m2 min normal exp is -2) so the shift count stays non-negative
+    pow2 = jnp.left_shift(1, jnp.maximum(e - 1, 0)).astype(jnp.float32) * (
+        2.0 ** (1 - bias))
+    mag = jnp.where(e == 0, min_sub * m, pow2 * (1.0 + eps * m))
+    return sign * mag
+
+
+def _unpack_fp6(packed: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
+    """(..., 3n) packed bytes -> (..., 4n) f32 values (low bits first)."""
+    b = packed.astype(jnp.int32).reshape(*packed.shape[:-1], -1, 3)
+    b0, b1, b2 = b[..., 0], b[..., 1], b[..., 2]
+    c0 = b0 & 0x3F
+    c1 = ((b0 >> 6) | (b1 << 2)) & 0x3F
+    c2 = ((b1 >> 4) | (b2 << 4)) & 0x3F
+    c3 = (b2 >> 2) & 0x3F
+    codes = jnp.stack([c0, c1, c2, c3], axis=-1)
+    vals = _decode_fp6_codes(codes, fmt_name)
+    return vals.reshape(*packed.shape[:-1], -1)
+
+
 def _decode_tile(tile: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
     """Decode a VMEM tile of stored elements to f32 (in-register upcast)."""
     if fmt_name == "fp4_e2m1":
         return _unpack_fp4(tile)
+    if fmt_name in ("fp6_e3m2", "fp6_e2m3"):
+        return _unpack_fp6(tile, fmt_name)
     return tile.astype(jnp.float32)
 
 

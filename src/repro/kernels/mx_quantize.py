@@ -52,6 +52,44 @@ def _pack_fp4(codes: jnp.ndarray) -> jnp.ndarray:
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
+def _encode_fp6_codes(v: jnp.ndarray, fmt: F.ElementFormat) -> jnp.ndarray:
+    """Arithmetic RNE+saturate encode of f32 to FP6 codes (no gather).
+
+    Same construction as :func:`repro.core.formats.fp6_encode` (grid snap
+    via the exponent-field quantum, then exact field recovery) — pure
+    bitcast/shift/round arithmetic, so it is Pallas-safe. Kept in one
+    place with the fp4 encoder so every in-kernel quantizer shares it.
+    """
+    sign = jnp.signbit(v)
+    mag = jnp.clip(jnp.abs(v), 0.0, fmt.max)
+    snapped = jnp.abs(F.snap_to_fp8_grid(mag, fmt))
+    bits = jax.lax.bitcast_convert_type(snapped, jnp.uint32)
+    e = (jnp.right_shift(bits, 23) & 0xFF).astype(jnp.int32) - 127
+    is_norm = snapped >= 2.0 ** (1 - fmt.bias)
+    e_field = jnp.where(is_norm, e + fmt.bias, 0)
+    q_bits = ((e - fmt.mantissa_bits + 127) << 23).astype(jnp.uint32)
+    quantum = jnp.where(
+        is_norm, jax.lax.bitcast_convert_type(q_bits, jnp.float32),
+        jnp.float32(fmt.min_subnormal))
+    p_bits = ((e + 127) << 23).astype(jnp.uint32)
+    frac = snapped - jnp.where(
+        is_norm, jax.lax.bitcast_convert_type(p_bits, jnp.float32), 0.0)
+    m = jnp.round(frac / quantum).astype(jnp.int32)
+    code = ((e_field << fmt.mantissa_bits) | m).astype(jnp.uint8)
+    return jnp.where(sign, code | jnp.uint8(0x20), code)
+
+
+def _pack_fp6(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack quads of 6-bit codes into 3 bytes (low bits first)."""
+    c = codes.reshape(*codes.shape[:-1], -1, 4)
+    c0, c1, c2, c3 = c[..., 0], c[..., 1], c[..., 2], c[..., 3]
+    b0 = c0 | (c1 << 6)
+    b1 = (c1 >> 2) | (c2 << 4)
+    b2 = (c2 >> 4) | (c3 << 2)
+    packed = jnp.stack([b0, b1, b2], axis=-1)
+    return packed.reshape(*codes.shape[:-1], -1).astype(jnp.uint8)
+
+
 def _mx_quantize_kernel(x_ref, q_ref, e_ref, *, fmt: F.ElementFormat, block_size: int):
     x = x_ref[...].astype(jnp.float32)  # (bm, bk)
     bm, bk = x.shape
@@ -67,6 +105,8 @@ def _mx_quantize_kernel(x_ref, q_ref, e_ref, *, fmt: F.ElementFormat, block_size
     ratio = jnp.clip(ratio, -fmt.max, fmt.max).reshape(bm, bk)
     if fmt.name == "fp4_e2m1":
         q_ref[...] = _pack_fp4(_encode_fp4_codes(ratio))
+    elif fmt.bits == 6:
+        q_ref[...] = _pack_fp6(_encode_fp6_codes(ratio, fmt))
     else:
         # exact RNE snap before the storage cast: XLA's direct fp8 cast
         # double-rounds via bf16 on some backends (see formats.py)
@@ -89,8 +129,8 @@ def mx_quantize(
     bm, bk = min(bm, m), min(bk, k)
     if m % bm or k % bk or bk % block_size:
         raise ValueError(f"tiling mismatch: {(m, k)} vs {(bm, bk)}/{block_size}")
-    ebk = bk // 2 if fmt.packed else bk
-    ek = k // 2 if fmt.packed else k
+    ebk = fmt.storage_len(bk)
+    ek = fmt.storage_len(k)
     nb = bk // block_size
     grid = (m // bm, k // bk)
     kernel = functools.partial(_mx_quantize_kernel, fmt=fmt, block_size=block_size)

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.nn import model
-from repro.serve import FixedSlotEngine, ServeConfig, ServeEngine
+from repro.serve import FixedSlotEngine, ServeConfig, ServeEngine, TierPolicy
 
 log = logging.getLogger("repro.serve")
 
@@ -73,6 +73,30 @@ def main(argv=None):
                     help="max prefill tokens per engine step, spent "
                          "round-robin across admitted prompts "
                          "(default: one chunk)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered mixed-format KV cache: new pages are "
+                         "written in the base 8-bit MX format, idle pages "
+                         "are background-repacked down the "
+                         "fp8 -> fp6 -> fp4 ladder under a per-step "
+                         "budget; --max-seq worth of fp8 bytes is "
+                         "reinterpreted as a unit-metered byte budget")
+    ap.add_argument("--tier-mid-fmt", default="fp6_e3m2",
+                    choices=["fp6_e3m2", "fp6_e2m3", "fp4_e2m1"],
+                    help="format warm pages repack to after "
+                         "--tier-hot-steps idle steps")
+    ap.add_argument("--tier-cold-fmt", default="fp4_e2m1",
+                    choices=["fp6_e3m2", "fp6_e2m3", "fp4_e2m1"],
+                    help="format cold pages repack to after "
+                         "--tier-cold-steps idle steps")
+    ap.add_argument("--tier-hot-steps", type=int, default=8,
+                    help="engine steps without a write before a page "
+                         "leaves the hot fp8 tier")
+    ap.add_argument("--tier-cold-steps", type=int, default=32,
+                    help="engine steps without a write before a mid-tier "
+                         "page goes cold")
+    ap.add_argument("--tier-repack-pages", type=int, default=4,
+                    help="max pages repacked per engine step (bounds the "
+                         "background repack work on the decode path)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="greedy speculative decoding: draft K tokens per "
                          "step (prompt-lookup n-gram, no second model) and "
@@ -85,6 +109,13 @@ def main(argv=None):
     if args.spec_decode and args.engine != "continuous":
         ap.error("--spec-decode requires --engine continuous (the "
                  "fixed-slot reference engine has no verify path)")
+    if args.tiered:
+        if args.engine != "continuous":
+            ap.error("--tiered requires --engine continuous")
+        if args.quant not in ("", "mxfp8") or not args.quantize_kv:
+            ap.error("--tiered requires --quant mxfp8 --quantize-kv "
+                     "(new writes land in the 8-bit base format)")
+        args.quant = args.quant or "mxfp8"
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -110,7 +141,13 @@ def main(argv=None):
         num_draft_tokens=args.num_draft_tokens,
         prefill_mode=args.prefill_mode,
         prefill_chunk=args.prefill_chunk,
-        prefill_token_budget=args.prefill_token_budget or None)
+        prefill_token_budget=args.prefill_token_budget or None,
+        tiered=args.tiered,
+        tier_policy=TierPolicy(
+            mid_fmt=args.tier_mid_fmt, cold_fmt=args.tier_cold_fmt,
+            hot_steps=args.tier_hot_steps, cold_steps=args.tier_cold_steps,
+            repack_pages_per_step=args.tier_repack_pages)
+        if args.tiered else None)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
     rng = np.random.default_rng(0)
 
@@ -152,6 +189,17 @@ def main(argv=None):
                      "%d verify steps (draft acceptance %.2f)",
                      stats["accepted_per_step"], stats["spec_steps"],
                      stats["draft_acceptance_rate"])
+        if args.tiered:
+            fmt_counts = ", ".join(
+                f"{k[len('pages_'):]}: {v}" for k, v in stats.items()
+                if k.startswith("pages_"))
+            log.info("tiered KV: %d/%d quarter-page units in use (peak "
+                     "%d); live pages by format: %s; %d pages repacked "
+                     "over %d dispatches (max %d in one step)",
+                     stats["units_in_use"], stats["unit_budget"],
+                     stats["peak_units"], fmt_counts,
+                     stats["repacked_pages"], stats["repack_dispatches"],
+                     stats["max_repacked_in_step"])
         return results
     # same workload shape as the continuous branch (minus raggedness): a
     # shared head plus per-request tails, so --engine A/Bs compare like

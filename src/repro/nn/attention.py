@@ -312,19 +312,41 @@ def apply_decode(params, x, cache, pos, cfg: AttnConfig, quant: QuantConfig,
 
 
 def init_paged_pool(num_pages: int, page_size: int, cfg: AttnConfig,
-                    quant: QuantConfig):
+                    quant: QuantConfig, tiered: bool = False):
     """Allocate a layer's global KV page pool (no per-sequence dimension).
 
     Layout matches the paged Pallas kernels: (NP, PS, KVH, ·), with the
     same storage leaves as the contiguous cache (``_cache_arrays``).
     Ownership (which page belongs to which sequence at which position)
     lives in the host-side page table, not in the arrays.
+
+    ``tiered=True`` allocates the mixed-format layout instead: element
+    leaves are raw uint8 rows of the *full* head_dim width regardless of
+    element format — a narrower format's codes occupy the row prefix
+    (fp8 = D bytes, fp6 = 3D/4, fp4 = D/2) and which format a page
+    currently holds lives in the engine's per-page format array, not in
+    the pool. Requires an MX-quantized cache with an 8-bit hot format
+    (fresh writes are always fp8; the repack ladder narrows them later).
     """
-    return _cache_arrays((num_pages, page_size), cfg, quant)
+    if not tiered:
+        return _cache_arrays((num_pages, page_size), cfg, quant)
+    if not (quant.quantize_kv_cache and quant.enabled):
+        raise ValueError("tiered KV pools require an MX-quantized cache")
+    if F.get_format(quant.fmt).bits != 8:
+        raise ValueError(
+            "tiered KV pools write new pages in the hot format, which "
+            f"must be an fp8; got {quant.fmt!r}")
+    kvh, d = cfg.num_kv_heads, cfg.head_dim
+    bs = min(quant.block_size, d)
+    zeros_e = jnp.zeros((num_pages, page_size, kvh, d), jnp.uint8)
+    zeros_s = jnp.zeros((num_pages, page_size, kvh, d // bs), jnp.uint8)
+    return {"k_elems": zeros_e, "k_scales": zeros_s,
+            "v_elems": zeros_e, "v_scales": zeros_s}
 
 
 def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
-                       quant: QuantConfig, compute_dtype=jnp.bfloat16):
+                       quant: QuantConfig, compute_dtype=jnp.bfloat16,
+                       page_fmts=None, mixed_fmts=None):
     """Per-slot decode through a page table: x (B, 1, d_model), pos (B,).
 
     ``page_rows`` (B, P) holds each slot's page ids (-1 = unallocated).
@@ -353,11 +375,13 @@ def apply_decode_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
     the spec-vs-plain token-identity guarantee depends on.
     """
     return apply_verify_paged(params, x, pool, page_rows, pos, cfg, quant,
-                              compute_dtype)
+                              compute_dtype, page_fmts=page_fmts,
+                              mixed_fmts=mixed_fmts)
 
 
 def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
-                       quant: QuantConfig, compute_dtype=jnp.bfloat16):
+                       quant: QuantConfig, compute_dtype=jnp.bfloat16,
+                       page_fmts=None, mixed_fmts=None):
     """Multi-token paged verify: x (B, Tq, d_model), pos (B,).
 
     The speculative-decoding verify step: each slot feeds ``Tq`` tokens —
@@ -384,9 +408,21 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
     :func:`apply_decode_paged`: the fused ``mx_attention_verify_fused``
     kernel (one page walk feeds all Tq queries) or the einsum gather
     reference (also the wide-bf16-pool fallback).
+
+    ``page_fmts`` (a (NP,) i32 device array of per-page format ids)
+    switches to the mixed-format tiered pool layout: the pool stores raw
+    uint8 byte rows, writes land in the hot fp8 format (bitcast into the
+    byte rows — the engine marks written pages hot), and the fused kernel
+    selects each page's dequant path from its format id. Tiered pools
+    require the fused kernel path (the einsum gather has no per-page
+    format select).
     """
     if cfg.decode_kernel not in ("einsum", "fused"):
         raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
+    if page_fmts is not None and (cfg.decode_kernel != "fused"
+                                  or "k_elems" not in pool):
+        raise ValueError("tiered (mixed-format) KV pools require the fused "
+                         "MX decode kernel path")
     b, tq, _ = x.shape
     h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     pos = jnp.asarray(pos, jnp.int32)
@@ -415,12 +451,17 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
             v.astype(pool["v"].dtype), mode="drop")
     else:
         kq, vq = _quantize_kv_token(k, v, cfg, quant)
+        k_el, v_el = kq.elements, vq.elements
+        if page_fmts is not None:
+            # tiered pool: hot-format fp8 bytes into the uint8 byte rows
+            k_el = jax.lax.bitcast_convert_type(k_el, jnp.uint8)
+            v_el = jax.lax.bitcast_convert_type(v_el, jnp.uint8)
         pool["k_elems"] = pool["k_elems"].at[page, slot].set(
-            kq.elements, mode="drop")
+            k_el, mode="drop")
         pool["k_scales"] = pool["k_scales"].at[page, slot].set(
             kq.scales, mode="drop")
         pool["v_elems"] = pool["v_elems"].at[page, slot].set(
-            vq.elements, mode="drop")
+            v_el, mode="drop")
         pool["v_scales"] = pool["v_scales"].at[page, slot].set(
             vq.scales, mode="drop")
 
@@ -433,7 +474,8 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
             qk, pool["k_elems"], pool["k_scales"], pool["v_elems"],
             pool["v_scales"], page_rows, pos + tq,
             fmt_name=quant.fmt, block_size=min(quant.block_size, d),
-            softcap=cfg.softcap, window=cfg.window)
+            softcap=cfg.softcap, window=cfg.window,
+            page_fmts=page_fmts, mixed_fmts=mixed_fmts)
         out = out.transpose(0, 2, 1, 3, 4).reshape(
             b, tq, h, d).astype(compute_dtype)
     else:
@@ -454,7 +496,8 @@ def apply_verify_paged(params, x, pool, page_rows, pos, cfg: AttnConfig,
 
 def apply_prefill_chunked(params, x, pool, page_rows, pos, num_valid,
                           cfg: AttnConfig, quant: QuantConfig,
-                          compute_dtype=jnp.bfloat16):
+                          compute_dtype=jnp.bfloat16, page_fmts=None,
+                          mixed_fmts=None):
     """One chunk of paged prefill: x (B, C, d_model), pos (B,), num_valid
     (B,).
 
@@ -484,9 +527,18 @@ def apply_prefill_chunked(params, x, pool, page_rows, pos, num_valid,
     decode and verify, so the cache bytes a chunk writes are bit-for-bit
     what one-token decode at those positions would have written — the
     invariant chunked-vs-monolithic token identity rests on.
+
+    ``page_fmts``/``mixed_fmts`` switch to the mixed-format tiered pool
+    exactly as in :func:`apply_verify_paged` (fused path only): resident
+    pages dequantize per their format id, the chunk's pages are written
+    in the hot fp8 format.
     """
     if cfg.decode_kernel not in ("einsum", "fused"):
         raise ValueError(f"unknown decode_kernel {cfg.decode_kernel!r}")
+    if page_fmts is not None and (cfg.decode_kernel != "fused"
+                                  or "k_elems" not in pool):
+        raise ValueError("tiered (mixed-format) KV pools require the fused "
+                         "MX prefill kernel path")
     if cfg.decode_kernel == "fused" and "k_elems" in pool:
         from repro.kernels import mx_attention_prefill_fused
 
@@ -502,7 +554,8 @@ def apply_prefill_chunked(params, x, pool, page_rows, pos, num_valid,
             pool["v_scales"], page_rows, pos,
             pos + jnp.asarray(num_valid, jnp.int32),
             fmt_name=quant.fmt, block_size=min(quant.block_size, d),
-            softcap=cfg.softcap, window=cfg.window)
+            softcap=cfg.softcap, window=cfg.window,
+            page_fmts=page_fmts, mixed_fmts=mixed_fmts)
         pool = dict(pool, k_elems=ke, k_scales=ks, v_elems=ve, v_scales=vs)
         out = out.transpose(0, 2, 1, 3, 4).reshape(
             b, c, h, d).astype(compute_dtype)

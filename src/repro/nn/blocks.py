@@ -203,13 +203,18 @@ def apply_decode(params, x, cache, pos, bd: BlockDef, cfg: ModelConfig):
 
 
 def init_paged_cache(num_slots: int, num_pages: int, page_size: int,
-                     bd: BlockDef, cfg: ModelConfig):
+                     bd: BlockDef, cfg: ModelConfig, tiered: bool = False):
     """Paged serving cache for one block: attention layers get a global
     page pool; recurrent mixers keep per-slot state rows (their state is
-    O(1) per sequence — paging buys nothing)."""
+    O(1) per sequence — paging buys nothing). ``tiered`` selects the
+    mixed-format uint8 pool layout (per-page element formats)."""
     if bd.mixer == "attn":
         return attention.init_paged_pool(num_pages, page_size,
-                                         _attn_cfg(cfg, bd), cfg.quant)
+                                         _attn_cfg(cfg, bd), cfg.quant,
+                                         tiered=tiered)
+    if tiered:
+        raise NotImplementedError(
+            f"tiered KV pools require attention mixers, got {bd.mixer!r}")
     if bd.mixer == "rglru":
         return rglru.init_state(num_slots, _rglru_cfg(cfg))
     if bd.mixer == "ssd":
@@ -220,14 +225,14 @@ def init_paged_cache(num_slots: int, num_pages: int, page_size: int,
 
 
 def apply_decode_paged(params, x, cache, page_rows, pos, bd: BlockDef,
-                       cfg: ModelConfig):
+                       cfg: ModelConfig, page_fmts=None, mixed_fmts=None):
     """Per-slot decode: x (B, 1, d_model), page_rows (B, P), pos (B,)."""
     quant, dt = cfg.quant, cfg.compute_dtype
     h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
     if bd.mixer == "attn":
         h, cache = attention.apply_decode_paged(
             params["mixer"], h, cache, page_rows, pos, _attn_cfg(cfg, bd),
-            quant, dt)
+            quant, dt, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
     elif bd.mixer == "rglru":
         h, cache = rglru.apply_decode(params["mixer"], h, cache,
                                       _rglru_cfg(cfg), quant, dt)
@@ -240,7 +245,7 @@ def apply_decode_paged(params, x, cache, page_rows, pos, bd: BlockDef,
 
 
 def apply_verify_paged(params, x, cache, page_rows, pos, bd: BlockDef,
-                       cfg: ModelConfig):
+                       cfg: ModelConfig, page_fmts=None, mixed_fmts=None):
     """Speculative multi-token verify: x (B, Tq, d_model), pos (B,).
 
     Attention-only: a rejected draft's K/V rows are dead by position
@@ -257,12 +262,13 @@ def apply_verify_paged(params, x, cache, page_rows, pos, bd: BlockDef,
     h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
     h, cache = attention.apply_verify_paged(
         params["mixer"], h, cache, page_rows, pos, _attn_cfg(cfg, bd),
-        quant, dt)
+        quant, dt, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
 def apply_prefill_chunked(params, x, cache, page_rows, pos, num_valid,
-                          bd: BlockDef, cfg: ModelConfig):
+                          bd: BlockDef, cfg: ModelConfig, page_fmts=None,
+                          mixed_fmts=None):
     """One chunk of paged prefill: x (B, C, d_model), pos (B,) chunk
     starts, num_valid (B,) real tokens in the chunk.
 
@@ -280,7 +286,8 @@ def apply_prefill_chunked(params, x, cache, page_rows, pos, num_valid,
     h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
     h, cache = attention.apply_prefill_chunked(
         params["mixer"], h, cache, page_rows, pos, num_valid,
-        _attn_cfg(cfg, bd), quant, dt)
+        _attn_cfg(cfg, bd), quant, dt, page_fmts=page_fmts,
+        mixed_fmts=mixed_fmts)
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
@@ -310,7 +317,9 @@ def prefill_block_tail(params, x, positions, pool, prefix_pages,
     ``x`` (1, S_tail, d_model) is the tail's embeddings, ``positions``
     (1, S_tail) its *absolute* positions (RoPE stays exact), ``pool`` the
     block's live page pool, and ``prefix_pages`` (P0,) the page ids of the
-    shared prefix (P0 * page_size == positions[0, 0]). Queries attend over
+    shared prefix: ``ceil(positions[0, 0] / page_size)`` pages — the hit
+    may end mid-page (a partial-page prefix hit), in which case the last
+    page's rows past the hit are masked out below. Queries attend over
     the dequantized prefix gathered from the pool plus the tail's own K/V
     in cache representation — the exact values full prefill attends over
     (``cache_kv_view``), which keeps prefix-cached generation
@@ -332,8 +341,16 @@ def prefill_block_tail(params, x, positions, pool, prefix_pages,
     ks, vs = attention.cache_kv_view(k, v, acfg, quant)
     kcat = jnp.concatenate([kp, ks], axis=1)  # b == 1 (one request)
     vcat = jnp.concatenate([vp, vs], axis=1)
-    # gathered prefix rows sit at absolute positions 0..L-1, tail follows
-    kpos = jnp.arange(kcat.shape[1], dtype=jnp.int32)
+    # gathered prefix rows sit at absolute positions 0..pos0-1; with a
+    # partial-page hit the gather still pulls whole pages, so rows past
+    # pos0 (= positions[0, 0], not necessarily a page multiple) are
+    # garbage — give them kpos -1, which the attention mask kills
+    # unconditionally (kpos >= 0). The tail follows at its absolute
+    # positions, overlapping the partial page's dead rows.
+    pos0 = positions[0, 0]
+    pref_pos = jnp.arange(kp.shape[1], dtype=jnp.int32)
+    kpos = jnp.concatenate(
+        [jnp.where(pref_pos < pos0, pref_pos, -1), positions[0]])
     out = attention._attend_chunked(q, kcat, vcat, positions, kpos, acfg)
     h2 = linear.apply(params["mixer"]["wo"], out.reshape(b, s, hh * d),
                       quant, dt)

@@ -161,17 +161,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
-                     page_size: int):
+                     page_size: int, tiered: bool = False):
     """Paged serving cache: per-layer page pools (attention) + per-slot
     state rows (recurrent mixers). The page table that assigns pool pages
     to sequences is host-side scheduler state (``serve/kv_cache.py``) and
-    is shared by every layer — same allocation for all of them."""
+    is shared by every layer — same allocation for all of them.
+
+    ``tiered`` allocates the mixed-format uint8 pool layout instead of
+    the single-format one: full-width byte rows that narrower formats
+    occupy as a prefix, so the tiering engine can repack pages down the
+    format ladder in place (see ``attention.init_paged_pool``)."""
     cache = {}
     for j, bd in enumerate(cfg.prologue):
         cache[f"prologue{j}"] = blocks.init_paged_cache(
-            num_slots, num_pages, page_size, bd, cfg)
+            num_slots, num_pages, page_size, bd, cfg, tiered=tiered)
     group = tuple(
-        blocks.init_paged_cache(num_slots, num_pages, page_size, bd, cfg)
+        blocks.init_paged_cache(num_slots, num_pages, page_size, bd, cfg,
+                                tiered=tiered)
         for bd in cfg.pattern
     )
     cache["groups"] = jax.tree_util.tree_map(
@@ -179,12 +185,12 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     )
     for j, bd in enumerate(cfg.epilogue):
         cache[f"epilogue{j}"] = blocks.init_paged_cache(
-            num_slots, num_pages, page_size, bd, cfg)
+            num_slots, num_pages, page_size, bd, cfg, tiered=tiered)
     return cache
 
 
 def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
-                      pos):
+                      pos, page_fmts=None, mixed_fmts=None):
     """Continuous-batching decode: tokens (B, 1), page_rows (B, P) int32
     page ids per slot (-1 = unallocated), pos (B,) per-slot positions.
 
@@ -193,6 +199,11 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     the host ignores their logits. Attention runs the path named by
     ``cfg.decode_kernel`` ("einsum" reference gather, or the single-pass
     "fused" Pallas flash-decode kernel the serve engine defaults to).
+
+    ``page_fmts`` (NP,) i32 per-page format ids enables the tiered
+    mixed-format pool path (fused kernel only); all layers share the one
+    array, like the page table. ``mixed_fmts`` optionally restricts the
+    candidate-format set compiled into the kernel.
     """
     x = _embed_inputs(params, cfg, tokens)
     b = x.shape[0]
@@ -200,7 +211,7 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.prologue):
         x, cache[f"prologue{j}"] = blocks.apply_decode_paged(
             params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, bd, cfg)
+            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
 
     def scan_fn(x, inputs):
         gparams, gcache = inputs
@@ -208,7 +219,8 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
         for i, bd in enumerate(cfg.pattern):
             x, c = blocks.apply_decode_paged(gparams[f"block{i}"], x,
                                              gcache[i], page_rows, pos,
-                                             bd, cfg)
+                                             bd, cfg, page_fmts=page_fmts,
+                                             mixed_fmts=mixed_fmts)
             new.append(c)
         return x, tuple(new)
 
@@ -217,7 +229,7 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.epilogue):
         x, cache[f"epilogue{j}"] = blocks.apply_decode_paged(
             params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, bd, cfg)
+            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)
@@ -227,7 +239,7 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
 
 
 def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
-                      pos):
+                      pos, page_fmts=None, mixed_fmts=None):
     """Speculative-decoding verify: tokens (B, Tq), page_rows (B, P),
     pos (B,) per-slot position of each row's *first* token.
 
@@ -250,7 +262,7 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.prologue):
         x, cache[f"prologue{j}"] = blocks.apply_verify_paged(
             params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, bd, cfg)
+            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
 
     def scan_fn(x, inputs):
         gparams, gcache = inputs
@@ -258,7 +270,8 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
         for i, bd in enumerate(cfg.pattern):
             x, c = blocks.apply_verify_paged(gparams[f"block{i}"], x,
                                              gcache[i], page_rows, pos,
-                                             bd, cfg)
+                                             bd, cfg, page_fmts=page_fmts,
+                                             mixed_fmts=mixed_fmts)
             new.append(c)
         return x, tuple(new)
 
@@ -267,7 +280,7 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.epilogue):
         x, cache[f"epilogue{j}"] = blocks.apply_verify_paged(
             params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, bd, cfg)
+            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)
@@ -278,7 +291,8 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
 
 
 def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
-                        pos, num_valid, logit_idx):
+                        pos, num_valid, logit_idx, page_fmts=None,
+                        mixed_fmts=None):
     """One fixed-size chunk of paged prefill: tokens (B, C), page_rows
     (B, P), pos (B,) chunk start positions, num_valid (B,) real tokens in
     the chunk, logit_idx (B,) which chunk row's logits to return.
@@ -307,7 +321,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.prologue):
         x, cache[f"prologue{j}"] = blocks.apply_prefill_chunked(
             params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, num_valid, bd, cfg)
+            pos, num_valid, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts)
 
     def scan_fn(x, inputs):
         gparams, gcache = inputs
@@ -315,7 +330,9 @@ def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
         for i, bd in enumerate(cfg.pattern):
             x, c = blocks.apply_prefill_chunked(gparams[f"block{i}"], x,
                                                 gcache[i], page_rows, pos,
-                                                num_valid, bd, cfg)
+                                                num_valid, bd, cfg,
+                                                page_fmts=page_fmts,
+                                                mixed_fmts=mixed_fmts)
             new.append(c)
         return x, tuple(new)
 
@@ -324,7 +341,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     for j, bd in enumerate(cfg.epilogue):
         x, cache[f"epilogue{j}"] = blocks.apply_prefill_chunked(
             params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, num_valid, bd, cfg)
+            pos, num_valid, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts)
     # slice the requested row BEFORE the final norm + lm head: every op is
     # row-independent, so this matches the monolithic prefill's last-token
     # logits bit-for-bit while paying the vocab matmul for one row only
@@ -382,9 +400,11 @@ def prefill_with_prefix(params, cfg: ModelConfig, cache, tokens,
     The prefix-cache fast path: a request whose prompt head is already
     resident in the paged cache prefills only ``tokens`` (1, S_tail), its
     uncached tail. ``prefix_pages`` (P0,) are the page ids holding the
-    cached head (``pos0 == P0 * page_size`` tokens), gathered read-only
-    from ``cache``; positions are offset by ``pos0`` so RoPE stays
-    absolute. Requires an attention-only model (recurrent mixers would
+    cached head's ``pos0`` tokens (``P0 == ceil(pos0 / page_size)`` —
+    ``pos0`` need not be a page multiple: a partial-page hit ends
+    mid-page and the last page's rows past ``pos0`` are masked out of
+    the attend), gathered read-only from ``cache``; positions are offset
+    by ``pos0`` so RoPE stays absolute. Requires an attention-only model (recurrent mixers would
     need per-prefix state snapshots — see ROADMAP).
 
     Returns (last-token logits, tail cache): the tail cache covers only

@@ -2,7 +2,7 @@
 radix-tree prefix caching over ref-counted copy-on-write pages, and
 greedy speculative decoding with batched multi-token verify."""
 from .engine import (ContinuousBatchingEngine, FixedSlotEngine, ServeConfig,
-                     ServeEngine, make_serve_step)
+                     ServeEngine, TierPolicy, make_serve_step)
 from .kv_cache import PagePool, pages_for, pages_spanned
 from .prefix_cache import PrefixCache
 from .scheduler import Request, Scheduler
@@ -12,5 +12,5 @@ from .spec_decode import (Drafter, NgramDrafter, ScriptedDrafter,
 __all__ = ["ContinuousBatchingEngine", "Drafter", "FixedSlotEngine",
            "NgramDrafter", "PagePool", "PrefixCache", "Request",
            "Scheduler", "ScriptedDrafter", "ServeConfig", "ServeEngine",
-           "greedy_accept", "make_serve_step", "pages_for",
+           "TierPolicy", "greedy_accept", "make_serve_step", "pages_for",
            "pages_spanned"]

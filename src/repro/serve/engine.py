@@ -76,15 +76,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import FORMAT_BY_ID, FORMAT_IDS
+from repro.kernels import mx_repack_pages
 from repro.nn import model
 from repro.nn.config import ModelConfig
 
 from . import kv_cache, spec_decode
+from .kv_cache import PAGE_UNITS_FULL, UNITS_BY_BITS
 from .scheduler import Scheduler
 
 log = logging.getLogger("repro.serve")
 
 _PAGED_MIXERS = {"attn", "rglru", "ssd"}
+
+#: element bit width per MX format name (drives quarter-page unit costs)
+_FMT_BITS = {"fp8_e4m3": 8, "fp8_e5m2": 8, "fp6_e3m2": 6, "fp6_e2m3": 6,
+             "fp4_e2m1": 4}
+
+
+@dataclasses.dataclass
+class TierPolicy:
+    """Hot/cold tiering knobs for the mixed-format KV page pool.
+
+    A page is *hot* while it was written within the last ``hot_steps``
+    engine steps; past that it is repacked down the format ladder
+    (base fp8 -> ``mid_fmt`` -> ``cold_fmt``) by a background budget of
+    ``repack_pages_per_step`` pages per step. Repacking requantizes the
+    page's elements+scales in place via the exact ``core.quantize`` math
+    (``kernels/mx_repack.py``) and credits quarter-page units back to
+    the pool's HBM budget, so colder residency buys capacity: more
+    resident tokens per byte at a bounded accuracy cost.
+    """
+
+    mid_fmt: str = "fp6_e3m2"  # first demotion step (3/4 of a page)
+    cold_fmt: str = "fp4_e2m1"  # final demotion step (1/2 of a page)
+    hot_steps: int = 8  # steps since last write before base -> mid
+    cold_steps: int = 32  # steps since last write before mid -> cold
+    repack_pages_per_step: int = 4  # background repack budget per step
+    # fixed kernel page-list length: repack dispatches pad to this, so
+    # the jitted trace population stays O(1) regardless of batch shape
+    repack_list_len: int = 8
 
 
 @dataclasses.dataclass
@@ -135,9 +166,25 @@ class ServeConfig:
     prefill_token_budget: Optional[int] = None
     # LRU bound on the monolithic path's per-(length, prefix) jitted
     # prefill traces — a long-running server on the fallback path must
-    # not grow trace memory without limit (the chunked path needs no
-    # bound: its trace population is 1 by construction)
+    # not grow trace memory without limit (the chunked path's trace
+    # population is bounded by max_slots: one compiled shape per
+    # distinct prefill batch size)
     prefill_trace_cache: int = 32
+    # tiered mixed-format KV cache: new writes land in the base (fp8)
+    # format; pages not written for a while are background-repacked down
+    # the ladder (fp8 -> fp6 -> fp4) under ``tier_policy``, and the page
+    # pool is metered in quarter-page units so narrower pages genuinely
+    # buy capacity (num_pages is then the *fp8-equivalent* byte budget;
+    # the physical pool over-provisions 2x). Requires the fused decode
+    # kernel, chunked prefill, attention-only mixers, and an 8-bit
+    # quantized base KV format.
+    tiered: bool = False
+    tier_policy: Optional[TierPolicy] = None
+    # chunked admission: bound on how many times a request may be
+    # deferred waiting for a still-prefilling shared-prefix leader
+    # before it gives up on sharing and prefills independently (a
+    # preempted or budget-starved leader must not starve followers)
+    max_deferrals: int = 8
 
 
 def _sample(logits, key, temperature: float):
@@ -269,6 +316,18 @@ class ContinuousBatchingEngine:
                 // serve_cfg.prefill_chunk)
         if serve_cfg.prefill_trace_cache < 1:
             raise ValueError("prefill_trace_cache must be >= 1")
+        # tiered mixed-format pool: num_pages is reinterpreted as the
+        # fp8-equivalent byte budget (unit-metered); the physical pool
+        # over-provisions 2x so repacked (narrower) pages buy residency
+        self.tiered = bool(serve_cfg.tiered)
+        unit_budget = None
+        if self.tiered:
+            self.tier = serve_cfg.tier_policy or TierPolicy()
+            self._validate_tiering(cfg, mixers)
+            unit_budget = self.num_pages * PAGE_UNITS_FULL
+            self.num_pages *= 2
+        else:
+            self.tier = None
         self.scheduler = Scheduler(
             max_slots=serve_cfg.max_slots, num_pages=self.num_pages,
             page_size=ps, max_seq=serve_cfg.max_seq,
@@ -276,23 +335,43 @@ class ContinuousBatchingEngine:
             admit_window=serve_cfg.admit_window,
             num_draft_tokens=(serve_cfg.num_draft_tokens
                               if self.spec_enabled else 0),
-            prefill_chunk=(serve_cfg.prefill_chunk if self.chunked else 0))
+            prefill_chunk=(serve_cfg.prefill_chunk if self.chunked else 0),
+            max_deferrals=serve_cfg.max_deferrals,
+            unit_budget=unit_budget, track_allocs=self.tiered)
         self.cache = model.init_paged_cache(
-            cfg, serve_cfg.max_slots, self.num_pages, ps)
+            cfg, serve_cfg.max_slots, self.num_pages, ps,
+            tiered=self.tiered)
         # donate the cache pytree: without donation every decode step /
         # install / restore copies the whole multi-layer page pool, which
         # would cancel the paged-cache footprint win. CPU has no donation
         # (it only warns), so gate on backend. _extract must NOT donate —
         # the cache lives on after a snapshot.
         cpu = jax.default_backend() == "cpu"
-        self._decode = jax.jit(
-            lambda p, c, tok, rows, pos: model.decode_step_paged(
-                p, self.cfg_decode, c, tok, rows, pos),
-            donate_argnums=() if cpu else (1,))
-        self._verify = jax.jit(
-            lambda p, c, tok, rows, pos: model.verify_step_paged(
-                p, self.cfg_decode, c, tok, rows, pos),
-            donate_argnums=() if cpu else (1,))
+        if self.tiered:
+            # every step function threads the shared per-page format-id
+            # array (one array for all layers, like the page table); the
+            # candidate-format tuple is static, baked into the kernels
+            mf = self._mixed_fmts = tuple(dict.fromkeys(
+                (cfg.quant.fmt, self.tier.mid_fmt, self.tier.cold_fmt)))
+            self._decode = jax.jit(
+                lambda p, c, tok, rows, pos, fmts: model.decode_step_paged(
+                    p, self.cfg_decode, c, tok, rows, pos,
+                    page_fmts=fmts, mixed_fmts=mf),
+                donate_argnums=() if cpu else (1,))
+            self._verify = jax.jit(
+                lambda p, c, tok, rows, pos, fmts: model.verify_step_paged(
+                    p, self.cfg_decode, c, tok, rows, pos,
+                    page_fmts=fmts, mixed_fmts=mf),
+                donate_argnums=() if cpu else (1,))
+        else:
+            self._decode = jax.jit(
+                lambda p, c, tok, rows, pos: model.decode_step_paged(
+                    p, self.cfg_decode, c, tok, rows, pos),
+                donate_argnums=() if cpu else (1,))
+            self._verify = jax.jit(
+                lambda p, c, tok, rows, pos: model.verify_step_paged(
+                    p, self.cfg_decode, c, tok, rows, pos),
+                donate_argnums=() if cpu else (1,))
         self._install = jax.jit(
             lambda c, pf, slot, ids: kv_cache.install_prefill(
                 c, pf, slot, ids, ps),
@@ -306,19 +385,36 @@ class ContinuousBatchingEngine:
         # chunked-prefill work: a long-running server on the fallback
         # path must not grow trace memory with every novel length)
         self._prefill_fns = OrderedDict()  # prompt length -> jitted
-        self._prefill_tail_fns = OrderedDict()  # (tail, prefix pages) ->
-        # the chunked path's ONE jitted trace: fixed (1, C) tokens, full
-        # page-table row, dynamic scalars — every prompt length and
-        # prefix hit reuses it
-        self._prefill_chunk = jax.jit(
-            lambda p, c, toks, rows, pos, nv, idx: model.prefill_chunk_paged(
-                p, self.cfg_decode, c, toks, rows, pos, nv, idx),
-            donate_argnums=() if cpu else (1,))
+        self._prefill_tail_fns = OrderedDict()  # (tail, prefix, pos0) ->
+        # partial-page prefix hits: offset-install traces, LRU-cached per
+        # (tail pages, offset, rows)
+        self._install_offset_fns = OrderedDict()
+        # the chunked path's jitted trace: fixed (B, C) tokens, full
+        # page-table rows, dynamic scalars — every prompt length and
+        # prefix hit reuses it, and concurrently-prefilling sequences'
+        # same-shape chunks batch into ONE dispatch (B rows). Compiled
+        # shapes are keyed by B only, so the trace population is bounded
+        # by max_slots — constant per deployment, independent of the
+        # workload's prompt lengths.
+        if self.tiered:
+            self._prefill_chunk = jax.jit(
+                lambda p, c, toks, rows, pos, nv, idx, fmts:
+                model.prefill_chunk_paged(
+                    p, self.cfg_decode, c, toks, rows, pos, nv, idx,
+                    page_fmts=fmts, mixed_fmts=self._mixed_fmts),
+                donate_argnums=() if cpu else (1,))
+        else:
+            self._prefill_chunk = jax.jit(
+                lambda p, c, toks, rows, pos, nv, idx:
+                model.prefill_chunk_paged(
+                    p, self.cfg_decode, c, toks, rows, pos, nv, idx),
+                donate_argnums=() if cpu else (1,))
         self._key = jax.random.PRNGKey(0)
         self.steps = 0
         self.prompt_tokens = 0  # total prompt tokens admitted
         self.prefill_tokens = 0  # prompt tokens actually computed
-        self.prefill_chunks = 0  # chunked-prefill kernel invocations
+        self.prefill_chunks = 0  # per-sequence chunks processed
+        self.prefill_dispatches = 0  # chunked-prefill kernel invocations
         self._rr_clock = 0  # cross-step round-robin cursor over prefills
         # admission latency: wall seconds from submit() to the request's
         # first sampled token (the serving-side tail-latency metric
@@ -333,6 +429,60 @@ class ContinuousBatchingEngine:
         self.drafted_tokens = 0  # k per active sequence per verify step
         self.accepted_tokens = 0  # drafts that matched the greedy target
         self.emitted_tokens = 0  # tokens recorded by verify steps
+        # tiered mixed-format pool state (host-authoritative, mirrored to
+        # device on change): one format id + last-write tick per physical
+        # page, shared by every layer like the page table
+        self._tick = 0  # advances every step(); drives page ages
+        if self.tiered:
+            self._base_fmt_id = FORMAT_IDS[cfg.quant.fmt]
+            self.page_fmts = np.full((self.num_pages,), self._base_fmt_id,
+                                     np.int32)
+            self._page_fmts_dev = jnp.asarray(self.page_fmts)
+            self._fmts_dirty = False
+            self._last_write = np.zeros((self.num_pages,), np.int64)
+            # swap snapshots preserve raw page bytes, so the pages'
+            # format ids must survive the free/realloc cycle with them
+            self._swap_fmts: Dict[int, list] = {}
+            self._repack_fns: Dict[str, object] = {}  # dst fmt -> jitted
+            self.repacked_pages = 0
+            self.repack_dispatches = 0
+            self.max_repacked_in_step = 0
+            self._repacked_this_step = 0
+
+    def _validate_tiering(self, cfg: ModelConfig, mixers) -> None:
+        tp = self.tier
+        scfg = self.serve_cfg
+        if scfg.decode_kernel != "fused":
+            raise ValueError(
+                "tiered KV cache requires decode_kernel='fused': the "
+                "einsum gather path dequantizes without per-page formats")
+        if not self.chunked:
+            raise ValueError(
+                "tiered KV cache requires chunked prefill on an "
+                "attention-only model: the monolithic gather path reads "
+                "pages without per-page formats")
+        if not cfg.quant.quantize_kv_cache:
+            raise ValueError("tiered KV cache requires quantize_kv_cache")
+        if _FMT_BITS.get(cfg.quant.fmt) != 8:
+            raise ValueError(
+                f"tiered KV cache needs an 8-bit base KV format (new "
+                f"writes land full-width), got {cfg.quant.fmt!r}")
+        for name, fmt in (("mid_fmt", tp.mid_fmt), ("cold_fmt", tp.cold_fmt)):
+            if fmt not in FORMAT_IDS:
+                raise ValueError(f"unknown tier {name} {fmt!r}")
+        if not (_FMT_BITS[cfg.quant.fmt] > _FMT_BITS[tp.mid_fmt]
+                >= _FMT_BITS[tp.cold_fmt]):
+            raise ValueError(
+                f"tier ladder must narrow monotonically, got "
+                f"{cfg.quant.fmt} -> {tp.mid_fmt} -> {tp.cold_fmt}")
+        if tp.hot_steps < 1 or tp.cold_steps < tp.hot_steps:
+            raise ValueError(
+                "tier_policy needs hot_steps >= 1 and "
+                "cold_steps >= hot_steps")
+        if tp.repack_pages_per_step < 0 or tp.repack_list_len < 1:
+            raise ValueError(
+                "tier_policy needs repack_pages_per_step >= 0 and "
+                "repack_list_len >= 1")
 
     # -- internals ----------------------------------------------------------
 
@@ -368,19 +518,23 @@ class ContinuousBatchingEngine:
             lambda: jax.jit(lambda p, toks: model.prefill(
                 p, self.cfg_prefill, tokens=toks, max_seq=max_seq)))
 
-    def _prefill_tail_for(self, tail_len: int, n_prefix: int):
-        """Jitted tail prefill, LRU-cached per (tail length, prefix pages).
+    def _prefill_tail_for(self, tail_len: int, n_gather: int, pos0: int):
+        """Jitted tail prefill, LRU-cached per (tail length, gathered
+        prefix pages, prefix tokens).
 
         Reads the shared prefix pages out of the live paged cache and
         prefills only the uncached tail at absolute positions — the
-        prefix-cache fast path of the monolithic mode.
+        prefix-cache fast path of the monolithic mode. ``pos0`` (the hit
+        length) need not be a page multiple: a partial-page hit gathers
+        ``n_gather = ceil(pos0 / page_size)`` pages and the model masks
+        the last page's rows past ``pos0``.
         """
-        ps = self.serve_cfg.page_size
-        max_seq = kv_cache.pages_for(tail_len, ps) * ps
+        max_seq = kv_cache.pages_for(tail_len, self.serve_cfg.page_size) \
+            * self.serve_cfg.page_size
         return self._lru_trace(
-            self._prefill_tail_fns, (tail_len, n_prefix),
+            self._prefill_tail_fns, (tail_len, n_gather, pos0),
             lambda: jax.jit(lambda p, c, toks, rows: model.prefill_with_prefix(
-                p, self.cfg_prefill, c, toks, rows, n_prefix * ps,
+                p, self.cfg_prefill, c, toks, rows, pos0,
                 max_seq=max_seq)))
 
     def _next_key(self):
@@ -392,6 +546,159 @@ class ContinuousBatchingEngine:
         t0 = self._submit_time.pop(req_id, None)
         if t0 is not None:
             self.admission_latencies.append(time.perf_counter() - t0)
+
+    # -- tiered mixed-format pool internals ---------------------------------
+
+    def _sync_fmts(self):
+        """Device mirror of the per-page format ids (refresh on change)."""
+        if self._fmts_dirty:
+            self._page_fmts_dev = jnp.asarray(self.page_fmts)
+            self._fmts_dirty = False
+        return self._page_fmts_dev
+
+    def _drain_allocs(self) -> None:
+        """Reset recycled pages to the base format.
+
+        Every page the pool handed out since the last drain starts life
+        hot: its next write is full-width fp8. A page that was repacked
+        to fp4, freed, and re-allocated would otherwise keep its stale
+        narrow format id — the reader would then misdecode the fresh fp8
+        bytes. Idempotent; called before every device dispatch and
+        before swap-restore format fix-ups.
+        """
+        if not self.tiered:
+            return
+        for pid in self.scheduler.pool.alloc_log:
+            if self.page_fmts[pid] != self._base_fmt_id:
+                self.page_fmts[pid] = self._base_fmt_id
+                self._fmts_dirty = True
+            self._last_write[pid] = self._tick
+        self.scheduler.pool.alloc_log.clear()
+
+    def _mark_write(self, pids) -> None:
+        """Record that this step writes rows into ``pids`` (keeps hot)."""
+        if self.tiered:
+            for pid in pids:
+                self._last_write[pid] = self._tick
+
+    def _set_page_fmt(self, pid: int, fmt: str) -> None:
+        """Flip one page's format id + unit cost (after a device repack).
+
+        The flip is the atomic commit point: every holder of the page —
+        other sequences' tables, the prefix tree, the next dispatch —
+        reads the one shared ``page_fmts`` array, so a shared page is
+        repacked once and all readers switch together.
+        """
+        self.page_fmts[pid] = FORMAT_IDS[fmt]
+        self._fmts_dirty = True
+        self.scheduler.pool.set_cost(pid, UNITS_BY_BITS[_FMT_BITS[fmt]])
+
+    def _repack_fn_for(self, dst_fmt: str):
+        """Jitted whole-cache repack to ``dst_fmt``, one trace per target
+        format (the page list is padded to a fixed length)."""
+        fn = self._repack_fns.get(dst_fmt)
+        if fn is None:
+            cpu = jax.default_backend() == "cpu"
+            mf = self._mixed_fmts
+            bs_cfg = self.cfg.quant.block_size
+            keys = ("k_elems", "k_scales", "v_elems", "v_scales")
+
+            def run(cache, ids, fmts, count):
+                for path, blk, grouped in kv_cache._iter_blocks(cache):
+                    if not kv_cache._is_pool(blk):
+                        continue
+                    leaves = [blk[key] for key in keys]
+                    bs = min(bs_cfg, leaves[0].shape[-1])
+                    if grouped:
+                        outs = [mx_repack_pages(
+                            *(leaf[g] for leaf in leaves), ids, fmts,
+                            count, dst_fmt_name=dst_fmt, mixed_fmts=mf,
+                            block_size=bs)
+                            for g in range(leaves[0].shape[0])]
+                        new = {key: jnp.stack([o[j] for o in outs])
+                               for j, key in enumerate(keys)}
+                    else:
+                        new = dict(zip(keys, mx_repack_pages(
+                            *leaves, ids, fmts, count,
+                            dst_fmt_name=dst_fmt, mixed_fmts=mf,
+                            block_size=bs)))
+                    cache = kv_cache._set_block(cache, path, new)
+                return cache
+
+            fn = jax.jit(run, donate_argnums=() if cpu else (0,))
+            self._repack_fns[dst_fmt] = fn
+        return fn
+
+    def _repack_pages_to(self, pids, dst_fmt: str) -> None:
+        """Requantize ``pids`` (current formats per ``page_fmts``) to
+        ``dst_fmt`` in place, in fixed-length padded dispatches."""
+        ll = self.tier.repack_list_len
+        for lo in range(0, len(pids), ll):
+            group = pids[lo:lo + ll]
+            # pad by repeating the last live id: the kernel predicates
+            # on count, so padding rows are never written
+            ids = group + [group[-1]] * (ll - len(group))
+            fmts = [int(self.page_fmts[p]) for p in ids]
+            self.cache = self._repack_fn_for(dst_fmt)(
+                self.cache, jnp.asarray(ids, jnp.int32),
+                jnp.asarray(fmts, jnp.int32),
+                jnp.asarray(len(group), jnp.int32))
+            self.repack_dispatches += 1
+            for pid in group:
+                self._set_page_fmt(pid, dst_fmt)
+            self.repacked_pages += len(group)
+            self._repacked_this_step += len(group)
+
+    def _protected_pages(self) -> set:
+        """Pages the tiering pass must not touch this step: every page of
+        a still-prefilling sequence from its resume point on (chunk
+        writes land there in the base format), and every decode-ready
+        sequence's live write window (decode/verify writes land there).
+        """
+        sched = self.scheduler
+        ps = self.serve_cfg.page_size
+        protected = set()
+        for seq in sched.prefilling():
+            protected.update(seq.pages[seq.prefill_pos // ps:])
+        span = 1 + (self.serve_cfg.num_draft_tokens
+                    if self.spec_enabled else 0)
+        for seq in sched.decode_ready():
+            lo = seq.pos // ps
+            hi = min(len(seq.pages), (seq.pos + span - 1) // ps + 1)
+            protected.update(seq.pages[lo:hi])
+        return protected
+
+    def _run_repack(self) -> None:
+        """One background tiering pass: demote aged pages down the ladder
+        under the per-step page budget (coldest candidates first)."""
+        if not self.tiered or self.tier.repack_pages_per_step <= 0:
+            return
+        self._drain_allocs()
+        tp, pool = self.tier, self.scheduler.pool
+        protected = self._protected_pages()
+        mid_id = FORMAT_IDS[tp.mid_fmt]
+        to_mid, to_cold = [], []
+        for pid in range(self.num_pages):
+            if pool.ref(pid) == 0 or pid in protected:
+                continue
+            age = self._tick - int(self._last_write[pid])
+            fmt = int(self.page_fmts[pid])
+            if fmt == self._base_fmt_id and age >= tp.hot_steps:
+                to_mid.append((age, pid))
+            elif fmt == mid_id and mid_id != FORMAT_IDS[tp.cold_fmt] \
+                    and age >= tp.cold_steps:
+                to_cold.append((age, pid))
+        budget = tp.repack_pages_per_step
+        self._repacked_this_step = 0
+        for cands, dst in ((to_cold, tp.cold_fmt), (to_mid, tp.mid_fmt)):
+            if budget <= 0 or not cands:
+                continue
+            cands.sort(key=lambda t: -t[0])  # oldest first
+            take = [pid for _, pid in cands[:budget]]
+            self._repack_pages_to(take, dst)
+            budget -= len(take)
+        self.max_repacked_in_step = max(self.max_repacked_in_step,
+                                        self._repacked_this_step)
 
     def _admit(self):
         sched = self.scheduler
@@ -413,6 +720,17 @@ class ContinuousBatchingEngine:
                         jnp.asarray(seq.slot, jnp.int32),
                         jnp.asarray([seq.pages[i] for i in owned_idx],
                                     jnp.int32))
+                if self.tiered:
+                    # the snapshot restored the pages' raw bytes, narrow
+                    # encodings included — re-apply the format ids they
+                    # were extracted with (drain first: alloc just reset
+                    # these fresh pages to base)
+                    self._drain_allocs()
+                    saved = self._swap_fmts.pop(seq.req.id, None)
+                    if saved is not None:
+                        for i, fid in zip(owned_idx, saved):
+                            self._set_page_fmt(seq.pages[i],
+                                               FORMAT_BY_ID[fid])
                 continue
             prompt = seq.req.prompt
             self.prompt_tokens += len(prompt)
@@ -424,24 +742,61 @@ class ContinuousBatchingEngine:
             cached = seq.cached_tokens
             if cached:
                 # prefix hit: prefill only the uncached tail against the
-                # shared pages already resident in the pool
-                n_prefix = cached // self.serve_cfg.page_size
+                # shared pages already resident in the pool. The hit may
+                # end mid-page (partial-page entry): the tail then
+                # extends the partial page in place — COW it first (the
+                # tree and possibly other holders reference it) and
+                # scatter the tail rows at the page-internal offset.
+                ps_ = self.serve_cfg.page_size
+                n_full, valid = cached // ps_, cached % ps_
+                n_gather = n_full + (1 if valid else 0)
                 tail = prompt[cached:]
+                if valid and sched.pool.ref(seq.pages[n_full]) > 1:
+                    old = seq.pages[n_full]
+                    new = self._alloc_one(seq)
+                    if new is not None:
+                        self.cache = self._copy_page(
+                            self.cache, jnp.asarray(old, jnp.int32),
+                            jnp.asarray(new, jnp.int32))
+                        sched.pool.free([old])
+                        seq.pages[n_full] = new
+                        sched.cow_copies += 1
+                    elif not self._unpin_partial(old):
+                        raise RuntimeError(
+                            "page pool exhausted for a lone sequence")
                 logits, pfcache = self._prefill_tail_for(
-                    len(tail), n_prefix)(
+                    len(tail), n_gather, cached)(
                         self.params, self.cache,
                         jnp.asarray(tail, jnp.int32)[None],
-                        jnp.asarray(seq.pages[:n_prefix], jnp.int32))
-                install_pages = seq.pages[n_prefix:]
+                        jnp.asarray(seq.pages[:n_gather], jnp.int32))
                 self.prefill_tokens += len(tail)
+                if valid:
+                    install = self._lru_trace(
+                        self._install_offset_fns,
+                        (len(seq.pages) - n_full, valid, len(tail)),
+                        lambda: jax.jit(
+                            lambda c, pf, slot, ids,
+                            off=valid, nr=len(tail):
+                            kv_cache.install_prefill_offset(
+                                c, pf, slot, ids, ps_, off, nr),
+                            donate_argnums=()
+                            if jax.default_backend() == "cpu" else (0, 1)))
+                    self.cache = install(
+                        self.cache, pfcache,
+                        jnp.asarray(seq.slot, jnp.int32),
+                        jnp.asarray(seq.pages[n_full:], jnp.int32))
+                else:
+                    self.cache = self._install(
+                        self.cache, pfcache,
+                        jnp.asarray(seq.slot, jnp.int32),
+                        jnp.asarray(seq.pages[n_full:], jnp.int32))
             else:
                 logits, pfcache = self._prefill_for(len(prompt))(
                     self.params, jnp.asarray(prompt, jnp.int32)[None])
-                install_pages = seq.pages
                 self.prefill_tokens += len(prompt)
-            self.cache = self._install(
-                self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
-                jnp.asarray(install_pages, jnp.int32))
+                self.cache = self._install(
+                    self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
+                    jnp.asarray(seq.pages, jnp.int32))
             sched.register_prefix(seq)
             tok = int(_sample(logits, self._next_key(),
                               self.serve_cfg.temperature)[0])
@@ -469,39 +824,70 @@ class ContinuousBatchingEngine:
             pref = sched.prefilling()
             if not pref:
                 return
-            self._prefill_one_chunk(pref[self._rr_clock % len(pref)])
-            self._rr_clock += 1
-            budget -= 1
+            # one chunk per selected sequence, all in ONE kernel dispatch
+            # (B rows) — the fix for the old per-sequence B=1 dispatch
+            # loop, which serialized concurrently-prefilling sequences'
+            # same-shape chunks into separate kernel launches. Only real
+            # chunks enter the batch: the kernel unconditionally writes
+            # at least one row per batch row (num_valid is clamped to
+            # >= 1 in-kernel), so a padding row would scribble on a page.
+            start = self._rr_clock % len(pref)
+            take = min(budget, len(pref))
+            batch = [pref[(start + i) % len(pref)] for i in range(take)]
+            self._rr_clock += take
+            self._prefill_chunk_batch(batch)
+            budget -= take
 
-    def _prefill_one_chunk(self, seq) -> None:
-        """Run one fixed-size chunk of ``seq``'s prompt through the paged
-        prefill step; on the final chunk, sample the first token."""
+    def _prefill_chunk_batch(self, seqs) -> None:
+        """Run one fixed-size chunk for each sequence in ``seqs`` through
+        a single batched paged-prefill dispatch; sequences on their final
+        chunk sample their first token from their own logits row."""
         sched = self.scheduler
         c = self.serve_cfg.prefill_chunk
-        prompt = seq.req.prompt
-        start = seq.prefill_pos
-        real = min(c, len(prompt) - start)
-        tokens = np.zeros((1, c), np.int32)
-        tokens[0, :real] = prompt[start:start + real]
-        rows = np.full((1, sched.pages_per_slot), -1, np.int32)
-        rows[0, : len(seq.pages)] = seq.pages
-        final = start + real >= len(prompt)
+        bsz = len(seqs)
+        tokens = np.zeros((bsz, c), np.int32)
+        rows = np.full((bsz, sched.pages_per_slot), -1, np.int32)
+        starts = np.zeros((bsz,), np.int32)
+        reals = np.zeros((bsz,), np.int32)
+        for i, seq in enumerate(seqs):
+            prompt = seq.req.prompt
+            st = seq.prefill_pos
+            real = min(c, len(prompt) - st)
+            tokens[i, :real] = prompt[st:st + real]
+            rows[i, : len(seq.pages)] = seq.pages
+            starts[i], reals[i] = st, real
+        args = ()
+        if self.tiered:
+            self._drain_allocs()
+            ps = self.serve_cfg.page_size
+            for i, seq in enumerate(seqs):
+                self._mark_write(seq.pages[starts[i] // ps:
+                                           (starts[i] + reals[i] - 1)
+                                           // ps + 1])
+            args = (self._sync_fmts(),)
         logits, self.cache = self._prefill_chunk(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(rows), jnp.asarray([start], jnp.int32),
-            jnp.asarray([real], jnp.int32),
-            jnp.asarray([real - 1], jnp.int32))
-        self.prefill_tokens += real
-        self.prefill_chunks += 1
-        seq.pos = start + real
-        seq.prefill_pos = start + c
-        if final:
-            seq.prefill_pos = None
-            sched.register_prefix(seq)
-            tok = int(_sample(logits, self._next_key(),
-                              self.serve_cfg.temperature)[0])
-            self._record_first_token(seq.req.id)
-            sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
+            jnp.asarray(rows), jnp.asarray(starts), jnp.asarray(reals),
+            jnp.asarray(reals - 1), *args)
+        self.prefill_tokens += int(reals.sum())
+        self.prefill_chunks += bsz
+        self.prefill_dispatches += 1
+        sampled = None
+        for i, seq in enumerate(seqs):
+            st, real = int(starts[i]), int(reals[i])
+            final = st + real >= len(seq.req.prompt)
+            seq.pos = st + real
+            seq.prefill_pos = st + c
+            if final:
+                seq.prefill_pos = None
+                sched.register_prefix(seq)
+                if sampled is None:
+                    sampled = np.asarray(_sample(
+                        logits, self._next_key(),
+                        self.serve_cfg.temperature))
+                tok = int(sampled[i])
+                self._record_first_token(seq.req.id)
+                sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
 
     def _swap_out(self, victim) -> None:
         """Preempt ``victim``: snapshot + free only the pages it
@@ -513,6 +899,12 @@ class ContinuousBatchingEngine:
             snapshot = self._extract(
                 self.cache, jnp.asarray(victim.slot, jnp.int32),
                 jnp.asarray(owned_ids, jnp.int32))
+        if self.tiered:
+            # snapshots carry raw page bytes, so the element format of
+            # each owned page must travel with them — restore re-applies
+            # these after the fresh allocation resets fmts to base
+            self._swap_fmts[victim.req.id] = [
+                int(self.page_fmts[p]) for p in owned_ids]
         sched.preempt(victim, snapshot, owned_idx)
 
     def _reclaim_swapped_refs(self) -> bool:
@@ -541,6 +933,9 @@ class ContinuousBatchingEngine:
             req.swap = (kv_cache.merge_snapshots(snapshot, extra),
                         owned_idx + shared_idx, pages, pos, cached,
                         prefill_pos)
+            if self.tiered:
+                self._swap_fmts.setdefault(req.id, []).extend(
+                    int(self.page_fmts[pages[i]]) for i in shared_idx)
             sched.pool.free([pages[i] for i in shared_idx])
             released = True
         return released
@@ -565,6 +960,17 @@ class ContinuousBatchingEngine:
                 return ids[0]
             if not self._relieve_pressure(seq):
                 return None
+
+    def _unpin_partial(self, pid: int) -> bool:
+        """Pool-exhaustion fallback for the COW guard: when the copy a
+        shared write page needs can't be allocated and the page's only
+        other holder is the prefix tree's partial-tail entry, drop that
+        entry so the writer owns the page outright. Trades a future hit
+        opportunity for liveness — a pool sized exactly to its sequences
+        must never deadlock on the pin the tree itself added."""
+        prefix = self.scheduler.prefix
+        return (prefix is not None and prefix.release_partial(pid)
+                and self.scheduler.pool.ref(pid) == 1)
 
     def _ensure_pages(self, num_tokens: int = 1):
         """Grow each active sequence's page list for this step's write
@@ -591,8 +997,12 @@ class ContinuousBatchingEngine:
                     # copy-on-write: this step writes into a page other
                     # holders reference — copy it to a fresh page and
                     # repoint
+                    src_fmt = (int(self.page_fmts[pid])
+                               if self.tiered else None)
                     new = self._alloc_one(seq)
                     if new is None:
+                        if self._unpin_partial(pid):
+                            continue  # sole holder now; write in place
                         raise RuntimeError(
                             "page pool exhausted for a lone sequence")
                     self.cache = self._copy_page(
@@ -601,12 +1011,30 @@ class ContinuousBatchingEngine:
                     sched.pool.free([pid])
                     seq.pages[wp] = new
                     sched.cow_copies += 1
+                    if self.tiered and src_fmt != self._base_fmt_id:
+                        # copy_page moved raw bytes, so the fresh page
+                        # inherited the source's narrow encoding; this
+                        # step's fp8 write would corrupt it. Promote the
+                        # copy back to the base format (decode +
+                        # re-encode — widening is lossless) first.
+                        self._drain_allocs()
+                        self._set_page_fmt(new, FORMAT_BY_ID[src_fmt])
+                        self._repack_pages_to(
+                            [new], FORMAT_BY_ID[self._base_fmt_id])
+        if self.tiered:
+            self._drain_allocs()
+            for seq in sched.decode_ready():
+                if sched.slots[seq.slot] is not seq:
+                    continue
+                last = seq.pos + num_tokens - 1
+                self._mark_write(seq.pages[seq.pos // ps: last // ps + 1])
 
     def step(self) -> bool:
         """Admit what fits, advance prefill chunks under the token
         budget, run one decode (or speculative verify) step over the
         decode-ready slots. Returns True if any work remains afterwards."""
         sched = self.scheduler
+        self._tick += 1
         self._admit()
         if not sched.active():
             if sched.queue and self._reclaim_swapped_refs():
@@ -616,6 +1044,7 @@ class ContinuousBatchingEngine:
                     raise RuntimeError("scheduler stalled with queued work")
                 return sched.has_work
         self._run_prefill_chunks()
+        self._run_repack()
         if not sched.decode_ready():
             # every active sequence is still streaming its prompt; the
             # chunk(s) above were this step's progress
@@ -625,9 +1054,10 @@ class ContinuousBatchingEngine:
             return sched.has_work
         self._ensure_pages()
         tokens, pos, page_rows, act = sched.assemble()
+        args = (self._sync_fmts(),) if self.tiered else ()
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(page_rows), jnp.asarray(pos))
+            jnp.asarray(page_rows), jnp.asarray(pos), *args)
         toks = np.asarray(_sample(logits, self._next_key(),
                                   self.serve_cfg.temperature))
         self.steps += 1
@@ -666,9 +1096,10 @@ class ContinuousBatchingEngine:
                 raise ValueError(
                     f"drafter returned shape {drafts.shape}, wanted ({k},)")
             tokens[seq.slot, 1:] = drafts
+        args = (self._sync_fmts(),) if self.tiered else ()
         logits, self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(page_rows), jnp.asarray(pos))
+            jnp.asarray(page_rows), jnp.asarray(pos), *args)
         # greedy targets at every position (temperature 0 is validated at
         # construction; _sample's argmax over the f32 cast, vectorized)
         targets = np.asarray(
@@ -751,11 +1182,29 @@ class ContinuousBatchingEngine:
                 1.0 - self.prefill_tokens / self.prompt_tokens
                 if self.prompt_tokens else 0.0),
             "prefill_chunks": self.prefill_chunks,
+            "prefill_dispatches": self.prefill_dispatches,
+            "deferral_fallbacks": sched.deferral_fallbacks,
             # the monolithic fallback's live jitted-trace population
-            # (LRU-bounded); the chunked path keeps exactly one trace
+            # (LRU-bounded); the chunked path's traces are keyed by
+            # batch size only, bounded by max_slots
             "prefill_traces": (len(self._prefill_fns)
                                + len(self._prefill_tail_fns)),
         }
+        if self.tiered:
+            pool = sched.pool
+            for fmt in self._mixed_fmts:
+                fid = FORMAT_IDS[fmt]
+                stats[f"pages_{fmt}"] = sum(
+                    1 for pid in range(self.num_pages)
+                    if pool.ref(pid) > 0 and self.page_fmts[pid] == fid)
+            stats.update({
+                "unit_budget": pool.unit_budget,
+                "units_in_use": pool.units_in_use,
+                "peak_units": pool.peak_units,
+                "repacked_pages": self.repacked_pages,
+                "repack_dispatches": self.repack_dispatches,
+                "max_repacked_in_step": self.max_repacked_in_step,
+            })
         if self.admission_latencies:
             lat = np.sort(np.asarray(self.admission_latencies))
             stats["admission_latency_p50"] = float(

@@ -68,6 +68,19 @@ def pages_spanned(pos0: int, num_tokens: int, page_size: int) -> int:
     return (pos0 + num_tokens - 1) // page_size + 1
 
 
+#: Unit cost of a full-width page, in quarter-page units. The tiered
+#: mixed-format pool stores every page's elements in full-width uint8 rows
+#: (narrower formats occupy a row *prefix*), so the *physical* array is
+#: sized for fp8 — but the HBM-budget argument tiers make is about the
+#: bytes a page's format actually needs: fp8 = 4/4, fp6 = 3/4, fp4 = 2/4
+#: of a full page. ``PagePool`` can meter allocation against that logical
+#: budget so repacking pages down the ladder genuinely frees capacity.
+PAGE_UNITS_FULL = 4
+
+#: Quarter-page unit cost per element format bit width.
+UNITS_BY_BITS = {8: 4, 6: 3, 4: 2}
+
+
 class PagePool:
     """Ref-counted free-list allocator over a fixed set of physical page ids.
 
@@ -83,16 +96,41 @@ class PagePool:
     list only when its last reference drops. Writers must hold the only
     reference (copy-on-write is the engine's job; ``ref`` exposes the count
     so it can tell).
+
+    Tiered budget metering: with ``unit_budget`` set (quarter-page units,
+    see :data:`PAGE_UNITS_FULL`), every freshly allocated page is charged
+    the full 4 units (new writes always land hot fp8), the tiering engine
+    credits units back by calling :meth:`set_cost` when it repacks a page
+    to a narrower format, and :meth:`can_alloc`/:meth:`alloc` admit only
+    while both physical pages *and* units remain. The physical page count
+    should then over-provision the fp8-equivalent budget (the engine uses
+    2x) so the pool can hold more, narrower pages than an all-fp8 pool of
+    the same byte budget. ``unit_budget=None`` keeps the legacy
+    pages-only behavior.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, unit_budget: Optional[int] = None,
+                 track_allocs: bool = False):
         if num_pages <= 0:
             raise ValueError("num_pages must be positive")
+        if unit_budget is not None and unit_budget <= 0:
+            raise ValueError("unit_budget must be positive")
         self.num_pages = num_pages
+        self.unit_budget = unit_budget
+        self.track_allocs = track_allocs
+        #: With ``track_allocs``: every page id handed out by :meth:`alloc`
+        #: since the last drain. The tiering engine drains this each step to
+        #: reset a recycled page's format id back to hot fp8 — a page that
+        #: was repacked to fp4, freed, and re-allocated would otherwise keep
+        #: its stale narrow format id while new writes land fp8 bytes.
+        self.alloc_log: List[int] = []
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._free_set = set(self._free)  # O(1) double-free detection
         self._ref = [0] * num_pages
+        self._cost = [PAGE_UNITS_FULL] * num_pages
+        self.units_in_use = 0
         self.peak_in_use = 0
+        self.peak_units = 0
 
     @property
     def free_pages(self) -> int:
@@ -102,26 +140,65 @@ class PagePool:
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def units_free(self) -> Optional[int]:
+        """Remaining quarter-page units (None when not metering)."""
+        if self.unit_budget is None:
+            return None
+        return self.unit_budget - self.units_in_use
+
     def ref(self, pid: int) -> int:
         """Current reference count of ``pid`` (0 = on the free list)."""
         if not 0 <= pid < self.num_pages:
             raise ValueError(f"unknown page {pid}")
         return self._ref[pid]
 
+    def cost(self, pid: int) -> int:
+        """Current unit cost of allocated page ``pid``."""
+        if not 0 <= pid < self.num_pages:
+            raise ValueError(f"unknown page {pid}")
+        return self._cost[pid]
+
+    def set_cost(self, pid: int, units: int) -> None:
+        """Re-meter an allocated page after a format change (repack).
+
+        The tiering engine calls this when a page's element format flips:
+        repack down the ladder credits units back to the budget; promoting
+        back to hot (rewrite) charges them again. Refcounts are untouched
+        — cost is a property of the physical page, shared by all holders.
+        """
+        if not 0 <= pid < self.num_pages:
+            raise ValueError(f"unknown page {pid}")
+        if self._ref[pid] == 0:
+            raise ValueError(f"set_cost of free page {pid}")
+        if not 1 <= units <= PAGE_UNITS_FULL:
+            raise ValueError(f"bad page cost {units}")
+        self.units_in_use += units - self._cost[pid]
+        self._cost[pid] = units
+        self.peak_units = max(self.peak_units, self.units_in_use)
+
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        if n > len(self._free):
+            return False
+        return (self.unit_budget is None or
+                self.units_in_use + n * PAGE_UNITS_FULL <= self.unit_budget)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` page ids (refcount 1), or None (and no change)."""
+        """Pop ``n`` page ids (refcount 1, full cost), or None (no change)."""
         if n < 0:
             raise ValueError("alloc of negative page count")
-        if n > len(self._free):
+        if not self.can_alloc(n):
             return None
         ids = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(ids)
         for pid in ids:
             self._ref[pid] = 1
+            self._cost[pid] = PAGE_UNITS_FULL
+        if self.track_allocs:
+            self.alloc_log.extend(ids)
+        self.units_in_use += n * PAGE_UNITS_FULL
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        self.peak_units = max(self.peak_units, self.units_in_use)
         return ids
 
     def retain(self, ids) -> None:
@@ -142,6 +219,7 @@ class PagePool:
                 raise ValueError(f"double free of page {pid}")
             self._ref[pid] -= 1
             if self._ref[pid] == 0:
+                self.units_in_use -= self._cost[pid]
                 self._free.append(pid)
                 self._free_set.add(pid)
 
@@ -218,6 +296,42 @@ def install_prefill(cache, prefill_cache, slot, page_ids, page_size: int):
         if _is_pool(blk):
             src = {key: src[key] for key in blk}  # drop kpos
             blk = _install_pool(blk, src, page_ids, page_size, grouped)
+        else:
+            blk = _install_state(blk, src, slot, grouped)
+        cache = _set_block(cache, path, blk)
+    return cache
+
+
+def install_prefill_offset(cache, prefill_cache, slot, page_ids,
+                           page_size: int, offset: int, num_rows: int):
+    """Install a prefill *tail* starting at a non-page-aligned position.
+
+    The partial-page prefix-hit path: a prefix-cache hit may end mid-page
+    (``offset = cached % page_size != 0``), so the freshly prefillled tail
+    rows land at row ``offset`` of the first page in its write window
+    rather than at a page boundary. ``prefill_cache`` covers the tail only
+    (row r is absolute position ``offset + r`` within ``page_ids``'
+    span); only the first ``num_rows`` rows are live, the rest padding.
+    The engine must own every written page exclusively (COW first) — the
+    partial hit page keeps its cached prefix rows and receives the tail
+    rows in place. Recurrent state rows install whole, as in
+    :func:`install_prefill` (sharing implies attention-only models, so
+    state blocks are empty on this path anyway). jit-able; retraces per
+    (pages, offset, num_rows).
+    """
+    rows = jnp.arange(num_rows, dtype=jnp.int32) + offset
+    pidx = page_ids[rows // page_size]
+    sidx = rows % page_size
+    for path, blk, grouped in _iter_blocks(cache):
+        src = prefill_cache[path[0]] if len(path) == 1 else \
+            prefill_cache["groups"][path[1]]
+        if _is_pool(blk):
+            if grouped:
+                blk = {key: blk[key].at[:, pidx, sidx].set(
+                    src[key][:, 0, :num_rows]) for key in blk}
+            else:
+                blk = {key: blk[key].at[pidx, sidx].set(
+                    src[key][0, :num_rows]) for key in blk}
         else:
             blk = _install_state(blk, src, slot, grouped)
         cache = _set_block(cache, path, blk)

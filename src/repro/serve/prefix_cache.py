@@ -48,7 +48,7 @@ from .kv_cache import PagePool
 class _Node:
     """One full page of cached prompt tokens."""
 
-    __slots__ = ("key", "page", "children", "parent", "last_use")
+    __slots__ = ("key", "page", "children", "parent", "last_use", "partial")
 
     def __init__(self, key: Tuple[int, ...], page: Optional[int],
                  parent: Optional["_Node"]):
@@ -57,6 +57,11 @@ class _Node:
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.parent = parent
         self.last_use = 0
+        # partial-page entries hanging off this prefix: tail-token tuple
+        # (0 < len < page_size) -> [page_id, last_use]. The page's first
+        # len(key) rows hold the tail's K/V; the rest is garbage, masked
+        # by position on every read path. Opt-in (see insert(partial=)).
+        self.partial: Dict[Tuple[int, ...], List[int]] = {}
 
 
 class PrefixCache:
@@ -75,6 +80,7 @@ class PrefixCache:
         self.hit_tokens = 0
         self.evictions = 0
         self.dedupes = 0  # insert repointed a hit-cap duplicate page
+        self.partial_inserts = 0  # partial-tail entries registered
 
     # -- introspection -------------------------------------------------------
 
@@ -91,7 +97,18 @@ class PrefixCache:
 
     @property
     def pages_held(self) -> List[int]:
-        return [n.page for n in self._iter_nodes()]
+        held = [n.page for n in self._iter_nodes()]
+        for node in self._nodes_with_root():
+            held.extend(ent[0] for ent in node.partial.values())
+        return held
+
+    def _nodes_with_root(self):
+        yield self._root
+        yield from self._iter_nodes()
+
+    @property
+    def num_partial_entries(self) -> int:
+        return sum(len(n.partial) for n in self._nodes_with_root())
 
     def _chunks(self, prompt, n: int):
         ps = self.page_size
@@ -100,13 +117,23 @@ class PrefixCache:
 
     # -- the three operations ------------------------------------------------
 
-    def acquire(self, prompt: np.ndarray) -> Tuple[List[int], int]:
-        """Longest page-aligned prefix hit for ``prompt``.
+    def acquire(self, prompt: np.ndarray,
+                full_only: bool = False) -> Tuple[List[int], int]:
+        """Longest prefix hit for ``prompt`` (full pages + a partial tail).
 
         Returns (page_ids, cached_tokens); one pool reference per returned
         page is retained for the caller. The hit is capped at
         ``len(prompt) - 1`` tokens: at least one prompt token must be
         prefilled to produce the logits the first sampled token needs.
+
+        After the full-page walk, the longest matching *partial* entry at
+        the stopping node (see :meth:`insert`) extends the hit mid-page:
+        the returned ``cached_tokens`` is then not a page multiple, and
+        the caller owns the bugfix contract — it must COW the partial
+        page before writing the remaining rows in place, and mask the
+        page's garbage rows past ``cached_tokens`` on every attend.
+        ``full_only=True`` skips partial entries (the chunked-prefill
+        path, whose page-aligned chunk dispatches can't start mid-page).
 
         Stat-free: an admission attempt can fail after the lookup (no
         pages for the tail) and be retried every step, so the scheduler
@@ -124,7 +151,24 @@ class PrefixCache:
             child.last_use = self._clock
             pages.append(child.page)
             node = child
-        return pages, len(pages) * self.page_size
+        cached = len(pages) * self.page_size
+        if not full_only and node.partial:
+            budget = (len(prompt) - 1) - cached
+            best = None
+            for key in node.partial:
+                if (len(key) <= budget and (best is None or
+                                            len(key) > len(best)) and
+                        key == tuple(int(t) for t in
+                                     prompt[cached:cached + len(key)])):
+                    best = key
+            if best is not None:
+                ent = node.partial[best]
+                self.pool.retain([ent[0]])
+                self._clock += 1
+                ent[1] = self._clock
+                pages.append(ent[0])
+                cached += len(best)
+        return pages, cached
 
     def record_lookup(self, cached_tokens: int) -> None:
         """Count one admitted request's lookup outcome in the stats."""
@@ -133,7 +177,8 @@ class PrefixCache:
             self.hits += 1
             self.hit_tokens += cached_tokens
 
-    def insert(self, prompt: np.ndarray, pages: List[int]) -> int:
+    def insert(self, prompt: np.ndarray, pages: List[int],
+               partial: bool = False) -> int:
         """Register a freshly prefilled prompt's full pages in the tree.
 
         ``pages`` is the sequence's page table; entry ``i`` must hold the
@@ -155,9 +200,21 @@ class PrefixCache:
         which both frees a page *now* and makes the sequence's last page
         preemption-shared (never extracted into swap snapshots). Safe by
         the exactness contract: both pages hold bit-identical K/V.
+
+        ``partial=True`` additionally registers the prompt's non-aligned
+        tail (``len(prompt) % page_size`` tokens) as a partial entry on
+        the last full-page node, retaining one tree reference on the
+        sequence's last page. The tree's reference makes the owner's next
+        write into that page COW first (the engine's guard sees ref > 1),
+        so the cached rows survive the owner's decode — the classic
+        lost-partial-hit bug was freeing or overwriting those rows.
+        First writer wins; an existing entry for the same tail is left
+        alone (the caller keeps its private copy — repointing would just
+        trade the duplicate for an immediate COW on its next decode).
         """
         node, created = self._root, 0
-        for i, key in self._chunks(prompt, len(prompt) // self.page_size):
+        n_full = len(prompt) // self.page_size
+        for i, key in self._chunks(prompt, n_full):
             child = node.children.get(key)
             if child is None:
                 self.pool.retain([pages[i]])
@@ -174,11 +231,38 @@ class PrefixCache:
                 pages[i] = child.page
                 self.dedupes += 1
             node = child
+        tail = tuple(int(t) for t in prompt[n_full * self.page_size:])
+        if partial and tail and n_full < len(pages) and \
+                tail not in node.partial:
+            self.pool.retain([pages[n_full]])
+            self._clock += 1
+            node.partial[tail] = [pages[n_full], self._clock]
+            self.partial_inserts += 1
         return created
+
+    def release_partial(self, page_id: int) -> bool:
+        """Drop the partial-tail entry holding ``page_id``, if any.
+
+        The COW guard's pool-exhaustion fallback: when a writer needs
+        exclusive ownership of a page whose only other holder is a
+        partial entry and no page can be found for the copy, un-pinning
+        the entry lets the writer proceed in place. Loses a future hit
+        opportunity, never cached data another holder still reads.
+        """
+        for nd in self._nodes_with_root():
+            for key, ent in nd.partial.items():
+                if ent[0] == page_id:
+                    del nd.partial[key]
+                    self.pool.free([page_id])
+                    self.evictions += 1
+                    return True
+        return False
 
     def evictable_count(self) -> int:
         """Pages evict() could free right now: nodes whose whole subtree
-        is unpinned (a node can only fall after all its descendants)."""
+        is unpinned (a node can only fall after all its descendants).
+        Partial entries count like leaves — each unpinned one is a page,
+        and a node can only fall after its partials do."""
 
         def walk(node):
             total, all_ev = 0, True
@@ -186,6 +270,11 @@ class PrefixCache:
                 c_total, c_ev = walk(child)
                 total += c_total
                 all_ev = all_ev and c_ev
+            for page, _ in node.partial.values():
+                if self.pool.ref(page) == 1:
+                    total += 1
+                else:
+                    all_ev = False
             if node is self._root:
                 return total, False
             ev = all_ev and self.pool.ref(node.page) == 1
@@ -204,21 +293,38 @@ class PrefixCache:
         Returns the number of pages freed.
         """
         def candidate(nd):
-            return not nd.children and self.pool.ref(nd.page) == 1
+            return (not nd.children and not nd.partial and
+                    self.pool.ref(nd.page) == 1)
 
-        heap = [(nd.last_use, id(nd), nd) for nd in self._iter_nodes()
-                if candidate(nd)]
+        tick = iter(range(1 << 30))  # heap tiebreak (nodes don't compare)
+        heap = [(nd.last_use, next(tick), nd, None)
+                for nd in self._iter_nodes() if candidate(nd)]
+        # partial entries are leaves in their own right: evictable
+        # whenever nobody but the tree holds their page
+        for nd in self._nodes_with_root():
+            for key, ent in nd.partial.items():
+                if self.pool.ref(ent[0]) == 1:
+                    heap.append((ent[1], next(tick), nd, key))
         heapq.heapify(heap)
         freed = 0
         while freed < need and heap:
-            _, _, nd = heapq.heappop(heap)
+            _, _, nd, key = heapq.heappop(heap)
+            if key is not None:
+                ent = nd.partial.pop(key)
+                self.pool.free([ent[0]])
+                self.evictions += 1
+                freed += 1
+                if nd is not self._root and candidate(nd):
+                    heapq.heappush(heap, (nd.last_use, next(tick), nd, None))
+                continue
             del nd.parent.children[nd.key]
             self.pool.free([nd.page])
             self.evictions += 1
             freed += 1
             parent = nd.parent
             if parent is not self._root and candidate(parent):
-                heapq.heappush(heap, (parent.last_use, id(parent), parent))
+                heapq.heappush(heap, (parent.last_use, next(tick),
+                                      parent, None))
         return freed
 
     def stats(self) -> Dict[str, int]:
@@ -229,4 +335,6 @@ class PrefixCache:
             "prefix_evictions": self.evictions,
             "prefix_dedupes": self.dedupes,
             "prefix_nodes": self.num_nodes,
+            "prefix_partial_entries": self.num_partial_entries,
+            "prefix_partial_inserts": self.partial_inserts,
         }

@@ -95,6 +95,10 @@ class Request:
     # chunked admission deferred this request at least once (the stat
     # counts requests, not retries — admit_next re-tries every step)
     deferred: bool = False
+    # how many admission attempts deferral has already cost this request;
+    # bounded by Scheduler.max_deferrals so a preempted / stalled leader
+    # can't starve it forever (it then prefills independently)
+    defer_count: int = 0
 
     @property
     def remaining(self) -> int:
@@ -126,7 +130,9 @@ class Scheduler:
     def __init__(self, *, max_slots: int, num_pages: int, page_size: int,
                  max_seq: int, prefix_cache: bool = False,
                  admit_window: int = 4, num_draft_tokens: int = 0,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, max_deferrals: int = 8,
+                 unit_budget: Optional[int] = None,
+                 track_allocs: bool = False):
         self.max_slots = max_slots
         self.page_size = page_size
         self.max_seq = max_seq
@@ -154,7 +160,11 @@ class Scheduler:
         # admission must guarantee the whole worst-case window fits inside
         # max_seq's page table (see submit)
         self.num_draft_tokens = num_draft_tokens
-        self.pool = PagePool(num_pages)
+        if max_deferrals < 0:
+            raise ValueError("max_deferrals must be >= 0")
+        self.max_deferrals = max_deferrals
+        self.pool = PagePool(num_pages, unit_budget=unit_budget,
+                             track_allocs=track_allocs)
         self.prefix = (PrefixCache(self.pool, page_size)
                        if prefix_cache else None)
         self.queue: deque[Request] = deque()
@@ -169,6 +179,7 @@ class Scheduler:
         self.skipped_admissions = 0
         self.cow_copies = 0
         self.deferred_admissions = 0  # chunked: waited for a prefix match
+        self.deferral_fallbacks = 0  # deferral bound hit: went independent
 
     # -- submission ---------------------------------------------------------
 
@@ -259,8 +270,14 @@ class Scheduler:
             assert not req.generated, "mid-stream request without snapshot"
             hit, cached = ([], 0)
             if self.prefix is not None:
-                hit, cached = self.prefix.acquire(req.prompt)
-            if self.prefill_chunk and self.prefix is not None:
+                # chunked prefill streams page-aligned chunks, so it can
+                # only consume page-aligned hits; monolithic admission
+                # also takes a partial last-page hit (the engine COWs the
+                # partial page and installs the tail rows in place)
+                hit, cached = self.prefix.acquire(
+                    req.prompt, full_only=bool(self.prefill_chunk))
+            if (self.prefill_chunk and self.prefix is not None
+                    and req.defer_count < self.max_deferrals):
                 # chunked admission is decoupled from prefill, so a burst
                 # of shared-prefix prompts could race past the radix tree
                 # (monolithic admission registered each prompt's pages
@@ -269,7 +286,13 @@ class Scheduler:
                 # unregistered page-aligned head with a sequence still
                 # streaming chunks: once that sequence registers, this
                 # request re-admits with a real tree hit and shares the
-                # pages instead of prefilling a private copy.
+                # pages instead of prefilling a private copy. Deferral is
+                # bounded (max_deferrals attempts): a leader that stalls —
+                # preempted mid-prefill, starved of chunk budget — must
+                # not starve this request forever, so past the bound it
+                # falls through and prefills independently (correct, just
+                # without sharing; dedupe-on-insert may still reconcile
+                # the duplicate pages later).
                 cap = (len(req.prompt) - 1) // self.page_size
                 for s in self.prefilling():
                     shared = min(
@@ -281,6 +304,9 @@ class Scheduler:
                         if not req.deferred:
                             req.deferred = True
                             self.deferred_admissions += 1
+                        req.defer_count += 1
+                        if req.defer_count == self.max_deferrals:
+                            self.deferral_fallbacks += 1
                         return None
             prompt_len = len(req.prompt)
             ids = self._alloc_with_evict(pages_for(prompt_len, self.page_size)
@@ -325,9 +351,12 @@ class Scheduler:
     def register_prefix(self, seq: ActiveSeq) -> None:
         """Insert ``seq``'s freshly installed full prompt pages into the
         radix tree (no-op without a prefix cache). Engine calls this after
-        the device install, so a later hit always reads real bytes."""
+        the device install, so a later hit always reads real bytes.
+        Monolithic prefill also registers the prompt's partial last page
+        (chunked can't serve partial hits, so it doesn't pin them)."""
         if self.prefix is not None:
-            self.prefix.insert(seq.req.prompt, seq.pages)
+            self.prefix.insert(seq.req.prompt, seq.pages,
+                               partial=not self.prefill_chunk)
 
     def try_grow(self, seq: ActiveSeq, num_tokens: int = 1) -> bool:
         """Grow ``seq``'s page table to cover this step's write window.

@@ -25,7 +25,7 @@ from repro.core import MXFP4, MXFP8, quantize
 from repro.kernels import mx_attention_prefill_fused
 from repro.nn import BlockDef, ModelConfig, model
 from repro.serve import (ContinuousBatchingEngine, FixedSlotEngine,
-                         ServeConfig)
+                         Scheduler, ServeConfig)
 
 
 # ---------------------------------------------------------------------------
@@ -455,3 +455,84 @@ def test_chunked_path_never_materializes_wide_kv():
     assert count_wide("einsum") > 0, \
         "control failed: the einsum path should gather a wide table"
     assert count_wide("fused") == 0
+
+
+# ---------------------------------------------------------------------------
+# deferral bound + batched same-shape chunk dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_deferral_bound_falls_back_to_independent_prefill():
+    """Regression (deferred-admission starvation): a follower whose
+    prompt shares an unregistered page-aligned head with a prefilling
+    leader defers — but a leader that never finishes (budget-starved or
+    preempted mid-prefill) must not starve it forever. After
+    ``max_deferrals`` attempts the follower admits independently."""
+    s = Scheduler(max_slots=2, num_pages=16, page_size=4, max_seq=32,
+                  prefix_cache=True, prefill_chunk=4, max_deferrals=3)
+    head = np.arange(12, dtype=np.int32)
+    s.submit(head, 4)
+    leader = s.admit_next()
+    assert leader is not None and leader.prefill_pos == 0
+    # follower shares the (not yet registered) 12-token head
+    s.submit(np.concatenate([head, np.asarray([99, 98, 97, 96],
+                                              np.int32)]), 4)
+    for _ in range(s.max_deferrals):  # leader never gets a chunk: stalled
+        assert s.admit_next() is None
+    assert s.deferred_admissions == 1  # the request, counted once
+    assert s.deferral_fallbacks == 1  # bound hit
+    follower = s.admit_next()
+    assert follower is not None
+    assert follower.cached_tokens == 0  # independent: no tree hit taken
+    # its private pages really are distinct from the leader's
+    assert not set(follower.pages) & set(leader.pages)
+    assert s.deferral_fallbacks == 1
+
+
+def test_deferral_bound_survives_preempted_mid_prefill_leader():
+    """The starvation loop the bound exists for: a leader preempted
+    mid-prefill re-enters the queue ahead of the follower (FCFS), gets
+    readmitted still-prefilling, and the follower re-defers against it
+    every cycle. The per-request defer count persists across cycles, so
+    the follower eventually breaks out and admits independently."""
+    s = Scheduler(max_slots=2, num_pages=16, page_size=4, max_seq=32,
+                  prefix_cache=True, prefill_chunk=4, max_deferrals=2)
+    head = np.arange(8, dtype=np.int32)
+    s.submit(np.concatenate([head, np.asarray([5, 6, 7, 8], np.int32)]), 4)
+    leader = s.admit_next()
+    assert leader.prefill_pos == 0
+    s.submit(np.concatenate([head, np.asarray([9, 9], np.int32)]), 4)
+    assert s.admit_next() is None  # defer 1 against the live leader
+    # leader swapped out mid-prefill; its swap tuple carries prefill_pos
+    s.preempt(leader, snapshot=None)
+    leader2 = s.admit_next()  # FCFS: the leader re-enters first...
+    assert leader2.req.id == leader.req.id
+    assert leader2.prefill_pos == 0  # ...still mid-prefill
+    assert s.admit_next() is None  # defer 2: bound hit
+    assert s.deferral_fallbacks == 1
+    follower = s.admit_next()  # breaks the cycle: independent prefill
+    assert follower is not None and follower.cached_tokens == 0
+
+
+def test_same_shape_chunk_dispatch_batches_across_sequences():
+    """Regression (single-sequence chunk dispatch): with a prefill token
+    budget spanning several chunks per step, same-shape chunks from
+    *distinct* prefilling sequences must ride one batched kernel
+    dispatch — fewer dispatches than chunks, still one compiled trace —
+    and stay token-identical to the monolithic engine."""
+    cfg = _cfg(MXFP8)
+    rng = np.random.default_rng(31)
+    reqs = [(rng.integers(0, 128, (16,)).astype(np.int32), 4)
+            for _ in range(4)]
+    base = dict(max_seq=32, max_slots=4, page_size=8)
+    out_c, out_m, ch, _ = _run_pair(
+        cfg, reqs, base,
+        chunked_kw=dict(prefill_chunk=8, prefill_token_budget=32))
+    for c, m in zip(out_c, out_m):
+        np.testing.assert_array_equal(c, m)
+    assert ch.prefill_chunks == 8  # 4 prompts x 2 chunks each
+    assert ch.prefill_dispatches < ch.prefill_chunks
+    assert ch.prefill_dispatches == 2  # all 4 seqs batched per step
+    # batching must not fracture the O(1)-trace guarantee: one trace per
+    # distinct batch width at most
+    assert ch._prefill_chunk._cache_size() <= 2

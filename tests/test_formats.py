@@ -6,7 +6,8 @@ from _hypothesis_compat import given, hnp, settings, st
 
 from repro.core import formats as F
 
-FMTS = ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"]
+FMTS = ["fp8_e4m3", "fp8_e5m2", "fp6_e3m2", "fp6_e2m3", "fp4_e2m1"]
+FP6_FMTS = ["fp6_e3m2", "fp6_e2m3"]
 
 
 # ---------------------------------------------------------------------------
@@ -125,3 +126,110 @@ def test_encode_decode_elements_roundtrip(fmt):
     np.testing.assert_array_equal(back, expected)
     bits = F.storage_bits_per_element(fmt)
     assert stored.size * stored.dtype.itemsize * 8 == x.size * bits
+
+
+# ---------------------------------------------------------------------------
+# FP6 E3M2 / E2M3: exhaustive bit-level checks vs the scalar spec oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FP6_FMTS)
+def test_fp6_all_64_code_points_roundtrip(fmt):
+    """Every one of the 64 codes decodes to its spec grid value (sign |
+    exp | mantissa, bias 2^(e-1)-1, e_field 0 => subnormal) and
+    re-encodes to the identical code — including both signed zeros."""
+    info = F.get_format(fmt)
+    codes = np.arange(64, dtype=np.uint8)
+    vals = np.asarray(F.fp6_decode(jnp.asarray(codes), fmt))
+    grid = F.scalar_code_grid(fmt)
+    expected = np.concatenate([grid, -grid]).astype(np.float32)
+    np.testing.assert_array_equal(vals, expected)
+    assert vals[0] == 0.0 and vals[32] == 0.0 and np.signbit(vals[32])
+    assert np.abs(vals).max() == info.max
+    back = np.asarray(F.fp6_encode(jnp.asarray(vals), fmt))
+    np.testing.assert_array_equal(back, codes)
+
+
+@pytest.mark.parametrize("fmt", FP6_FMTS)
+def test_fp6_every_adjacent_midpoint_ties_to_even(fmt):
+    """RNE at every representable boundary: the exact midpoint of each
+    adjacent magnitude pair must land on the even-code neighbour (both
+    signs), subnormal range included."""
+    grid = F.scalar_code_grid(fmt)
+    mids = (grid[:-1] + grid[1:]) / 2.0
+    # even-mantissa-code winner per pair (codes i, i+1: exactly one even)
+    want = np.where(np.arange(len(mids)) % 2 == 0, grid[:-1], grid[1:])
+    got = np.asarray(
+        F.cast_to_format_value(jnp.asarray(mids, jnp.float32), fmt))
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+    got_neg = np.asarray(
+        F.cast_to_format_value(jnp.asarray(-mids, jnp.float32), fmt))
+    np.testing.assert_array_equal(got_neg, -want.astype(np.float32))
+
+
+@pytest.mark.parametrize("fmt", FP6_FMTS)
+def test_fp6_subnormal_encoding(fmt):
+    """Subnormals keep e_field 0 and exact multiples of min_subnormal;
+    magnitudes under half the smallest subnormal flush to +-0, and the
+    exact half ties to the even code (zero)."""
+    info = F.get_format(fmt)
+    sub = info.min_subnormal
+    n_sub = (1 << info.mantissa_bits) - 1
+    x = np.arange(1, n_sub + 1, dtype=np.float64) * sub
+    codes = np.asarray(F.fp6_encode(jnp.asarray(x, jnp.float32), fmt))
+    np.testing.assert_array_equal(codes, np.arange(1, n_sub + 1))
+    np.testing.assert_array_equal(
+        np.asarray(F.fp6_decode(jnp.asarray(codes), fmt)),
+        x.astype(np.float32))
+    tiny = jnp.asarray([sub / 2, sub / 4, -sub / 2, 0.75 * sub],
+                       jnp.float32)
+    got = np.asarray(F.cast_to_format_value(tiny, fmt))
+    np.testing.assert_array_equal(got, [0.0, 0.0, 0.0, sub])
+
+
+@pytest.mark.parametrize("fmt", FP6_FMTS)
+def test_fp6_saturation(fmt):
+    info = F.get_format(fmt)
+    x = jnp.asarray([info.max, info.max * 1.5, 1e30, -1e30], jnp.float32)
+    got = np.asarray(F.cast_to_format_value(x, fmt))
+    np.testing.assert_array_equal(
+        got, [info.max, info.max, info.max, -info.max])
+
+
+@pytest.mark.parametrize("fmt", FP6_FMTS)
+def test_fp6_cast_matches_scalar_oracle(fmt):
+    """Dense sweep over the whole dynamic range vs the from-first-
+    principles scalar oracle (independent of ml_dtypes AND of the jnp
+    code): bit-equal everywhere, midpoints and subnormals included."""
+    info = F.get_format(fmt)
+    grid = F.scalar_code_grid(fmt)
+    rng = np.random.default_rng(19)
+    x = np.concatenate([
+        rng.uniform(-info.max * 1.25, info.max * 1.25, 4096),
+        grid, -grid, (grid[:-1] + grid[1:]) / 2,
+        -(grid[:-1] + grid[1:]) / 2,
+    ]).astype(np.float32)
+    got = np.asarray(F.cast_to_format_value(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(got, F.scalar_cast_oracle(x, fmt))
+
+
+@given(
+    hnp.arrays(
+        np.float32,
+        st.integers(min_value=1, max_value=8).map(lambda n: (n, 8)),
+        elements=st.floats(-30, 30, width=32),
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_fp6_pack_roundtrip(x):
+    for fmt in FP6_FMTS:
+        xj = jnp.asarray(x)
+        codes = F.fp6_encode(xj, fmt)
+        packed = F.fp6_pack(codes)
+        assert packed.shape == (*x.shape[:-1], 3 * x.shape[-1] // 4)
+        unpacked = F.fp6_unpack(packed)
+        np.testing.assert_array_equal(np.asarray(unpacked),
+                                      np.asarray(codes))
+        decoded = np.asarray(F.fp6_decode(unpacked, fmt))
+        np.testing.assert_array_equal(
+            decoded, np.asarray(F.cast_to_format_value(xj, fmt)))

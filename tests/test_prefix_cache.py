@@ -459,3 +459,115 @@ def test_engine_same_prompt_admissions_share_all_pages():
         prompt[None], 4)[0]
     np.testing.assert_array_equal(out[i1], want)
     np.testing.assert_array_equal(out[i2], want)
+
+
+# ---------------------------------------------------------------------------
+# partial-page prefix hits (monolithic admission)
+# ---------------------------------------------------------------------------
+
+
+def test_partial_page_hit_monolithic_token_identical():
+    """Regression (lost partial-page hits): prompts sharing a head that
+    ends mid-page must take the partial-tail hit under monolithic
+    admission — and stay token-identical to the cache-disabled engine,
+    because the engine COWs the partial page before installing the
+    remaining rows in place."""
+    cfg = _cfg(True)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(41)
+    head = rng.integers(0, 128, (10,)).astype(np.int32)  # 1 page + 2 tail
+    reqs = [(head, 4)] + [
+        (np.concatenate([head, rng.integers(0, 128, (t,)).astype(
+            np.int32)]), 4) for t in (6, 3)]
+
+    def serve(prefix):
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=32, max_slots=1, page_size=8,
+            prefill_mode="monolithic", prefix_cache=prefix))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        out = eng.run()
+        return [out[i] for i in ids], eng
+
+    want, _ = serve(False)
+    got, eng = serve(True)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(g, w)
+    stats = eng.cache_stats()
+    assert stats["prefix_partial_inserts"] >= 1
+    # the followers' hits include the 2 mid-page tokens, not just page 0
+    assert stats["prefix_hit_tokens"] >= 2 * 10
+    assert eng.scheduler.cow_copies >= 1  # partial pages were COWed
+
+
+def test_release_partial_unpins_exactly_one_entry():
+    tree, pool = _tree()
+    prompt = np.arange(10, dtype=np.int32)  # 2 full + 2-token tail @ ps 4
+    pages = pool.alloc(3)
+    tree.insert(prompt, pages, partial=True)
+    assert tree.num_partial_entries == 1 and pool.ref(pages[2]) == 2
+    assert not tree.release_partial(pages[0])  # full-page node: untouched
+    assert tree.release_partial(pages[2])
+    assert tree.num_partial_entries == 0 and pool.ref(pages[2]) == 1
+    assert not tree.release_partial(pages[2])  # already gone
+    pool.free(pages)
+    tree.evict(10)
+    assert pool.pages_in_use == 0
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_prefix_tree_property_partial_refcounts(seed):
+    """Partial-tail churn obeys the same refcount conservation: through
+    acquire (partial hits modelled with the engine's COW-or-unpin
+    contract), insert(partial=True), finish, evict, and random
+    release_partial probes, every page's refcount equals (tree full +
+    partial holds) + (live tables holding it); draining empties all."""
+    rng = np.random.default_rng(seed)
+    ps, num_pages = 4, 32
+    pool = PagePool(num_pages)
+    tree = PrefixCache(pool, ps)
+    vocab = 3  # tiny vocab -> heads collide -> real partial hits
+    live = []
+    for _ in range(60):
+        op = rng.integers(4)
+        if op == 0:  # admit, monolithic-style (partial hits allowed)
+            n_tok = int(rng.integers(1, 13))
+            prompt = rng.integers(0, vocab, size=(n_tok,)).astype(np.int32)
+            hit, cached = tree.acquire(prompt)
+            if cached % ps:  # partial page: COW it, or unpin as fallback
+                old = hit[-1]
+                if pool.can_alloc(1):
+                    (new,) = pool.alloc(1)
+                    pool.free([old])
+                    hit[-1] = new
+                else:
+                    assert tree.release_partial(old)
+            need = -(-n_tok // ps) - len(hit)
+            if not pool.can_alloc(need):
+                tree.evict(need - pool.free_pages)
+            ids = pool.alloc(need)
+            if ids is None:
+                pool.free(hit)
+                continue
+            table = hit + ids
+            tree.insert(prompt, table, partial=True)
+            live.append(table)
+        elif op == 1 and live:  # finish
+            pool.free(live.pop(int(rng.integers(len(live)))))
+        elif op == 2:  # pressure
+            tree.evict(int(rng.integers(1, 4)))
+        else:  # unpin probe: free pages never match, held may
+            pid = int(rng.integers(num_pages))
+            if pool.ref(pid) == 0:
+                assert not tree.release_partial(pid)
+            else:
+                tree.release_partial(pid)
+        held = tree.pages_held
+        for pid in range(num_pages):
+            want = held.count(pid) + sum(t.count(pid) for t in live)
+            assert pool.ref(pid) == want, (pid, want, pool.ref(pid))
+    for table in live:
+        pool.free(table)
+    tree.evict(num_pages)
+    assert pool.pages_in_use == 0
+    assert tree.num_nodes == 0 and tree.num_partial_entries == 0
