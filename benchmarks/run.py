@@ -11,8 +11,8 @@ import traceback
 
 from . import (block_size_sweep, common, decode_attention, e2e_step,
                emulation_breakdown, format_comparison, prefill,
-               serve_prefix, serve_throughput, spec_decode, speedup,
-               throughput_sweep, tiered_kv)
+               serve_overload, serve_prefix, serve_throughput, spec_decode,
+               speedup, throughput_sweep, tiered_kv)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -27,6 +27,7 @@ SUITES = [
     ("spec_decode", spec_decode.run),
     ("prefill", prefill.run),
     ("tiered_kv", tiered_kv.run),
+    ("serve_overload", serve_overload.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -38,6 +39,7 @@ _JSON_FILES = {
     "BENCH_spec.json": ("spec_decode",),
     "BENCH_prefill.json": ("prefill",),
     "BENCH_tiered.json": ("tiered_kv",),
+    "BENCH_overload.json": ("serve_overload",),
 }
 
 

@@ -1,0 +1,299 @@
+"""Overload-control serve benchmark: goodput under closed-loop overload.
+
+Closed-loop async clients drive the serving front end at 2x and 10x the
+engine's sustainable concurrency. Each client loops submit -> stream ->
+next job; a shed submission (429-equivalent ``ShedError``) is retried
+after the controller's ``retry_after_s`` hint. Three conditions:
+
+  * **1x calibration** — one client, shedding off: measures the
+    unloaded first-token latency L0 that anchors the SLO (4 x L0).
+  * **10x, shedding off** — the failure mode: every request is admitted
+    into an unbounded queue, first-token latency is queue-depth x
+    service-interval, and almost nothing meets the SLO.
+  * **2x / 10x, shedding on** — the controller rejects at the door once
+    its predicted first-token latency misses the SLO, so admitted
+    requests keep a bounded queue ahead of them.
+
+Metrics (per condition): goodput = completed requests whose first-token
+latency (accepted submit -> first sampled token, the latency the SLO
+protects) met the SLO, per wall second; p50/p99 first-token latency;
+shed count; engine preemption count.
+
+Gates (full mode; --smoke relaxes to directional checks):
+  * goodput with shedding at 10x load >= 2x the no-shedding baseline,
+  * shed-before-thrash: preemptions with shedding <= preemptions
+    without, and bounded by completed requests (the page pool is sized
+    tight enough that the unshed 10x run swaps),
+  * streaming first-token latency through the HTTP/SSE server within
+    1.2x of direct engine submit (plus 10ms absolute slack so a
+    millisecond-scale base latency doesn't gate on socket jitter).
+
+  PYTHONPATH=src python benchmarks/serve_overload.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+try:  # package mode (python -m benchmarks.run)
+    from . import common
+    from .serve_throughput import tiny_cfg
+except ImportError:  # script mode (python benchmarks/serve_overload.py)
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    import common
+    from serve_throughput import tiny_cfg
+
+
+def _client_prompt(rng, pmin, pmax):
+    n = int(rng.integers(pmin, pmax + 1))
+    return rng.integers(0, 256, size=(n,)).astype(np.int32)
+
+
+async def _closed_loop_client(aeng, cid, jobs, wl, rec):
+    """One closed-loop client: submit -> stream -> next, retrying sheds."""
+    from repro.serve import ShedError
+
+    rng = np.random.default_rng(1000 + cid)
+    for _ in range(jobs):
+        prompt = _client_prompt(rng, wl["pmin"], wl["pmax"])
+        while True:
+            t0 = time.perf_counter()
+            try:
+                rid = aeng.submit(prompt, wl["max_new"])
+                break
+            except ShedError as e:
+                rec["shed"] += 1
+                await asyncio.sleep(max(1e-3, min(e.retry_after_s, 0.05)))
+        first = None
+        async for _idx, _tok, _fin in aeng.stream(rid):
+            if first is None:
+                first = time.perf_counter() - t0
+        rec["first_lats"].append(first)
+        rec["done"] += 1
+
+
+def run_condition(params, cfg, sc_kwargs, n_clients, jobs, wl):
+    """Run one load condition; returns (record, elapsed_s, engine stats)."""
+    from repro.serve import (AsyncServeEngine, ContinuousBatchingEngine,
+                             ServeConfig)
+
+    async def go():
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(**sc_kwargs))
+        # warm the jit caches AND the overload controller's EWMAs (two
+        # requests => both the latency floor and the first-token interval
+        # have samples) outside the timed window
+        for i in range(2):
+            eng.submit(np.arange(1 + i, wl["pmin"] + 1 + i,
+                                 dtype=np.int32), 2)
+        eng.run()
+        aeng = AsyncServeEngine(eng)
+        rec = {"shed": 0, "done": 0, "first_lats": []}
+        t0 = time.perf_counter()
+        await asyncio.gather(*(
+            _closed_loop_client(aeng, c, jobs, wl, rec)
+            for c in range(n_clients)))
+        elapsed = time.perf_counter() - t0
+        return rec, elapsed, eng.cache_stats()
+
+    return asyncio.run(go())
+
+
+def _summarize(name, rec, elapsed, stats, slo_s):
+    lats = np.sort(np.asarray(rec["first_lats"], np.float64))
+    met = int((lats <= slo_s).sum()) if lats.size else 0
+    return {
+        "condition": name,
+        "completed": rec["done"],
+        "shed": rec["shed"],
+        "slo_met": met,
+        "goodput_rps": met / elapsed,
+        "throughput_rps": rec["done"] / elapsed,
+        "first_token_p50_ms": float(lats[lats.size // 2] * 1e3)
+        if lats.size else None,
+        "first_token_p99_ms": float(
+            lats[min(lats.size - 1, int(lats.size * 0.99))] * 1e3)
+        if lats.size else None,
+        "preemptions": int(stats.get("preemptions", 0)),
+        "shed_count_engine": int(stats.get("shed_count", 0)),
+        "elapsed_s": elapsed,
+    }
+
+
+def first_token_latency_direct(params, cfg, sc_kwargs, reps, plen):
+    """Median submit -> first-token latency, direct engine calls."""
+    from repro.serve import ContinuousBatchingEngine, ServeConfig
+
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(**sc_kwargs))
+    eng.submit(np.arange(1, plen + 1, dtype=np.int32), 2)
+    eng.run()  # warm
+    got = {}
+    eng.scheduler.on_token = (
+        lambda req, tok, fin: got.setdefault(req.id, time.perf_counter()))
+    lats = []
+    for i in range(reps):
+        # distinct prompts so no rep rides a full prefix-cache hit
+        prompt = ((np.arange(plen, dtype=np.int64) + 17 * (i + 1)) % 251
+                  ).astype(np.int32)
+        t0 = time.perf_counter()
+        rid = eng.submit(prompt, 2)
+        while rid not in got:
+            eng.step()
+        lats.append(got[rid] - t0)
+        eng.run()  # finish the request before the next rep
+    return float(np.median(lats))
+
+
+def first_token_latency_server(params, cfg, sc_kwargs, reps, plen):
+    """Median POST -> first SSE token latency through the HTTP server."""
+    from repro.serve import (AsyncServeEngine, ContinuousBatchingEngine,
+                             ServeConfig, ServeHTTPServer)
+    from repro.serve.server import sse_generate
+
+    async def go():
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(**sc_kwargs))
+        eng.submit(np.arange(1, plen + 1, dtype=np.int32), 2)
+        eng.run()  # warm
+        aeng = AsyncServeEngine(eng)
+        srv = ServeHTTPServer(aeng, port=0)
+        await srv.start()
+        lats = []
+        try:
+            for i in range(reps):
+                prompt = ((np.arange(plen, dtype=np.int64) + 17 * (i + 1))
+                          % 251).astype(np.int32)
+                t0 = time.perf_counter()
+                async for ev in sse_generate("127.0.0.1", srv.port, {
+                        "prompt": prompt.tolist(), "max_new_tokens": 2}):
+                    if "token" in ev and len(lats) == i:
+                        lats.append(time.perf_counter() - t0)
+        finally:
+            await srv.stop()
+        return float(np.median(lats))
+
+    return asyncio.run(go())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI smoke step")
+    args = ap.parse_args(argv)
+    import jax
+
+    from repro.nn import model as M
+
+    if args.smoke:
+        slots, max_seq, ps, num_pages = 2, 32, 8, None
+        wl = {"pmin": 6, "pmax": 10, "max_new": 4}
+        jobs, reps, plen = 2, 3, 16
+    else:
+        slots, max_seq, ps = 4, 64, 8
+        # tight pool: 4 slots x up to 5 pages/seq = 20 demand vs 14 pages,
+        # so the unshed overload run has to swap (the thrash the shedding
+        # gate compares against)
+        num_pages = 14
+        wl = {"pmin": 8, "pmax": 24, "max_new": 12}
+        jobs, reps, plen = 3, 5, 48
+
+    base = dict(max_seq=max_seq, max_slots=slots, page_size=ps,
+                num_pages=num_pages)
+    cfg = tiny_cfg(True)
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+
+    # -- calibration: unloaded first-token latency anchors the SLO ----------
+    rec0, el0, _ = run_condition(params, cfg, base, n_clients=1,
+                                 jobs=max(2, jobs), wl=wl)
+    l0 = float(np.median(rec0["first_lats"]))
+    slo_s = max(4.0 * l0, 0.03)
+    slo_ms = slo_s * 1e3
+    shed_cfg = dict(base, slo_ms=slo_ms)
+    print(f"unloaded first-token latency {l0 * 1e3:.1f}ms -> "
+          f"SLO {slo_ms:.0f}ms")
+
+    conds = {}
+    for name, kw, mult in (
+            ("noshed_10x", base, 10),
+            ("shed_2x", shed_cfg, 2),
+            ("shed_10x", shed_cfg, 10)):
+        rec, el, stats = run_condition(params, cfg, kw,
+                                       n_clients=mult * slots, jobs=jobs,
+                                       wl=wl)
+        conds[name] = _summarize(name, rec, el, stats, slo_s)
+
+    lat_dir = first_token_latency_direct(params, cfg, base, reps, plen)
+    lat_srv = first_token_latency_server(params, cfg, base, reps, plen)
+
+    print("condition,clients,completed,shed,slo_met,goodput_rps,"
+          "p50_ms,p99_ms,preemptions")
+    for name, c in conds.items():
+        mult = int(name.rsplit("_", 1)[1][:-1])
+        print(f"{name},{mult * slots},{c['completed']},{c['shed']},"
+              f"{c['slo_met']},{c['goodput_rps']:.2f},"
+              f"{c['first_token_p50_ms']:.1f},{c['first_token_p99_ms']:.1f},"
+              f"{c['preemptions']}")
+    print(f"first-token latency: direct {lat_dir * 1e3:.2f}ms, "
+          f"server {lat_srv * 1e3:.2f}ms "
+          f"({lat_srv / lat_dir:.2f}x)")
+
+    shed10, noshed10 = conds["shed_10x"], conds["noshed_10x"]
+    gain = shed10["goodput_rps"] / max(noshed10["goodput_rps"], 1e-9)
+    common.emit(
+        f"serve/overload_{'smoke' if args.smoke else 'full'}/"
+        f"{10 * slots}c", 1e6 / max(shed10["throughput_rps"], 1e-9),
+        f"goodput {shed10['goodput_rps']:.2f} vs "
+        f"{noshed10['goodput_rps']:.2f} rps unshed ({gain:.1f}x), "
+        f"{shed10['shed']} sheds, preempt {shed10['preemptions']} vs "
+        f"{noshed10['preemptions']}")
+    common.emit_json("serve_overload", {
+        "slo_ms": slo_ms,
+        "unloaded_first_token_ms": l0 * 1e3,
+        "slots": slots,
+        "jobs_per_client": jobs,
+        "conditions": conds,
+        "goodput_gain_10x": gain,
+        "first_token_direct_ms": lat_dir * 1e3,
+        "first_token_server_ms": lat_srv * 1e3,
+        "server_latency_ratio": lat_srv / lat_dir,
+    })
+
+    # -- gates ---------------------------------------------------------------
+    srv_ok = lat_srv <= 1.2 * lat_dir + 0.010
+    all_done = all(c["completed"] == mult * slots * jobs
+                   for c, mult in ((conds["shed_2x"], 2),
+                                   (conds["shed_10x"], 10),
+                                   (conds["noshed_10x"], 10)))
+    thrash_ok = (shed10["preemptions"] <= noshed10["preemptions"]
+                 and shed10["preemptions"] <= shed10["completed"])
+    if args.smoke:
+        goodput_ok = (gain >= 1.0 and shed10["shed"] > 0)
+        gate_desc = ("smoke: shed goodput >= unshed, sheds occurred, "
+                     "preemptions bounded")
+    else:
+        goodput_ok = gain >= 2.0 and shed10["shed"] > 0
+        gate_desc = ("full: shed goodput >= 2x unshed at 10x load, "
+                     "preemptions bounded while shedding")
+    ok = goodput_ok and thrash_ok and srv_ok and all_done
+    print(f"\ngoodput gain {gain:.2f}x, preemptions "
+          f"{shed10['preemptions']} (shed) vs {noshed10['preemptions']} "
+          f"(unshed), server latency {lat_srv / lat_dir:.2f}x direct: "
+          f"{'PASS' if ok else 'FAIL'} ({gate_desc}; server <= 1.2x + "
+          f"10ms)")
+    if not ok:
+        raise SystemExit(1)
+    return gain
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

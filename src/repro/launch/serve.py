@@ -7,10 +7,21 @@
 engine with ragged arrivals; ``--engine fixed`` runs the fixed-slot
 reference loop. ``--ragged`` staggers prompt lengths so paging has
 something to win on.
+
+``--serve`` starts the asyncio HTTP/SSE front end instead of the batch
+workload: POST /v1/generate streams tokens as server-sent events,
+/v1/cancel aborts a request mid-flight, /v1/health reports engine and
+overload stats. ``--slo-ms``/``--max-queue`` arm load shedding (429),
+``--temperature/--top-p/--top-k/--seed`` set the default sampling each
+request can override in its own body:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
+      --serve --port 8000 --temperature 0.8 --top-p 0.95 --slo-ms 500
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import logging
 import time
 
@@ -19,7 +30,8 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.nn import model
-from repro.serve import FixedSlotEngine, ServeConfig, ServeEngine, TierPolicy
+from repro.serve import (AsyncServeEngine, FixedSlotEngine, ServeConfig,
+                         ServeEngine, ServeHTTPServer, TierPolicy)
 
 log = logging.getLogger("repro.serve")
 
@@ -30,6 +42,42 @@ def build_engine(cfg, serve_cfg, params, kind: str):
     return ServeEngine(params, cfg, serve_cfg)
 
 
+def _run_server(engine, args):
+    """Run the HTTP/SSE front end until interrupted; graceful drain and
+    prefix-snapshot write-back on the way out."""
+    import os
+
+    async def serve():
+        if args.prefix_snapshot and os.path.exists(args.prefix_snapshot):
+            n = engine.load_prefix_cache(args.prefix_snapshot)
+            log.info("warm-started prefix cache: %d entries from %s",
+                     n, args.prefix_snapshot)
+        async_engine = AsyncServeEngine(engine)
+        server = ServeHTTPServer(async_engine, host=args.host,
+                                 port=args.port)
+        await server.start()
+        log.info("serving on http://%s:%d (POST /v1/generate, "
+                 "/v1/cancel, /v1/drain; GET /v1/health)",
+                 args.host, server.port)
+        try:
+            await server.serve_forever()
+        except (KeyboardInterrupt, asyncio.CancelledError):
+            pass
+        finally:
+            log.info("draining...")
+            await async_engine.drain()
+            await server.stop()
+            if args.prefix_snapshot:
+                n = engine.save_prefix_cache(args.prefix_snapshot)
+                log.info("saved prefix cache: %d pages to %s",
+                         n, args.prefix_snapshot)
+
+    try:
+        asyncio.run(serve())
+    except KeyboardInterrupt:
+        pass
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -37,7 +85,33 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="default sampling temperature (0 = exact greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="default nucleus-sampling mass (1.0 = disabled)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="default top-k cutoff (0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine base RNG seed; each request's stream is "
+                         "derived from (seed, request id) unless the "
+                         "request carries its own seed")
+    ap.add_argument("--slo-ms", type=float, default=0,
+                    help="admission-latency SLO in ms: shed submissions "
+                         "(429) once the predicted first-token latency "
+                         "exceeds it (0 = no latency-model shedding)")
+    ap.add_argument("--max-queue", type=int, default=-1,
+                    help="hard queue-depth cap; submissions past it are "
+                         "shed (429). -1 = unbounded")
+    ap.add_argument("--serve", action="store_true",
+                    help="start the HTTP/SSE server instead of running "
+                         "the batch workload")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--prefix-snapshot", default="",
+                    help="path to a prefix-cache snapshot "
+                         "(save_prefix_cache): loaded at startup if it "
+                         "exists, written back on clean server exit — "
+                         "restarts warm-start shared prompt heads")
     ap.add_argument("--quant", default="",
                     choices=["", "wide", "mxfp8", "mxfp4"])
     ap.add_argument("--quantize-kv", action="store_true")
@@ -109,6 +183,9 @@ def main(argv=None):
     if args.spec_decode and args.engine != "continuous":
         ap.error("--spec-decode requires --engine continuous (the "
                  "fixed-slot reference engine has no verify path)")
+    if args.serve and args.engine != "continuous":
+        ap.error("--serve requires --engine continuous (the async front "
+                 "end drives the continuous-batching step loop)")
     if args.tiered:
         if args.engine != "continuous":
             ap.error("--tiered requires --engine continuous")
@@ -134,6 +211,9 @@ def main(argv=None):
         max_seq += args.num_draft_tokens
     serve_cfg = ServeConfig(
         max_seq=max_seq, temperature=args.temperature,
+        top_p=args.top_p, top_k=args.top_k, seed=args.seed,
+        slo_ms=args.slo_ms or None,
+        max_queue=args.max_queue if args.max_queue >= 0 else None,
         max_slots=args.max_slots or args.batch, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
         decode_kernel=args.decode_kernel,
@@ -149,6 +229,8 @@ def main(argv=None):
             repack_pages_per_step=args.tier_repack_pages)
         if args.tiered else None)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
+    if args.serve:
+        return _run_server(engine, args)
     rng = np.random.default_rng(0)
 
     t0 = time.perf_counter()

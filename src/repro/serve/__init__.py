@@ -1,16 +1,24 @@
 """Serving: MX weights + paged MX KV cache, continuous batching,
-radix-tree prefix caching over ref-counted copy-on-write pages, and
-greedy speculative decoding with batched multi-token verify."""
+radix-tree prefix caching over ref-counted copy-on-write pages,
+lossless speculative decoding with batched multi-token verify (greedy
+prefix matching at temperature 0, rejection sampling above), stochastic
+sampling with per-request counter-based RNG, SLO-aware overload control,
+and an asyncio HTTP/SSE front end."""
 from .engine import (ContinuousBatchingEngine, FixedSlotEngine, ServeConfig,
                      ServeEngine, TierPolicy, make_serve_step)
 from .kv_cache import PagePool, pages_for, pages_spanned
+from .overload import OverloadConfig, OverloadController, ShedError
 from .prefix_cache import PrefixCache
+from .sampling import SamplingParams
 from .scheduler import Request, Scheduler
+from .server import AsyncServeEngine, DrainingError, ServeHTTPServer
 from .spec_decode import (Drafter, NgramDrafter, ScriptedDrafter,
                           greedy_accept)
 
-__all__ = ["ContinuousBatchingEngine", "Drafter", "FixedSlotEngine",
-           "NgramDrafter", "PagePool", "PrefixCache", "Request",
-           "Scheduler", "ScriptedDrafter", "ServeConfig", "ServeEngine",
-           "TierPolicy", "greedy_accept", "make_serve_step", "pages_for",
-           "pages_spanned"]
+__all__ = ["AsyncServeEngine", "ContinuousBatchingEngine", "Drafter",
+           "DrainingError", "FixedSlotEngine", "NgramDrafter",
+           "OverloadConfig", "OverloadController", "PagePool",
+           "PrefixCache", "Request", "SamplingParams", "Scheduler",
+           "ScriptedDrafter", "ServeConfig", "ServeEngine",
+           "ServeHTTPServer", "ShedError", "TierPolicy", "greedy_accept",
+           "make_serve_step", "pages_for", "pages_spanned"]

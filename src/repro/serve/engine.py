@@ -67,6 +67,7 @@ within a path, determinism and the paging machinery's exactness
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
 import time
 from collections import OrderedDict, deque
@@ -81,8 +82,10 @@ from repro.kernels import mx_repack_pages
 from repro.nn import model
 from repro.nn.config import ModelConfig
 
-from . import kv_cache, spec_decode
+from . import kv_cache, sampling, spec_decode
 from .kv_cache import PAGE_UNITS_FULL, UNITS_BY_BITS
+from .overload import OverloadConfig, OverloadController
+from .sampling import SamplingParams
 from .scheduler import Scheduler
 
 log = logging.getLogger("repro.serve")
@@ -121,8 +124,21 @@ class TierPolicy:
 @dataclasses.dataclass
 class ServeConfig:
     max_seq: int = 1024
+    # default sampling for requests that don't carry their own
+    # SamplingParams: temperature 0 => exact greedy; top_k 0 => disabled;
+    # ``seed`` is the engine's base seed, mixed with each request id into
+    # that request's own RNG stream (see serve.sampling.resolve_seed)
     temperature: float = 0.0  # 0 => greedy
+    top_p: float = 1.0
+    top_k: int = 0
+    seed: int = 0
     eos_id: Optional[int] = None
+    # overload control (serve.overload): shed submissions (ShedError /
+    # HTTP 429) once the predicted first-token latency exceeds slo_ms,
+    # and unconditionally once the queue reaches max_queue. None = admit
+    # everything (the pre-overload-control behavior).
+    slo_ms: Optional[float] = None
+    max_queue: Optional[int] = None
     # continuous batching (ignored by FixedSlotEngine)
     max_slots: int = 8
     page_size: int = 16
@@ -138,10 +154,15 @@ class ServeConfig:
     # resident tokens; "einsum" is the escape hatch back to the reference
     # gather-and-dequantize path (also what wide bf16 pools fall back to)
     decode_kernel: str = "fused"
-    # speculative decoding (greedy only): draft num_draft_tokens per
-    # sequence per step and verify them all in one batched multi-token
-    # pass over the paged MX cache — token-identical to non-speculative
-    # decode for ANY drafter; a good drafter only raises tokens/step.
+    # speculative decoding: draft num_draft_tokens per sequence per step
+    # and verify them all in one batched multi-token pass over the paged
+    # MX cache. At temperature 0 acceptance is exact greedy prefix
+    # matching (token-identical to non-speculative decode for ANY
+    # drafter); at temperature > 0 it is rejection sampling against the
+    # filtered target distribution (serve.sampling.verify_rejection), so
+    # emitted tokens keep exactly the distribution plain sampling would
+    # produce — a good drafter only raises tokens/step, never changes
+    # what is sampled.
     # ``drafter`` is "ngram" (prompt-lookup, no second model needed) or a
     # spec_decode.Drafter instance.
     spec_decode: bool = False
@@ -253,12 +274,6 @@ class ContinuousBatchingEngine:
         if self.spec_enabled:
             if serve_cfg.num_draft_tokens < 1:
                 raise ValueError("spec_decode needs num_draft_tokens >= 1")
-            if serve_cfg.temperature > 0:
-                raise ValueError(
-                    "speculative decoding currently requires greedy "
-                    "sampling (temperature=0): acceptance compares greedy "
-                    "argmaxes (typical-acceptance sampling is a ROADMAP "
-                    "follow-on)")
             if mixers - {"attn"}:
                 raise NotImplementedError(
                     f"speculative decoding requires attention-only models, "
@@ -353,25 +368,43 @@ class ContinuousBatchingEngine:
             # candidate-format tuple is static, baked into the kernels
             mf = self._mixed_fmts = tuple(dict.fromkeys(
                 (cfg.quant.fmt, self.tier.mid_fmt, self.tier.cold_fmt)))
-            self._decode = jax.jit(
-                lambda p, c, tok, rows, pos, fmts: model.decode_step_paged(
-                    p, self.cfg_decode, c, tok, rows, pos,
-                    page_fmts=fmts, mixed_fmts=mf),
-                donate_argnums=() if cpu else (1,))
-            self._verify = jax.jit(
-                lambda p, c, tok, rows, pos, fmts: model.verify_step_paged(
-                    p, self.cfg_decode, c, tok, rows, pos,
-                    page_fmts=fmts, mixed_fmts=mf),
-                donate_argnums=() if cpu else (1,))
         else:
-            self._decode = jax.jit(
-                lambda p, c, tok, rows, pos: model.decode_step_paged(
-                    p, self.cfg_decode, c, tok, rows, pos),
-                donate_argnums=() if cpu else (1,))
-            self._verify = jax.jit(
-                lambda p, c, tok, rows, pos: model.verify_step_paged(
-                    p, self.cfg_decode, c, tok, rows, pos),
-                donate_argnums=() if cpu else (1,))
+            mf = None
+
+        # sampling happens INSIDE the jitted step, fed per-slot parameter
+        # vectors (temperature / top-p / top-k / seed / stream counter):
+        # a batch mixing greedy and stochastic requests at different
+        # temperatures still costs one dispatch, and greedy rows take the
+        # exact f32 argmax the pre-sampling engine took. The verify step
+        # likewise runs rejection-sampling acceptance in-dispatch and
+        # returns (num_emitted, emitted) instead of raw logits.
+        def _decode_step(p, c, tok, rows, pos, temps, tps, tks, seeds,
+                         ctrs, fmts=None):
+            kw = ({"page_fmts": fmts, "mixed_fmts": mf}
+                  if fmts is not None else {})
+            logits, c = model.decode_step_paged(
+                p, self.cfg_decode, c, tok, rows, pos, **kw)
+            toks = sampling.sample(logits[:, -1], temps, tps, tks, seeds,
+                                   ctrs)
+            return toks, c
+
+        def _verify_step(p, c, tok, rows, pos, temps, tps, tks, seeds,
+                         ctrs, fmts=None):
+            kw = ({"page_fmts": fmts, "mixed_fmts": mf}
+                  if fmts is not None else {})
+            logits, c = model.verify_step_paged(
+                p, self.cfg_decode, c, tok, rows, pos, **kw)
+            n_emit, emitted = sampling.verify_rejection(
+                logits, tok[:, 1:], temps, tps, tks, seeds, ctrs)
+            return n_emit, emitted, c
+
+        self._decode = jax.jit(_decode_step,
+                               donate_argnums=() if cpu else (1,))
+        self._verify = jax.jit(_verify_step,
+                               donate_argnums=() if cpu else (1,))
+        # prefill-logits sampler (first token of each admitted request);
+        # one compiled shape per batch size, bounded by max_slots
+        self._sample_fn = jax.jit(sampling.sample)
         self._install = jax.jit(
             lambda c, pf, slot, ids: kv_cache.install_prefill(
                 c, pf, slot, ids, ps),
@@ -410,6 +443,15 @@ class ContinuousBatchingEngine:
                     p, self.cfg_decode, c, toks, rows, pos, nv, idx),
                 donate_argnums=() if cpu else (1,))
         self._key = jax.random.PRNGKey(0)
+        # requests that don't carry SamplingParams sample with these
+        self._default_sampling = SamplingParams(
+            temperature=serve_cfg.temperature, top_p=serve_cfg.top_p,
+            top_k=serve_cfg.top_k).validate()
+        # admission gate: sheds submissions (ShedError) once the predicted
+        # first-token latency misses slo_ms or the queue hits max_queue;
+        # with neither knob set it only keeps stats
+        self.overload = OverloadController(OverloadConfig(
+            slo_ms=serve_cfg.slo_ms, max_queue=serve_cfg.max_queue))
         self.steps = 0
         self.prompt_tokens = 0  # total prompt tokens admitted
         self.prefill_tokens = 0  # prompt tokens actually computed
@@ -545,7 +587,55 @@ class ContinuousBatchingEngine:
         """Admission-latency sample: submit() -> first sampled token."""
         t0 = self._submit_time.pop(req_id, None)
         if t0 is not None:
-            self.admission_latencies.append(time.perf_counter() - t0)
+            lat = time.perf_counter() - t0
+            self.admission_latencies.append(lat)
+            self.overload.observe_first_token(lat)
+
+    # -- sampling parameter plumbing ----------------------------------------
+
+    def _req_sampling(self, req) -> SamplingParams:
+        return req.sampling if req.sampling is not None \
+            else self._default_sampling
+
+    def _slot_sampling(self, seqs):
+        """Per-slot sampling parameter vectors for one jitted step.
+
+        Inactive slots stay at the neutral greedy defaults (their sampled
+        token is computed and discarded, like their logits always were).
+        Each active row's counter is its request's next stream index —
+        ``len(generated)`` — which is what makes the stream a pure
+        function of (seed, index): slot id, batch composition, and
+        preemption history never enter the key.
+        """
+        arrs = sampling.slot_arrays(self.serve_cfg.max_slots)
+        for seq in seqs:
+            sp = self._req_sampling(seq.req)
+            slot = seq.slot
+            arrs["temps"][slot] = sp.temperature
+            arrs["top_ps"][slot] = sp.top_p
+            arrs["top_ks"][slot] = sp.top_k
+            arrs["seeds"][slot] = seq.req.seed
+            arrs["counters"][slot] = len(seq.req.generated)
+        return (jnp.asarray(arrs["temps"]), jnp.asarray(arrs["top_ps"]),
+                jnp.asarray(arrs["top_ks"]), jnp.asarray(arrs["seeds"]),
+                jnp.asarray(arrs["counters"]))
+
+    def _sample_prefill_rows(self, seqs, logits):
+        """Sample each row's first token from prefill logits (N, V) —
+        counter 0 of each request's stream; one dispatch per batch."""
+        n = len(seqs)
+        temps = np.zeros((n,), np.float32)
+        tps = np.ones((n,), np.float32)
+        tks = np.zeros((n,), np.int32)
+        seeds = np.zeros((n,), np.uint32)
+        for i, seq in enumerate(seqs):
+            sp = self._req_sampling(seq.req)
+            temps[i], tps[i], tks[i] = sp.temperature, sp.top_p, sp.top_k
+            seeds[i] = seq.req.seed
+        return np.asarray(self._sample_fn(
+            logits, jnp.asarray(temps), jnp.asarray(tps),
+            jnp.asarray(tks), jnp.asarray(seeds),
+            jnp.zeros((n,), jnp.int32)))
 
     # -- tiered mixed-format pool internals ---------------------------------
 
@@ -798,8 +888,7 @@ class ContinuousBatchingEngine:
                     self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
                     jnp.asarray(seq.pages, jnp.int32))
             sched.register_prefix(seq)
-            tok = int(_sample(logits, self._next_key(),
-                              self.serve_cfg.temperature)[0])
+            tok = int(self._sample_prefill_rows([seq], logits[:, -1])[0])
             self._record_first_token(seq.req.id)
             sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
 
@@ -882,9 +971,7 @@ class ContinuousBatchingEngine:
                 seq.prefill_pos = None
                 sched.register_prefix(seq)
                 if sampled is None:
-                    sampled = np.asarray(_sample(
-                        logits, self._next_key(),
-                        self.serve_cfg.temperature))
+                    sampled = self._sample_prefill_rows(seqs, logits[:, -1])
                 tok = int(sampled[i])
                 self._record_first_token(seq.req.id)
                 sched.record_token(seq, tok, eos_id=self.serve_cfg.eos_id)
@@ -1055,11 +1142,11 @@ class ContinuousBatchingEngine:
         self._ensure_pages()
         tokens, pos, page_rows, act = sched.assemble()
         args = (self._sync_fmts(),) if self.tiered else ()
-        logits, self.cache = self._decode(
+        toks_dev, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(page_rows), jnp.asarray(pos), *args)
-        toks = np.asarray(_sample(logits, self._next_key(),
-                                  self.serve_cfg.temperature))
+            jnp.asarray(page_rows), jnp.asarray(pos),
+            *self._slot_sampling(act), *args)
+        toks = np.asarray(toks_dev)
         self.steps += 1
         for seq in act:
             sched.advance(seq)
@@ -1074,14 +1161,18 @@ class ContinuousBatchingEngine:
         proposals; one ``verify_step_paged`` call writes all K + 1
         tokens' K/V into the slot's (exclusively owned — see
         ``_ensure_pages``) pages and returns per-position logits under
-        causal intra-chunk masking. Greedy acceptance keeps the longest
+        causal intra-chunk masking; acceptance runs in the same dispatch
+        (``sampling.verify_rejection``). Greedy rows keep the longest
         draft prefix matching the model's own argmaxes plus one bonus
-        token, so each sequence emits 1..K+1 tokens that are
-        token-identical to non-speculative decode regardless of the
-        drafter. Rejected drafts are rolled back page-exactly by simply
-        not advancing ``seq.pos`` past the accepted point: their rows are
-        dead by position masking and the next write there overwrites them
-        (nothing zeroed, nothing copied, shared pages never touched).
+        token — token-identical to non-speculative decode regardless of
+        the drafter. Stochastic rows run point-mass rejection sampling
+        against the filtered target distribution, so every emitted token
+        is distributed exactly as plain sampling at that stream position
+        (lossless; see ``serve.sampling``). Rejected drafts are rolled
+        back page-exactly by simply not advancing ``seq.pos`` past the
+        accepted point: their rows are dead by position masking and the
+        next write there overwrites them (nothing zeroed, nothing
+        copied, shared pages never touched).
         """
         sched = self.scheduler
         k = self.serve_cfg.num_draft_tokens
@@ -1097,22 +1188,20 @@ class ContinuousBatchingEngine:
                     f"drafter returned shape {drafts.shape}, wanted ({k},)")
             tokens[seq.slot, 1:] = drafts
         args = (self._sync_fmts(),) if self.tiered else ()
-        logits, self.cache = self._verify(
+        n_emit_dev, emitted_dev, self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(page_rows), jnp.asarray(pos), *args)
-        # greedy targets at every position (temperature 0 is validated at
-        # construction; _sample's argmax over the f32 cast, vectorized)
-        targets = np.asarray(
-            jnp.argmax(logits.astype(jnp.float32), axis=-1))
+            jnp.asarray(page_rows), jnp.asarray(pos),
+            *self._slot_sampling(act), *args)
+        n_emit = np.asarray(n_emit_dev)
+        emitted = np.asarray(emitted_dev)
         self.steps += 1
         self.spec_steps += 1
         for seq in act:
-            accepted, emitted = spec_decode.greedy_accept(
-                tokens[seq.slot, 1:], targets[seq.slot])
+            cnt = int(n_emit[seq.slot])
             self.spec_seq_steps += 1
             self.drafted_tokens += k
-            self.accepted_tokens += accepted
-            for tok in emitted:
+            self.accepted_tokens += cnt - 1
+            for tok in emitted[seq.slot, :cnt]:
                 # each emitted token validates one more written row
                 # (advance) before it is recorded — the verify-time
                 # mirror of the decode loop's advance/record pair; the
@@ -1125,11 +1214,134 @@ class ContinuousBatchingEngine:
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        """Queue one request; returns its id. Use with :meth:`run`."""
-        rid = self.scheduler.submit(prompt, max_new_tokens)
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               sampling_params: Optional[SamplingParams] = None) -> int:
+        """Queue one request; returns its id. Use with :meth:`run`.
+
+        ``sampling_params`` overrides the engine-default temperature /
+        top-p / top-k / seed for this request alone (None = defaults).
+        Raises :class:`~.overload.ShedError` when overload control is
+        configured and admitting this request would already miss the
+        SLO — shed at the door, before it costs a slot, pages, and
+        prefill work.
+        """
+        self.overload.admit(len(self.scheduler.queue))
+        sp = (sampling_params.validate() if sampling_params is not None
+              else self._default_sampling)
+        seed = sampling.resolve_seed(sp, self.serve_cfg.seed,
+                                     self.scheduler._next_id)
+        rid = self.scheduler.submit(prompt, max_new_tokens,
+                                    sampling=sp, seed=seed)
         self._submit_time[rid] = time.perf_counter()
         return rid
+
+    def cancel(self, request_id: int) -> bool:
+        """Abandon a request mid-flight (client disconnect): frees its
+        slot, exclusively-owned pages, and prefix-cache retains the same
+        step, wherever it currently lives — queued, mid-prefill,
+        decoding, or swapped out. True if the request was found (False:
+        it already finished and its resources are long gone)."""
+        found = self.scheduler.cancel(request_id)
+        if found:
+            self._submit_time.pop(request_id, None)
+            if self.tiered:
+                self._swap_fmts.pop(request_id, None)
+        return found
+
+    def save_prefix_cache(self, path) -> int:
+        """Persist the prefix cache — radix-tree structure AND the exact
+        device bytes of every page it holds — to ``path`` (npz).
+
+        A restarted engine :meth:`load_prefix_cache`-s this and
+        warm-starts shared prompt heads without recomputing (or even
+        re-quantizing) them: the restored pages are bit-identical, so
+        decode over an imported hit is token-identical to decode over
+        the original cache. Tiered engines save each page's element
+        format alongside its bytes (an fp4-repacked page must be read as
+        fp4 after import). Returns the number of pages saved.
+        """
+        prefix = self.scheduler.prefix
+        if prefix is None:
+            raise RuntimeError("engine has no prefix cache to save")
+        state = prefix.export_state()
+        pids = sorted({nd["page"] for nd in state["nodes"]}
+                      | {ent["page"] for ent in state["partials"]})
+        payload = {
+            "structure": np.frombuffer(json.dumps(state).encode(),
+                                       np.uint8),
+            "page_ids": np.asarray(pids, np.int64),
+        }
+        if self.tiered:
+            payload["page_fmts"] = np.asarray(
+                [int(self.page_fmts[p]) for p in pids], np.int32)
+        if pids:
+            snap = self._extract(self.cache, jnp.asarray(0, jnp.int32),
+                                 jnp.asarray(pids, jnp.int32))
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(snap)):
+                arr = np.asarray(leaf)
+                # raw bytes + dtype name + shape: survives MX element /
+                # bf16-scale dtypes that plain savez may not round-trip
+                payload[f"leaf_{i}_bytes"] = np.frombuffer(
+                    arr.tobytes(), np.uint8)
+                payload[f"leaf_{i}_dtype"] = np.asarray(arr.dtype.name)
+                payload[f"leaf_{i}_shape"] = np.asarray(arr.shape,
+                                                        np.int64)
+        np.savez(path, **payload)
+        return len(pids)
+
+    def load_prefix_cache(self, path) -> int:
+        """Warm-start the prefix cache from :meth:`save_prefix_cache`
+        output: allocates fresh pages, restores the saved bytes into
+        them verbatim, and rebuilds the radix tree over the new ids.
+        Requires an empty prefix cache (call it before serving traffic).
+        Returns the number of tree entries (nodes + partials) imported.
+        """
+        prefix = self.scheduler.prefix
+        if prefix is None:
+            raise RuntimeError("engine has no prefix cache to load into")
+        data = np.load(path)
+        state = json.loads(bytes(data["structure"]).decode())
+        old_ids = [int(x) for x in data["page_ids"]]
+        new_ids = []
+        if old_ids:
+            new_ids = self.scheduler._alloc_with_evict(len(old_ids))
+            if new_ids is None:
+                raise RuntimeError(
+                    f"page pool cannot hold {len(old_ids)} imported "
+                    "prefix pages")
+            # the reference extract supplies the authoritative treedef,
+            # dtypes, and shapes — the snapshot must match this engine's
+            # model/page geometry exactly
+            ref = self._extract(self.cache, jnp.asarray(0, jnp.int32),
+                                jnp.asarray(new_ids, jnp.int32))
+            leaves_ref, treedef = jax.tree_util.tree_flatten(ref)
+            leaves = []
+            for i, lr in enumerate(leaves_ref):
+                dtype = np.dtype(lr.dtype)
+                shape = tuple(int(s) for s in data[f"leaf_{i}_shape"])
+                if str(data[f"leaf_{i}_dtype"]) != dtype.name \
+                        or shape != tuple(lr.shape):
+                    raise ValueError(
+                        f"prefix snapshot leaf {i} is "
+                        f"{str(data[f'leaf_{i}_dtype'])}{shape}, this "
+                        f"engine expects {dtype.name}{tuple(lr.shape)} — "
+                        "saved under a different model or page config")
+                leaves.append(jnp.asarray(np.frombuffer(
+                    data[f"leaf_{i}_bytes"].tobytes(),
+                    dtype).reshape(shape)))
+            self.cache = self._restore(
+                self.cache, jax.tree_util.tree_unflatten(treedef, leaves),
+                jnp.asarray(0, jnp.int32), jnp.asarray(new_ids, jnp.int32))
+        count = prefix.import_state(state,
+                                    dict(zip(old_ids, new_ids)))
+        if self.tiered:
+            # alloc reset the fresh pages to the base format; re-apply
+            # the formats the bytes were saved under
+            self._drain_allocs()
+            for pid, fid in zip(new_ids, data["page_fmts"]):
+                if int(fid) != self._base_fmt_id:
+                    self._set_page_fmt(pid, FORMAT_BY_ID[int(fid)])
+        return count
 
     def run(self) -> Dict[int, np.ndarray]:
         """Serve until drained. Returns {request_id: prompt + generated}."""
@@ -1175,6 +1387,8 @@ class ContinuousBatchingEngine:
             "peak_paged_bytes": page_bytes * sched.peak_pages,
             "skipped_admissions": sched.skipped_admissions,
             "deferred_admissions": sched.deferred_admissions,
+            "cancellations": sched.cancellations,
+            "shed_count": self.overload.shed_count,
             "cow_copies": sched.cow_copies,
             "prompt_tokens": self.prompt_tokens,
             "prefill_tokens_computed": self.prefill_tokens,

@@ -1,0 +1,178 @@
+"""SLO-aware overload control: admission gating and load shedding.
+
+The engine's continuous-batching loop degrades gracefully under moderate
+overload — the queue absorbs bursts, preemption absorbs page pressure —
+but under sustained overload both degradations compound into the classic
+serving failure mode: every request waits behind an unbounded queue, the
+page pool thrashes through swap preemptions, and *nobody* meets the
+latency target even though the engine is running at full throughput.
+Goodput (requests served within their SLO) collapses while throughput
+stays flat.
+
+The controller here implements the standard fix: measure what the system
+is actually delivering, predict what a new arrival would experience, and
+**reject at the door** (a 429-equivalent ``ShedError``) once that
+prediction misses the SLO. A shed request costs one exception; an
+admitted-then-late request costs a slot, pages, prefill compute, and —
+under page pressure — preemption work that slows every resident request.
+Shedding before queuing is therefore also shedding before preemption
+thrash, which ``benchmarks/serve_overload.py`` pins down directly.
+
+Model: admission latency (submit -> first sampled token) is dominated by
+queue wait once the engine saturates, and queue wait is depth times the
+drain rate. The controller keeps an EWMA of the interval between
+successive first tokens (the drain rate's inverse — measured, so it
+automatically reflects prompt lengths, chunked-prefill budgets, spec
+decode, tiering, everything) plus an EWMA of recent admission latency as
+the zero-queue floor, and predicts::
+
+    predicted(depth) = depth * ewma_first_token_interval + ewma_latency
+
+A request is shed when ``predicted(queue_depth) > slo`` (with hysteresis:
+shedding stops only once the prediction falls below
+``hysteresis * slo``, so the gate doesn't flap at the boundary), or
+unconditionally when the queue has reached ``max_queue``. Both knobs are
+optional and independent; with neither set the controller admits
+everything. An arrival that finds the queue **empty** is always admitted
+— it waits behind nothing the model can price, and each admitted request
+refreshes the estimates, so the gate can never latch shut on a stale
+under-load latency floor while the engine drains idle.
+
+The controller is pure host-side bookkeeping — no device work, O(1) per
+event — and clock-injectable for deterministic tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+class ShedError(RuntimeError):
+    """Request rejected by overload control (HTTP 429 equivalent).
+
+    ``retry_after_s`` is the controller's estimate of when capacity may
+    return (the predicted excess over the SLO); servers surface it as a
+    ``Retry-After`` hint.
+    """
+
+    def __init__(self, message: str, retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.retry_after_s = max(0.0, float(retry_after_s))
+
+
+@dataclasses.dataclass
+class OverloadConfig:
+    """Knobs for :class:`OverloadController`.
+
+    ``slo_ms`` — target admission latency (submit -> first token); None
+    disables latency-model shedding. ``max_queue`` — hard queue-depth
+    cap; None disables it. ``ewma_alpha`` — smoothing for the interval /
+    latency estimates (higher = faster reaction). ``hysteresis`` — the
+    fraction of the SLO the prediction must fall back under before
+    shedding stops.
+    """
+
+    slo_ms: Optional[float] = None
+    max_queue: Optional[int] = None
+    ewma_alpha: float = 0.3
+    hysteresis: float = 0.85
+
+    def validate(self) -> "OverloadConfig":
+        if self.slo_ms is not None and self.slo_ms <= 0:
+            raise ValueError(f"slo_ms must be > 0, got {self.slo_ms}")
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError(
+                f"max_queue must be >= 0, got {self.max_queue}")
+        if not 0 < self.ewma_alpha <= 1:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if not 0 < self.hysteresis <= 1:
+            raise ValueError("hysteresis must be in (0, 1]")
+        return self
+
+
+class OverloadController:
+    """Admission gate: predicts a new arrival's first-token latency and
+    sheds when the prediction (or a hard queue cap) says the SLO is
+    already lost. See the module docstring for the model."""
+
+    def __init__(self, cfg: OverloadConfig,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.cfg = cfg.validate()
+        self.clock = clock
+        self.ewma_interval: Optional[float] = None  # s between first tokens
+        self.ewma_latency: Optional[float] = None  # s submit -> first token
+        self._last_first_token: Optional[float] = None
+        self.shedding = False  # hysteresis state
+        self.shed_count = 0
+        self.admitted_count = 0
+
+    # -- measurement --------------------------------------------------------
+
+    def _ewma(self, prev: Optional[float], x: float) -> float:
+        a = self.cfg.ewma_alpha
+        return x if prev is None else (1 - a) * prev + a * x
+
+    def observe_first_token(self, latency_s: float) -> None:
+        """One request reached its first sampled token after
+        ``latency_s`` of admission latency. Updates both estimates."""
+        now = self.clock()
+        if self._last_first_token is not None:
+            self.ewma_interval = self._ewma(
+                self.ewma_interval, now - self._last_first_token)
+        self._last_first_token = now
+        self.ewma_latency = self._ewma(self.ewma_latency, latency_s)
+
+    # -- the gate -----------------------------------------------------------
+
+    def predicted_latency(self, queue_depth: int) -> Optional[float]:
+        """Predicted admission latency (s) for an arrival behind
+        ``queue_depth`` queued requests; None until first measurements."""
+        if self.ewma_latency is None:
+            return None
+        interval = self.ewma_interval or 0.0
+        return queue_depth * interval + self.ewma_latency
+
+    def admit(self, queue_depth: int) -> None:
+        """Gate one submission: returns on admit, raises ShedError on
+        shed. Called by the engine before the request is queued."""
+        cfg = self.cfg
+        if cfg.max_queue is not None and queue_depth >= cfg.max_queue:
+            self.shed_count += 1
+            interval = self.ewma_interval or 0.0
+            raise ShedError(
+                f"queue full ({queue_depth} >= max_queue={cfg.max_queue})",
+                retry_after_s=interval)
+        # the latency model only gates arrivals that would actually wait
+        # behind a queue: at depth 0 admission is imminent and the model
+        # has nothing but its (possibly stale, measured-under-load) EWMA
+        # floor to go on. Admitting unconditionally at depth 0 guarantees
+        # liveness — each admitted request produces a fresh first-token
+        # sample, so the estimates recover after a shed episode instead
+        # of latching shed forever on a stale floor.
+        if cfg.slo_ms is not None and queue_depth > 0:
+            slo = cfg.slo_ms / 1e3
+            predicted = self.predicted_latency(queue_depth)
+            if predicted is not None:
+                if self.shedding:
+                    if predicted < cfg.hysteresis * slo:
+                        self.shedding = False
+                elif predicted > slo:
+                    self.shedding = True
+                if self.shedding:
+                    self.shed_count += 1
+                    raise ShedError(
+                        f"predicted first-token latency "
+                        f"{predicted * 1e3:.0f}ms exceeds SLO "
+                        f"{cfg.slo_ms:.0f}ms at queue depth {queue_depth}",
+                        retry_after_s=predicted - slo)
+        self.admitted_count += 1
+
+    def stats(self) -> dict:
+        return {
+            "shed_count": self.shed_count,
+            "admitted_count": self.admitted_count,
+            "shedding": self.shedding,
+            "ewma_first_token_interval_s": self.ewma_interval,
+            "ewma_admission_latency_s": self.ewma_latency,
+        }

@@ -327,6 +327,74 @@ class PrefixCache:
                                       parent, None))
         return freed
 
+    # -- persistence ---------------------------------------------------------
+
+    def export_state(self) -> Dict:
+        """Portable structural snapshot of the tree (no page bytes).
+
+        Nodes are emitted in BFS order with a parent index (-1 = root),
+        so children always follow their parents and import can rebuild
+        in one pass. Page ids are *physical* ids in this engine's pool —
+        the engine pairs this with the pages' extracted bytes and remaps
+        ids on import (``page_map``). ``last_use`` clocks ride along so
+        LRU eviction order survives a restart.
+        """
+        nodes, partials = [], []
+        index = {id(self._root): -1}
+        bfs = list(self._root.children.values())
+        while bfs:
+            node = bfs.pop(0)
+            index[id(node)] = len(nodes)
+            nodes.append({"parent": index[id(node.parent)],
+                          "key": list(node.key), "page": int(node.page),
+                          "last_use": int(node.last_use)})
+            bfs.extend(node.children.values())
+        for nd in self._nodes_with_root():
+            for tail, (page, last_use) in nd.partial.items():
+                partials.append({"node": index[id(nd)],
+                                 "tail": list(tail), "page": int(page),
+                                 "last_use": int(last_use)})
+        return {"page_size": self.page_size, "nodes": nodes,
+                "partials": partials}
+
+    def import_state(self, state: Dict, page_map: Dict[int, int]) -> int:
+        """Rebuild the tree from :meth:`export_state` output.
+
+        ``page_map`` maps exported physical page ids to the freshly
+        allocated pages whose bytes the engine already restored. The
+        caller hands over exactly one pool reference per page (the
+        ``alloc`` reference) — that becomes the tree's reference, so the
+        ownership protocol after import is identical to a tree grown by
+        ``insert``. Must be called on an empty tree. Returns the node
+        count (full-page nodes + partial entries) imported.
+        """
+        if self._root.children or self._root.partial:
+            raise RuntimeError("import_state requires an empty prefix cache")
+        if state["page_size"] != self.page_size:
+            raise ValueError(
+                f"snapshot page_size {state['page_size']} != "
+                f"engine page_size {self.page_size}")
+        by_index = {-1: self._root}
+        for i, nd in enumerate(state["nodes"]):
+            parent = by_index[nd["parent"]]
+            key = tuple(int(t) for t in nd["key"])
+            node = _Node(key, page_map[int(nd["page"])], parent)
+            node.last_use = int(nd["last_use"])
+            parent.children[key] = node
+            by_index[i] = node
+        count = len(state["nodes"])
+        for ent in state["partials"]:
+            node = by_index[int(ent["node"])]
+            tail = tuple(int(t) for t in ent["tail"])
+            node.partial[tail] = [page_map[int(ent["page"])],
+                                  int(ent["last_use"])]
+            self.partial_inserts += 1
+            count += 1
+        clocks = [nd["last_use"] for nd in state["nodes"]] + \
+            [ent["last_use"] for ent in state["partials"]]
+        self._clock = max([self._clock, *clocks]) if clocks else self._clock
+        return count
+
     def stats(self) -> Dict[str, int]:
         return {
             "prefix_lookups": self.lookups,

@@ -1,0 +1,279 @@
+"""Stochastic sampling: per-slot counter-based RNG, temperature/top-p/
+top-k filtering, and lossless rejection-sampling speculative verification.
+
+Everything here is jit-friendly and batch-row independent, which is the
+whole design: the serving engine threads per-slot parameter vectors —
+temperature, top-p, top-k, seed, counter — through its *already jitted*
+decode/verify steps, so a batch mixing greedy and stochastic requests at
+different temperatures still samples in the same single device dispatch
+that computed its logits.
+
+RNG contract (the property the determinism tests pin down): every sampled
+token is a pure function of ``(seed, counter)`` where ``counter`` is the
+token's index in its own request's generated stream. Keys are derived
+counter-style — ``fold_in(fold_in(PRNGKey(seed), counter), salt)`` — never
+split from a shared stream, so a request's tokens do not depend on which
+slot it occupies, which neighbours share the batch, or how often it was
+preempted and restored. Same seed in, same stream out, under any churn.
+
+Filtering semantics (matching the common serving convention):
+
+  * ``temperature`` scales logits (``<= 0`` means greedy argmax — exact,
+    not a low-temperature limit);
+  * ``top_k`` keeps the k highest logits (0 disables); ties are broken by
+    stable sort order, so the kept set is deterministic;
+  * ``top_p`` keeps the smallest set of top-k survivors whose cumulative
+    probability reaches ``p`` (nucleus sampling), evaluated on the
+    temperature-scaled, top-k-masked distribution.
+
+The *filtered* distribution is the target distribution: speculative
+verification below is lossless with respect to it, i.e. speculative
+decoding at temperature > 0 emits tokens with exactly the probabilities
+plain filtered sampling would (see :func:`verify_rejection`).
+
+Speculative verification: the drafters in ``spec_decode`` are
+deterministic proposal functions, so each draft is a point-mass proposal
+q = delta(draft). Standard speculative rejection sampling (Leviathan et
+al.; Chen et al.) accepts a draft x with probability
+``min(1, p(x)/q(x))`` and on rejection resamples from the residual
+``norm(max(p - q, 0))``. With a point-mass q this reduces to: accept x
+with probability ``p(x)``; on rejection sample from ``p`` with x removed
+and renormalized. Summing the two branches gives back exactly ``p`` —
+the acceptance test and the residual correction cancel — which is the
+losslessness guarantee, and at temperature 0 (one-hot p) it degenerates
+to exact greedy prefix matching, bit-identical to the greedy-only
+verification this module replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold_in salts separating the independent uses of one (seed, counter)
+# position: the acceptance uniform and the residual/bonus resample must
+# not reuse the same bits
+_SALT_SAMPLE = 0x1
+_SALT_ACCEPT = 0x2
+_SALT_RESIDUAL = 0x3
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature <= 0`` selects exact greedy decoding (top_p/top_k are
+    then irrelevant). ``seed=None`` asks the engine to derive a
+    per-request seed from its base seed and the request id — distinct
+    requests then draw distinct streams; pass an explicit seed to make a
+    request's stream reproducible across engines and restarts.
+    """
+
+    temperature: float = 0.0
+    top_p: float = 1.0
+    top_k: int = 0  # 0 = disabled
+    seed: Optional[int] = None
+
+    def validate(self) -> "SamplingParams":
+        if not np.isfinite(self.temperature) or self.temperature < 0:
+            raise ValueError(
+                f"temperature must be finite and >= 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.seed is not None and not isinstance(
+                self.seed, (int, np.integer)):
+            raise ValueError(f"seed must be an int, got {type(self.seed)}")
+        return self
+
+
+def resolve_seed(params: SamplingParams, base_seed: int,
+                 request_id: int) -> int:
+    """The uint32 seed a request actually samples with.
+
+    An explicit per-request seed is used verbatim (reproducible streams);
+    otherwise one is derived from the engine's base seed and the request
+    id with a Weyl/Knuth mix so concurrent requests draw independent
+    streams by default.
+    """
+    if params.seed is not None:
+        return int(params.seed) & 0xFFFFFFFF
+    return (int(base_seed) * 0x9E3779B1 + int(request_id) * 0x85EBCA77
+            + 0x165667B1) & 0xFFFFFFFF
+
+
+def _base_keys(seeds, counters):
+    """(N,) seeds x (N,) counters -> (N,) counter-derived PRNG keys."""
+    def one(seed, ctr):
+        return jax.random.fold_in(
+            jax.random.PRNGKey(seed.astype(jnp.uint32)), ctr)
+    return jax.vmap(one)(seeds, counters)
+
+
+def filter_logits(logits, temps, top_ps, top_ks):
+    """Temperature + top-k + top-p filtering, batch-row independent.
+
+    logits (N, V) any float dtype; temps/top_ps (N,) f32, top_ks (N,)
+    i32. Returns (N, V) f32 logits with everything outside the kept set
+    at -inf. Greedy rows (temp <= 0) get temperature 1 applied — their
+    filtered row is computed but callers must (and do) argmax the raw
+    logits instead.
+    """
+    x = logits.astype(jnp.float32)
+    safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+    x = x / safe_t
+    # stable double-argsort ranks: rank 0 = largest logit; ties resolve
+    # by index order, so the kept set is deterministic
+    order = jnp.argsort(-x, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    keep_k = (top_ks[:, None] <= 0) | (ranks < top_ks[:, None])
+    x = jnp.where(keep_k, x, -jnp.inf)
+    # nucleus over the top-k survivors: keep while the *exclusive* prefix
+    # mass is still below p (always keeps the top-1 token)
+    probs = jax.nn.softmax(x, axis=-1)
+    sorted_probs = jnp.take_along_axis(probs, order, axis=-1)
+    excl = jnp.cumsum(sorted_probs, axis=-1) - sorted_probs
+    keep_sorted = excl < top_ps[:, None]
+    keep_p = jnp.take_along_axis(keep_sorted, ranks, axis=-1)
+    return jnp.where(keep_k & keep_p, x, -jnp.inf)
+
+
+def sample(logits, temps, top_ps, top_ks, seeds, counters):
+    """One token per batch row, one dispatch, mixed greedy/stochastic.
+
+    logits (N, V); per-row parameter vectors as in :func:`filter_logits`
+    plus seeds (N,) uint32-ish and counters (N,) i32 (the row's token
+    index within its own request stream). Greedy rows (temp <= 0) return
+    the exact f32 argmax — bit-identical to the pre-sampling engine.
+    """
+    lf32 = logits.astype(jnp.float32)
+    greedy = temps <= 0
+    filtered = filter_logits(lf32, temps, top_ps, top_ks)
+    keys = _base_keys(seeds, counters)
+    sample_keys = jax.vmap(lambda k: jax.random.fold_in(k, _SALT_SAMPLE))(
+        keys)
+    drawn = jax.vmap(jax.random.categorical)(sample_keys, filtered)
+    argmaxes = jnp.argmax(lf32, axis=-1)
+    return jnp.where(greedy, argmaxes, drawn).astype(jnp.int32)
+
+
+def _remove_and_renorm(probs, token, remove):
+    """Residual distribution: zero ``token``'s mass (when ``remove``) and
+    renormalize; degenerate rows fall back to their argmax one-hot."""
+    v = probs.shape[-1]
+    hot = jax.nn.one_hot(token, v, dtype=probs.dtype)
+    resid = jnp.where(remove[:, None], probs * (1.0 - hot), probs)
+    total = resid.sum(axis=-1, keepdims=True)
+    # p(draft) ~ 1.0 yet rejected by float roundoff: residual mass ~ 0;
+    # fall back to the row argmax of the unmodified distribution
+    fallback = jax.nn.one_hot(jnp.argmax(probs, axis=-1), v,
+                              dtype=probs.dtype)
+    return jnp.where(total > 0, resid / jnp.maximum(total, 1e-38), fallback)
+
+
+def verify_rejection(logits, drafts, temps, top_ps, top_ks, seeds,
+                     counters):
+    """Speculative acceptance for one batched verify step, in-dispatch.
+
+    logits (N, K+1, V) — position j's logits are the model's next-token
+    distribution after feeding token j (j = 0 is the pending sampled
+    token, j >= 1 the drafts). drafts (N, K). Per-row sampling parameter
+    vectors as in :func:`sample`; ``counters`` is each row's stream index
+    of the *first* token this step may emit.
+
+    Returns ``(num_emitted (N,), emitted (N, K+1))`` int32: row n emits
+    ``emitted[n, :num_emitted[n]]`` (1 <= num_emitted <= K+1; entries past
+    the count are garbage).
+
+    Greedy rows (temp <= 0) use exact argmax prefix matching — identical
+    to ``spec_decode.greedy_accept`` and therefore to plain greedy
+    decode. Stochastic rows run point-mass rejection sampling against
+    the filtered target distribution p̃ at each position: accept draft
+    ``x_j`` with probability ``p̃_j(x_j)`` (uniform drawn from the
+    (seed, counter + j) key); at the first rejection, emit a sample from
+    p̃_j with ``x_j`` removed and renormalized; if all K drafts are
+    accepted, emit a bonus sample from p̃_K. Each emitted position
+    consumes the (seed, counter + j) key exactly once per salt, so the
+    emitted stream is deterministic per (seed, counter) like plain
+    sampling — and marginally, every emitted token is distributed
+    exactly as plain filtered sampling at that stream position
+    (losslessness; see the module docstring for the algebra).
+    """
+    n, t, v = logits.shape
+    k = t - 1
+    lf32 = logits.astype(jnp.float32)
+    targets = jnp.argmax(lf32, axis=-1)  # (N, T) greedy targets
+    greedy = temps <= 0
+
+    rep = lambda a: jnp.repeat(a, t)
+    filtered = filter_logits(
+        lf32.reshape(n * t, v), rep(temps), rep(top_ps),
+        rep(top_ks)).reshape(n, t, v)
+    probs = jax.nn.softmax(filtered, axis=-1)
+
+    base = _base_keys(seeds, counters)  # (N,) keys at stream position 0
+
+    # acceptance uniforms: u[n, j] from (seed_n, counter_n + j, ACCEPT)
+    def accept_u(key, j):
+        return jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(key, j), _SALT_ACCEPT))
+    u = jax.vmap(lambda key: jax.vmap(lambda j: accept_u(key, j))(
+        jnp.arange(k)))(base)  # (N, K)
+
+    p_draft = jnp.take_along_axis(
+        probs[:, :k], drafts[..., None], axis=-1)[..., 0]  # (N, K)
+    accept_sto = u < p_draft
+    accept_grd = drafts == targets[:, :k]
+    accept = jnp.where(greedy[:, None], accept_grd, accept_sto)
+    acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1),
+                  axis=1)  # (N,) accepted prefix length in [0, K]
+
+    # the final emitted token: residual sample at the first rejection,
+    # bonus sample after K acceptances (no removal), argmax when greedy
+    probs_a = jnp.take_along_axis(
+        probs, acc[:, None, None].astype(jnp.int32), axis=1)[:, 0]  # (N, V)
+    draft_a = jnp.take_along_axis(
+        jnp.concatenate([drafts, jnp.zeros((n, 1), drafts.dtype)], axis=1),
+        acc[:, None].astype(jnp.int32), axis=1)[:, 0]
+    resid = _remove_and_renorm(probs_a, draft_a, acc < k)
+    last_keys = jax.vmap(
+        lambda key, j: jax.random.fold_in(jax.random.fold_in(key, j),
+                                          _SALT_RESIDUAL))(base, acc)
+    drawn = jax.vmap(jax.random.categorical)(
+        last_keys, jnp.log(jnp.maximum(resid, 1e-38))
+        + jnp.where(resid > 0, 0.0, -jnp.inf))
+    target_a = jnp.take_along_axis(
+        targets, acc[:, None].astype(jnp.int32), axis=1)[:, 0]
+    final = jnp.where(greedy, target_a, drawn).astype(jnp.int32)
+
+    cols = jnp.arange(t)[None, :]
+    padded = jnp.concatenate(
+        [drafts.astype(jnp.int32), jnp.zeros((n, 1), jnp.int32)], axis=1)
+    # greedy rows emit the targets themselves (== drafts on the accepted
+    # prefix, by construction); stochastic rows emit the accepted drafts
+    emitted = jnp.where(cols < acc[:, None],
+                        jnp.where(greedy[:, None], targets[:, :t].astype(
+                            jnp.int32), padded),
+                        0)
+    emitted = emitted.at[jnp.arange(n), acc].set(final)
+    return (acc + 1).astype(jnp.int32), emitted
+
+
+def slot_arrays(max_slots: int):
+    """Neutral per-slot parameter arrays (greedy, seed 0, counter 0).
+
+    The engine fills in active slots' values and leaves padding rows
+    greedy — their argmax output is computed and discarded, exactly like
+    padding rows' logits.
+    """
+    return {
+        "temps": np.zeros((max_slots,), np.float32),
+        "top_ps": np.ones((max_slots,), np.float32),
+        "top_ks": np.zeros((max_slots,), np.int32),
+        "seeds": np.zeros((max_slots,), np.uint32),
+        "counters": np.zeros((max_slots,), np.int32),
+    }

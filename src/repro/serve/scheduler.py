@@ -60,7 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -84,6 +84,15 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
+    # per-request sampling: a serve.sampling.SamplingParams (None = the
+    # engine's defaults) plus the resolved uint32 RNG seed — carried on
+    # the request so its token stream survives preemption and swap
+    # (sampling keys are (seed, token index), never slot or step)
+    sampling: Optional[object] = None
+    seed: int = 0
+    # cancel(): the request was abandoned by its client; its pages and
+    # slot are already released and it will never reach ``finished``
+    cancelled: bool = False
     # preemption snapshot: (cache_snapshot, owned_idx, pages, resident
     # tokens, cached_tokens, prefill_pos). ``owned_idx`` are the
     # page-table positions that were exclusively owned (extracted +
@@ -180,10 +189,16 @@ class Scheduler:
         self.cow_copies = 0
         self.deferred_admissions = 0  # chunked: waited for a prefix match
         self.deferral_fallbacks = 0  # deferral bound hit: went independent
+        self.cancellations = 0
+        # streaming hook: called as on_token(request, token, finished)
+        # after every recorded token — the async server's per-token
+        # delivery path (None = no streaming consumer)
+        self.on_token: Optional[Callable] = None
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               sampling=None, seed: int = 0) -> int:
         """Queue one request. Invalid inputs fail here, with a clear
         ValueError, not steps later inside a jitted prefill."""
         prompt = np.asarray(prompt)
@@ -215,10 +230,49 @@ class Scheduler:
                 f"exceeds max_seq={self.max_seq}: a verify step near the "
                 f"end of this request would overflow its page table "
                 f"(shrink num_draft_tokens or raise max_seq)")
-        req = Request(self._next_id, prompt, int(max_new_tokens))
+        req = Request(self._next_id, prompt, int(max_new_tokens),
+                      sampling=sampling, seed=int(seed))
         self._next_id += 1
         self.queue.append(req)
         return req.id
+
+    def cancel(self, request_id: int) -> bool:
+        """Abandon a request wherever it currently lives; True if found.
+
+        Active (decoding, mid-prefill, or mid-verify — cancel runs on the
+        host between steps, so a verify window is never half-landed):
+        drop every page reference in one ``pool.free`` — prefix-cache
+        retains and exclusively-owned pages alike; pages the radix tree
+        still references stay resident as cache, the rest return to the
+        free list — and release the slot the same step. Queued fresh:
+        just dequeue (no resources bound yet). Queued swapped-out: the
+        preemption already freed the exclusively-owned pages; free the
+        *shared* references the swap tuple still pins and drop the
+        snapshot. Finished/unknown ids return False (cancel raced
+        completion — the tokens already streamed, nothing to release).
+        """
+        for seq in self.active():
+            if seq.req.id == request_id:
+                self.pool.free(seq.pages)
+                self.slots[seq.slot] = None
+                seq.req.cancelled = True
+                self.cancellations += 1
+                return True
+        for qi, req in enumerate(self.queue):
+            if req.id != request_id:
+                continue
+            if req.swap is not None:
+                _snapshot, owned_idx, pages, *_ = req.swap
+                owned = set(owned_idx)
+                shared = [p for i, p in enumerate(pages) if i not in owned]
+                if shared:
+                    self.pool.free(shared)
+                req.swap = None
+            del self.queue[qi]
+            req.cancelled = True
+            self.cancellations += 1
+            return True
+        return False
 
     # -- admission / eviction ----------------------------------------------
 
@@ -422,12 +476,15 @@ class Scheduler:
         True if the sequence is still active.
         """
         seq.req.generated.append(int(token))
-        if seq.req.done or (eos_id is not None and int(token) == eos_id):
+        finished = seq.req.done or (eos_id is not None
+                                    and int(token) == eos_id)
+        if finished:
             self.pool.free(seq.pages)
             self.slots[seq.slot] = None
             self.finished.append(seq.req)
-            return False
-        return True
+        if self.on_token is not None:
+            self.on_token(seq.req, int(token), finished)
+        return not finished
 
     # -- per-step batch assembly -------------------------------------------
 

@@ -1,0 +1,299 @@
+"""Stochastic sampling: filtering semantics, per-slot RNG determinism,
+and losslessness of rejection-sampling speculative verification.
+
+The statistical cases use fixed seeds, so they are deterministic — a
+chi-square "test" here is a frozen numerical check against the exact
+filtered target distribution, with Wilson-Hilferty critical values (no
+scipy in the CI image).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXFP8
+from repro.nn import BlockDef, ModelConfig, model
+from repro.serve import (ContinuousBatchingEngine, SamplingParams,
+                         ServeConfig)
+from repro.serve import sampling as S
+
+
+def _chi2_crit(df, z=3.0902):
+    """Wilson-Hilferty chi-square critical value (alpha ~= 1e-3)."""
+    return df * (1 - 2 / (9 * df) + z * np.sqrt(2 / (9 * df))) ** 3
+
+
+def _vec(n, temps=1.0, top_ps=1.0, top_ks=0, seeds=0, counters=0):
+    def arr(x, dt):
+        return jnp.full((n,), x, dt) if np.isscalar(x) else jnp.asarray(
+            x, dt)
+    return (arr(temps, jnp.float32), arr(top_ps, jnp.float32),
+            arr(top_ks, jnp.int32), arr(seeds, jnp.uint32),
+            arr(counters, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    dict(temperature=-0.1), dict(temperature=float("nan")),
+    dict(top_p=0.0), dict(top_p=1.5), dict(top_k=-1),
+    dict(seed="abc")])
+def test_sampling_params_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        SamplingParams(**bad).validate()
+
+
+def test_resolve_seed_explicit_and_derived():
+    assert S.resolve_seed(SamplingParams(seed=42), 0, 7) == 42
+    a = S.resolve_seed(SamplingParams(), 0, 1)
+    b = S.resolve_seed(SamplingParams(), 0, 2)
+    assert a != b  # distinct requests draw distinct streams by default
+    assert 0 <= a < 2 ** 32
+
+
+# ---------------------------------------------------------------------------
+# filtering semantics (mass properties)
+# ---------------------------------------------------------------------------
+
+
+def test_top_k_keeps_exactly_k_largest():
+    logits = jnp.asarray([[3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0, 3.5]])
+    t, p, k, _, _ = _vec(1, top_ks=3)
+    out = np.asarray(S.filter_logits(logits, t, p, k))
+    keep = np.isfinite(out[0])
+    assert keep.sum() == 3
+    assert set(np.flatnonzero(keep)) == {4, 6, 2}  # the 3 largest
+
+
+def test_top_p_keeps_smallest_covering_prefix():
+    probs = np.asarray([0.4, 0.3, 0.2, 0.1])
+    logits = jnp.log(jnp.asarray(probs))[None]
+    t, p, k, _, _ = _vec(1, top_ps=0.6)
+    out = np.asarray(S.filter_logits(logits, t, p, k))
+    keep = np.isfinite(out[0])
+    # {0.4} covers only 0.4 < 0.6, {0.4, 0.3} reaches 0.7 >= 0.6
+    assert set(np.flatnonzero(keep)) == {0, 1}
+    # renormalized mass of the kept set is the filtered distribution
+    pt = np.asarray(jax.nn.softmax(jnp.asarray(out[0])))
+    np.testing.assert_allclose(pt[:2], probs[:2] / probs[:2].sum(),
+                               rtol=1e-6)
+    assert pt[2:].sum() == 0
+
+
+def test_no_filter_is_noop_and_temperature_scales():
+    logits = jnp.asarray([[2.0, 0.0, -1.0]])
+    t, p, k, _, _ = _vec(1, temps=2.0)
+    out = np.asarray(S.filter_logits(logits, t, p, k))
+    np.testing.assert_allclose(out, [[1.0, 0.0, -0.5]], rtol=1e-6)
+
+
+def test_greedy_rows_are_exact_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(16, 33)).astype(np.float32))
+    t, p, k, s, c = _vec(16, temps=0.0, seeds=np.arange(16))
+    toks = np.asarray(S.sample(logits, t, p, k, s, c))
+    np.testing.assert_array_equal(toks, np.argmax(np.asarray(logits), -1))
+
+
+# ---------------------------------------------------------------------------
+# per-slot RNG determinism (module level)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_is_pure_function_of_seed_and_counter():
+    """The same (seed, counter) row must sample the same token no matter
+    where it sits in a batch or who its neighbours are."""
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=(1, 17)).astype(np.float32)
+    noise = rng.normal(size=(7, 17)).astype(np.float32)
+
+    def tok_at(batch_pos, n, seed, ctr):
+        logits = np.concatenate([noise[:batch_pos], row,
+                                 noise[batch_pos:n - 1]], axis=0)
+        seeds = np.arange(100, 100 + n)
+        seeds[batch_pos] = seed
+        ctrs = np.full(n, 9)
+        ctrs[batch_pos] = ctr
+        t, p, k, s, c = _vec(n, temps=0.8, top_ps=0.9, seeds=seeds,
+                             counters=ctrs)
+        return int(np.asarray(S.sample(jnp.asarray(logits), t, p, k, s,
+                                       c))[batch_pos])
+
+    want = tok_at(0, 1, seed=7, ctr=3)
+    assert tok_at(0, 4, seed=7, ctr=3) == want
+    assert tok_at(2, 5, seed=7, ctr=3) == want
+    assert tok_at(7, 8, seed=7, ctr=3) == want
+    # the counter advances the stream: over many counters the same seed
+    # must not be stuck on one token
+    toks = {tok_at(0, 1, seed=7, ctr=i) for i in range(32)}
+    assert len(toks) > 1
+
+
+# ---------------------------------------------------------------------------
+# distribution correctness: plain sampling and rejection verification
+# both match the exact filtered target distribution (chi-square GOF)
+# ---------------------------------------------------------------------------
+
+_PROBS = np.asarray([0.30, 0.22, 0.16, 0.12, 0.08, 0.06, 0.04, 0.02])
+
+
+def _target_dist(temps, top_ps, top_ks):
+    logits = jnp.log(jnp.asarray(_PROBS, jnp.float32))[None]
+    t, p, k, _, _ = _vec(1, temps=temps, top_ps=top_ps, top_ks=top_ks)
+    return np.asarray(jax.nn.softmax(S.filter_logits(logits, t, p, k)[0]))
+
+
+def _chisq_gof(counts, expected_probs, n):
+    support = expected_probs > 0
+    assert counts[~support].sum() == 0, "mass outside the filtered support"
+    exp = expected_probs[support] * n
+    stat = float((((counts[support] - exp) ** 2) / exp).sum())
+    df = int(support.sum()) - 1
+    return stat, _chi2_crit(df)
+
+
+def test_sample_matches_filtered_distribution():
+    n = 4000
+    temps, top_ps, top_ks = 0.9, 0.92, 6
+    logits = jnp.tile(jnp.log(jnp.asarray(_PROBS, jnp.float32)), (n, 1))
+    t, p, k, s, c = _vec(n, temps=temps, top_ps=top_ps, top_ks=top_ks,
+                         seeds=np.arange(n))
+    toks = np.asarray(S.sample(logits, t, p, k, s, c))
+    counts = np.bincount(toks, minlength=len(_PROBS)).astype(np.float64)
+    stat, crit = _chisq_gof(counts, _target_dist(temps, top_ps, top_ks), n)
+    assert stat < crit, (stat, crit)
+
+
+def test_rejection_verification_is_lossless():
+    """Marginal of the first emitted token under point-mass rejection
+    sampling == plain filtered sampling, for ANY draft choice — including
+    drafts outside the filtered support (always rejected) and the modal
+    draft (usually accepted)."""
+    n = 4000
+    temps, top_ps, top_ks = 0.9, 0.92, 6
+    v = len(_PROBS)
+    row = np.log(_PROBS, dtype=np.float32)
+    logits = jnp.asarray(np.tile(row, (n, 2, 1)))  # K=1: draft + bonus
+    drafts = jnp.asarray((np.arange(n) % v).reshape(n, 1), jnp.int32)
+    t, p, k, s, c = _vec(n, temps=temps, top_ps=top_ps, top_ks=top_ks,
+                         seeds=np.arange(n))
+    n_emit, emitted = S.verify_rejection(logits, drafts, t, p, k, s, c)
+    n_emit, emitted = np.asarray(n_emit), np.asarray(emitted)
+    assert set(np.unique(n_emit)) == {1, 2}  # both branches exercised
+    first = emitted[:, 0]
+    counts = np.bincount(first, minlength=v).astype(np.float64)
+    stat, crit = _chisq_gof(counts, _target_dist(temps, top_ps, top_ks), n)
+    assert stat < crit, (stat, crit)
+    # accepted rows emitted their draft verbatim
+    acc = n_emit == 2
+    np.testing.assert_array_equal(first[acc], np.asarray(drafts)[acc, 0])
+    # rejected rows never emit the rejected draft (removed and renormed)
+    assert not np.any(first[~acc] == np.asarray(drafts)[~acc, 0])
+
+
+def test_rejection_greedy_rows_are_exact_prefix_match():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(8, 4, 11)).astype(np.float32))
+    targets = np.argmax(np.asarray(logits), -1)
+    drafts = targets[:, :3].copy()
+    drafts[::2, 1] ^= 1  # break the match at position 1 on even rows
+    t, p, k, s, c = _vec(8, temps=0.0, seeds=np.arange(8))
+    n_emit, emitted = S.verify_rejection(
+        logits, jnp.asarray(drafts), t, p, k, s, c)
+    n_emit, emitted = np.asarray(n_emit), np.asarray(emitted)
+    np.testing.assert_array_equal(n_emit[::2], 2)  # accept 1 + correction
+    np.testing.assert_array_equal(n_emit[1::2], 4)  # all + bonus
+    for i in range(8):
+        np.testing.assert_array_equal(emitted[i, :n_emit[i]],
+                                      targets[i, :n_emit[i]])
+
+
+# ---------------------------------------------------------------------------
+# engine level: determinism under batch composition, churn, preemption;
+# spec decode at temperature > 0
+# ---------------------------------------------------------------------------
+
+
+def _cfg():
+    return ModelConfig(
+        name="t", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=True))
+
+
+@pytest.fixture(scope="module")
+def model_and_cfg():
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _run(params, cfg, reqs, **sc_kwargs):
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(**sc_kwargs))
+    ids = [eng.submit(p, m, sampling_params=sp) for p, m, sp in reqs]
+    out = eng.run()
+    return eng, {i: out[i] for i in ids}
+
+
+def test_engine_stream_independent_of_batch_composition(model_and_cfg):
+    """Same request (prompt, seed): identical sampled tokens alone, in a
+    mixed batch, and under a pool tight enough to force swap preemption."""
+    params, cfg = model_and_cfg
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 128, (4,)).astype(np.int32)
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=123)
+    others = [(rng.integers(0, 128, (s,)).astype(np.int32), m,
+               SamplingParams(temperature=1.2, seed=i))
+              for i, (s, m) in enumerate([(4, 14), (7, 5), (3, 8)])]
+
+    _, alone = _run(params, cfg, [(prompt, 14, sp)],
+                    max_seq=20, max_slots=2, page_size=4)
+    want = alone[0]
+    _, mixed = _run(params, cfg, [(prompt, 14, sp)] + others[:2],
+                    max_seq=20, max_slots=3, page_size=4)
+    np.testing.assert_array_equal(mixed[0], want)
+    eng, churn = _run(params, cfg, [(prompt, 14, sp)] + others,
+                      max_seq=20, max_slots=2, page_size=4, num_pages=7)
+    assert eng.scheduler.preemptions >= 1, "pool sizing must force a swap"
+    np.testing.assert_array_equal(churn[0], want)
+
+
+def test_engine_same_seed_reproducible_across_engines(model_and_cfg):
+    params, cfg = model_and_cfg
+    prompt = np.arange(1, 9, dtype=np.int32)
+    sp = SamplingParams(temperature=1.0, top_k=40, seed=7)
+    _, a = _run(params, cfg, [(prompt, 10, sp)], max_seq=24, max_slots=2,
+                page_size=8)
+    _, b = _run(params, cfg, [(prompt, 10, sp)], max_seq=24, max_slots=2,
+                page_size=8)
+    np.testing.assert_array_equal(a[0], b[0])
+    # a different seed must (for this prompt) give a different stream
+    _, d = _run(params, cfg,
+                [(prompt, 10, SamplingParams(temperature=1.0, top_k=40,
+                                             seed=8))],
+                max_seq=24, max_slots=2, page_size=8)
+    assert not np.array_equal(a[0], d[0])
+
+
+def test_spec_decode_runs_sampled_and_is_deterministic(model_and_cfg):
+    """Speculative decoding at temperature > 0: the greedy-only
+    restriction is gone, the engine emits the full token budget, and the
+    (seed, counter) contract holds across engine instances."""
+    params, cfg = model_and_cfg
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, 128, (6,)).astype(np.int32), 12,
+             SamplingParams(temperature=0.8, top_p=0.95, seed=i))
+            for i in range(3)]
+    kw = dict(max_seq=32, max_slots=3, page_size=8, spec_decode=True,
+              num_draft_tokens=3)
+    eng1, a = _run(params, cfg, reqs, **kw)
+    _, b = _run(params, cfg, reqs, **kw)
+    for i in range(3):
+        assert a[i].shape[0] == reqs[i][0].shape[0] + 12
+        np.testing.assert_array_equal(a[i], b[i])
+    assert eng1.cache_stats()["spec_steps"] >= 1

@@ -1,0 +1,450 @@
+"""Async serving front end: overload control, SSE streaming, cancel
+semantics, and prefix-cache persistence.
+
+The HTTP/SSE cases run a real ``ServeHTTPServer`` on an ephemeral port
+inside ``asyncio.run`` (stdlib only — no pytest-asyncio in the CI
+image). Cancel and persistence are exercised at the engine level where
+the page/refcount invariants can be asserted directly.
+"""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXFP8
+from repro.nn import BlockDef, ModelConfig, model
+from repro.serve import (AsyncServeEngine, ContinuousBatchingEngine,
+                         DrainingError, OverloadConfig, OverloadController,
+                         SamplingParams, ServeConfig, ServeHTTPServer,
+                         ShedError, TierPolicy)
+from repro.serve.server import sse_generate
+
+
+def _cfg():
+    return ModelConfig(
+        name="t", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=True))
+
+
+@pytest.fixture(scope="module")
+def model_and_cfg():
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _engine(params, cfg, **kw):
+    args = dict(max_seq=24, max_slots=2, page_size=4)
+    args.update(kw)
+    return ContinuousBatchingEngine(params, cfg, ServeConfig(**args))
+
+
+def _tree_pages(eng):
+    return len(eng.scheduler.prefix.pages_held)
+
+
+# ---------------------------------------------------------------------------
+# overload controller (pure host logic, injected clock)
+# ---------------------------------------------------------------------------
+
+
+def test_overload_predicts_sheds_and_recovers():
+    now = [0.0]
+    ctl = OverloadController(OverloadConfig(slo_ms=100),
+                             clock=lambda: now[0])
+    # no measurements yet: everything is admitted
+    ctl.admit(50)
+    # two first tokens 10ms apart, each 20ms after its submit
+    ctl.observe_first_token(0.02)
+    now[0] += 0.01
+    ctl.observe_first_token(0.02)
+    assert abs(ctl.predicted_latency(5) - (5 * 0.01 + 0.02)) < 1e-9
+    ctl.admit(8)  # predicted 100ms == SLO, not over -> admit
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(9)  # 110ms > SLO
+    assert ei.value.retry_after_s > 0
+    assert ctl.shedding
+    # hysteresis: 100ms is back under the SLO but not under 85ms
+    with pytest.raises(ShedError):
+        ctl.admit(8)
+    # an empty queue always admits (liveness: estimates can refresh)
+    ctl.admit(0)
+    assert ctl.shedding  # depth-0 admit does not flip the state
+    ctl.admit(6)  # 80ms < 85ms -> shedding ends
+    assert not ctl.shedding
+    stats = ctl.stats()
+    assert stats["shed_count"] == 2 and stats["admitted_count"] == 4
+
+
+def test_overload_max_queue_is_a_hard_cap():
+    ctl = OverloadController(OverloadConfig(max_queue=2))
+    ctl.admit(0)
+    ctl.admit(1)
+    with pytest.raises(ShedError):
+        ctl.admit(2)
+
+
+def test_overload_config_validation():
+    for bad in (dict(slo_ms=0), dict(max_queue=-1), dict(ewma_alpha=0),
+                dict(hysteresis=1.5)):
+        with pytest.raises(ValueError):
+            OverloadConfig(**bad).validate()
+    assert ShedError("x", retry_after_s=-1.0).retry_after_s == 0.0
+
+
+def test_engine_submit_sheds_and_counts(model_and_cfg):
+    params, cfg = model_and_cfg
+    eng = _engine(params, cfg, max_queue=1)
+    eng.submit(np.arange(1, 5, dtype=np.int32), 2)
+    with pytest.raises(ShedError):
+        eng.submit(np.arange(1, 5, dtype=np.int32), 2)
+    assert eng.cache_stats()["shed_count"] == 1
+    eng.run()  # the admitted request still completes
+
+
+# ---------------------------------------------------------------------------
+# HTTP/SSE end to end
+# ---------------------------------------------------------------------------
+
+
+async def _http(port, method, path, body=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    data = json.dumps(body or {}).encode()
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: x\r\n"
+                  f"Content-Length: {len(data)}\r\n\r\n").encode() + data)
+    await writer.drain()
+    status = (await reader.readline()).decode()
+    clen = 0
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = line.decode().partition(":")
+        if name.strip().lower() == "content-length":
+            clen = int(value)
+    payload = json.loads(await reader.readexactly(clen)) if clen else {}
+    writer.close()
+    await writer.wait_closed()
+    return status, payload
+
+
+def test_sse_streaming_end_to_end(model_and_cfg):
+    """Streamed greedy tokens == direct engine output; same-seed sampled
+    streams are identical across concurrent connections; health route
+    answers; the final SSE event carries the full token list."""
+    params, cfg = model_and_cfg
+    prompt = list(range(1, 9))
+
+    async def go():
+        eng = _engine(params, cfg, max_slots=4, max_seq=32, page_size=8)
+        aeng = AsyncServeEngine(eng)
+        srv = ServeHTTPServer(aeng, port=0)
+        await srv.start()
+
+        async def client(payload):
+            toks, final = [], None
+            async for ev in sse_generate("127.0.0.1", srv.port, payload):
+                if "token" in ev:
+                    toks.append(ev["token"])
+                if ev.get("done"):
+                    final = ev
+            return toks, final
+
+        (g, gf), (s1, _), (s2, _) = await asyncio.gather(
+            client({"prompt": prompt, "max_new_tokens": 6}),
+            client({"prompt": prompt, "max_new_tokens": 6,
+                    "temperature": 0.8, "seed": 5}),
+            client({"prompt": prompt, "max_new_tokens": 6,
+                    "temperature": 0.8, "seed": 5}))
+        status, health = await _http(srv.port, "GET", "/v1/health")
+        await srv.stop()
+        return g, gf, s1, s2, status, health
+
+    g, gf, s1, s2, status, health = asyncio.run(go())
+    assert len(g) == 6 and gf["tokens"] == g
+    assert s1 == s2 and len(s1) == 6
+    assert "200" in status and "queue_depth" in health
+
+    eng = _engine(params, cfg, max_slots=4, max_seq=32, page_size=8)
+    rid = eng.submit(np.asarray(prompt, np.int32), 6)
+    direct = eng.run()[rid]
+    assert list(direct[len(prompt):]) == g
+
+
+def test_sse_disconnect_cancels_and_frees(model_and_cfg):
+    params, cfg = model_and_cfg
+
+    async def go():
+        eng = _engine(params, cfg, max_slots=2, max_seq=64, page_size=8)
+        aeng = AsyncServeEngine(eng)
+        srv = ServeHTTPServer(aeng, port=0)
+        await srv.start()
+        body = json.dumps({"prompt": list(range(1, 9)),
+                           "max_new_tokens": 50}).encode()
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       srv.port)
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        for _ in range(8):  # status + headers + a few token events
+            await reader.readline()
+        writer.close()  # hang up mid-stream
+        await writer.wait_closed()
+        await aeng.drain()  # engine must reach idle, not decode 50 tokens
+        await srv.stop()
+        return eng
+
+    eng = asyncio.run(go())
+    assert eng.scheduler.cancellations == 1
+    assert all(s is None for s in eng.scheduler.slots)
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+
+
+def test_http_shed_429_and_drain_503(model_and_cfg):
+    params, cfg = model_and_cfg
+
+    async def go():
+        eng = _engine(params, cfg, max_queue=0)
+        aeng = AsyncServeEngine(eng)
+        srv = ServeHTTPServer(aeng, port=0)
+        await srv.start()
+        shed_msg = None
+        try:
+            async for _ in sse_generate("127.0.0.1", srv.port, {
+                    "prompt": [1, 2, 3], "max_new_tokens": 2}):
+                pass
+        except RuntimeError as e:
+            shed_msg = str(e)
+        _, drained = await _http(srv.port, "POST", "/v1/drain")
+        drain_msg = None
+        try:
+            async for _ in sse_generate("127.0.0.1", srv.port, {
+                    "prompt": [1, 2, 3], "max_new_tokens": 2}):
+                pass
+        except RuntimeError as e:
+            drain_msg = str(e)
+        with pytest.raises(DrainingError):
+            aeng.submit([1, 2, 3], 2)
+        await srv.stop()
+        return shed_msg, drained, drain_msg
+
+    shed_msg, drained, drain_msg = asyncio.run(go())
+    assert "429" in shed_msg and "Retry-After" in shed_msg
+    assert drained == {"drained": True}
+    assert "503" in drain_msg
+
+
+# ---------------------------------------------------------------------------
+# cancel semantics (engine level)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_unknown_finished_and_queued(model_and_cfg):
+    params, cfg = model_and_cfg
+    eng = _engine(params, cfg)
+    assert not eng.cancel(99)
+    p = np.arange(1, 5, dtype=np.int32)
+    ids = [eng.submit(p + i, 3) for i in range(3)]
+    assert eng.cancel(ids[1])  # still queued: just dequeued
+    assert len(eng.scheduler.queue) == 2
+    out = eng.run()
+    assert set(out) == {ids[0], ids[2]}
+    assert not eng.cancel(ids[0])  # finished: nothing to cancel
+    assert eng.scheduler.cancellations == 1
+
+
+def test_cancel_active_mid_decode_frees_pages(model_and_cfg):
+    params, cfg = model_and_cfg
+    eng = _engine(params, cfg, max_seq=64, page_size=8)
+    rid = eng.submit(np.arange(1, 9, dtype=np.int32), 40)
+    for _ in range(3):  # prefill + a couple of decode steps
+        eng.step()
+    assert any(s is not None for s in eng.scheduler.slots)
+    assert eng.cancel(rid)
+    assert all(s is None for s in eng.scheduler.slots)
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+    assert not eng.scheduler.has_work
+    assert eng.run() == {}
+
+
+def test_cancel_mid_chunked_prefill(model_and_cfg):
+    params, cfg = model_and_cfg
+    eng = _engine(params, cfg, max_seq=64, page_size=4, prefill_chunk=4,
+                  prefill_token_budget=4)
+    long_prompt = np.arange(1, 33, dtype=np.int32)  # 8 chunks
+    rid = eng.submit(long_prompt, 4)
+    eng.step()  # one chunk in: mid-prefill
+    assert eng.cancel(rid)
+    rid2 = eng.submit(np.arange(1, 9, dtype=np.int32), 4)
+    out = eng.run()
+    assert rid2 in out and rid not in out
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+
+
+def test_cancel_swapped_out_request(model_and_cfg):
+    """Cancelling a swap-preempted (queued, snapshot-holding) request
+    frees only its shared pages and the rest of the workload completes
+    untouched."""
+    params, cfg = model_and_cfg
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, 128, (s,)).astype(np.int32), m)
+            for s, m in [(4, 14), (4, 14), (7, 5), (3, 8)]]
+    eng = _engine(params, cfg, max_seq=20, max_slots=2, page_size=4,
+                  num_pages=7)
+    ids = [eng.submit(p, m) for p, m in reqs]
+    swapped = None
+    for _ in range(400):
+        eng.step()
+        swapped = next((r for r in eng.scheduler.queue
+                        if r.swap is not None), None)
+        if swapped is not None:
+            break
+    assert swapped is not None, "pool sizing must force a swap"
+    assert eng.cancel(swapped.id)
+    out = eng.run()  # run() returns everything finished, incl. earlier
+    assert swapped.id not in out
+    assert set(out) == {i for i in ids if i != swapped.id}
+    assert all(s is None for s in eng.scheduler.slots)
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+
+
+def test_cancel_mid_verify_spec_engine(model_and_cfg):
+    params, cfg = model_and_cfg
+    eng = _engine(params, cfg, max_seq=32, max_slots=2, page_size=8,
+                  spec_decode=True, num_draft_tokens=3)
+    p = np.arange(1, 7, dtype=np.int32)
+    r1 = eng.submit(p, 12)
+    r2 = eng.submit(p[::-1].copy(), 12)
+    while eng.spec_steps < 1:
+        eng.step()
+    assert eng.cancel(r1)
+    out = eng.run()
+    assert r1 not in out and out[r2].shape[0] == 6 + 12
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+
+
+def test_cancel_churn_property(model_and_cfg):
+    """Random cancels at random times across a churning workload: no
+    page leaks, no double frees, survivors all finish."""
+    params, cfg = model_and_cfg
+    rng = np.random.default_rng(11)
+    eng = _engine(params, cfg, max_seq=20, max_slots=2, page_size=4,
+                  num_pages=10)
+    ids = [eng.submit(rng.integers(0, 128, (int(s),)).astype(np.int32),
+                      int(m))
+           for s, m in zip(rng.integers(3, 9, 8), rng.integers(4, 13, 8))]
+    cancelled = set()
+    steps = 0
+    while eng.scheduler.has_work and steps < 1000:
+        eng.step()
+        steps += 1
+        if rng.random() < 0.3:
+            victim = int(rng.choice(ids))
+            if victim not in cancelled and eng.cancel(victim):
+                cancelled.add(victim)
+    out = eng.run()
+    assert eng.scheduler.cancellations == len(cancelled)
+    assert set(out) == set(ids) - cancelled
+    for rid in set(ids) - cancelled:
+        assert out[rid].shape[0] > 0
+    assert all(s is None for s in eng.scheduler.slots)
+    assert eng.scheduler.pool.pages_in_use == _tree_pages(eng)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache persistence
+# ---------------------------------------------------------------------------
+
+
+def _export_pages(eng):
+    st = eng.scheduler.prefix.export_state()
+    return st, ([nd["page"] for nd in st["nodes"]]
+                + [ent["page"] for ent in st["partials"]])
+
+
+def test_prefix_snapshot_roundtrip_bit_identical(model_and_cfg, tmp_path):
+    params, cfg = model_and_cfg
+    kw = dict(max_seq=32, max_slots=2, page_size=4)
+    e1 = _engine(params, cfg, **kw)
+    p1 = np.arange(1, 13, dtype=np.int32)  # 3 full pages
+    p2 = np.concatenate([p1[:8], np.arange(50, 58, dtype=np.int32)])
+    r1 = e1.submit(p1, 6)
+    e1.submit(p2, 6)
+    out1 = e1.run()
+    path = tmp_path / "prefix.npz"
+    n_pages = e1.save_prefix_cache(path)
+    assert n_pages > 0
+
+    e2 = _engine(params, cfg, **kw)
+    n_entries = e2.load_prefix_cache(path)
+    assert n_entries == (e1.scheduler.prefix.num_nodes
+                         + e1.scheduler.prefix.num_partial_entries)
+
+    # identical tree structure (same BFS order), bit-identical page bytes
+    st1, pages1 = _export_pages(e1)
+    st2, pages2 = _export_pages(e2)
+    strip = lambda st: [{k: v for k, v in nd.items() if k != "page"}
+                        for nd in st["nodes"] + st["partials"]]
+    assert strip(st1) == strip(st2)
+    s1 = e1._extract(e1.cache, jnp.asarray(0, jnp.int32),
+                     jnp.asarray(pages1, jnp.int32))
+    s2 = e2._extract(e2.cache, jnp.asarray(0, jnp.int32),
+                     jnp.asarray(pages2, jnp.int32))
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+    # a warm hit on the imported tree decodes token-identically
+    r = e2.submit(p1, 6)
+    out2 = e2.run()
+    np.testing.assert_array_equal(out2[r], out1[r1])
+    assert e2.cache_stats()["prefix_hit_rate"] > 0
+
+
+def test_prefix_snapshot_roundtrip_tiered_formats(model_and_cfg,
+                                                  tmp_path):
+    """Tiered pool: per-page element formats survive the round trip (a
+    demoted fp6/fp4 page must be read back as fp6/fp4)."""
+    params, cfg = model_and_cfg
+    kw = dict(max_seq=32, max_slots=2, page_size=4, tiered=True,
+              tier_policy=TierPolicy(hot_steps=1, cold_steps=2,
+                                     repack_pages_per_step=8))
+    e1 = _engine(params, cfg, **kw)
+    p1 = np.arange(1, 13, dtype=np.int32)
+    r1 = e1.submit(p1, 8)
+    out1 = e1.run()
+    path = tmp_path / "tiered.npz"
+    assert e1.save_prefix_cache(path) > 0
+
+    e2 = _engine(params, cfg, **kw)
+    e2.load_prefix_cache(path)
+    _, pages1 = _export_pages(e1)
+    _, pages2 = _export_pages(e2)
+    fmts1 = [int(e1.page_fmts[p]) for p in pages1]
+    fmts2 = [int(e2.page_fmts[p]) for p in pages2]
+    assert fmts1 == fmts2
+    assert any(f != e1._base_fmt_id for f in fmts1), \
+        "policy should have demoted some pages below the base format"
+    r = e2.submit(p1, 8)
+    out2 = e2.run()
+    np.testing.assert_array_equal(out2[r], out1[r1])
+
+
+def test_prefix_snapshot_rejects_mismatched_geometry(model_and_cfg,
+                                                     tmp_path):
+    params, cfg = model_and_cfg
+    e1 = _engine(params, cfg, max_seq=32, max_slots=2, page_size=4)
+    e1.submit(np.arange(1, 13, dtype=np.int32), 4)
+    e1.run()
+    path = tmp_path / "prefix.npz"
+    e1.save_prefix_cache(path)
+    e2 = _engine(params, cfg, max_seq=32, max_slots=2, page_size=8)
+    with pytest.raises(ValueError, match="snapshot|page"):
+        e2.load_prefix_cache(path)

@@ -193,9 +193,10 @@ def test_spec_decode_rejects_bad_configs():
     with pytest.raises(ValueError, match="num_draft_tokens"):
         ContinuousBatchingEngine(params, cfg, ServeConfig(
             max_seq=24, spec_decode=True, num_draft_tokens=0))
-    with pytest.raises(ValueError, match="greedy"):
-        ContinuousBatchingEngine(params, cfg, ServeConfig(
-            max_seq=24, spec_decode=True, temperature=0.7))
+    # temperature > 0 with spec decode is supported now (rejection-
+    # sampling verification) — construction must NOT raise
+    ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=24, spec_decode=True, temperature=0.7))
     with pytest.raises(ValueError, match="drafter"):
         ContinuousBatchingEngine(params, cfg, ServeConfig(
             max_seq=24, spec_decode=True, drafter="medusa"))
