@@ -1,0 +1,253 @@
+"""One-dispatch ragged engine step vs the split-dispatch serve path.
+
+The serve engine's steady state is a *mixed* batch: some slots decoding,
+some running speculative verify windows, some streaming prefill chunks.
+The split path launches one jitted dispatch per mode per step (decode,
+verify, each chunk batch) plus a 1-row ``.at[].set`` K/V write inside
+the decode/verify trace; the ragged path packs every row into ONE
+``mx_attention_ragged_fused`` dispatch whose write window is quantized
+and merged in-kernel. Three axes:
+
+  * **dispatch gate (measured, exact)**: a workload built to overlap
+    decode with a long multi-chunk prefill must run every steady-state
+    mixed step as exactly ONE device dispatch on the ragged engine
+    (``dispatches_per_mixed_step == 1`` from the engine's own per-step
+    dispatch accounting) while the split oracle needs >= 2 — and both
+    engines must emit token-identical streams (the oracle check rides
+    along for free).
+  * **page-visit audit (measured, exact)**: the ragged kernel's
+    ``debug_visits`` counter must equal ``ceil(seq_len / PS)`` per
+    (row, kv-head) cell over a mixed decode/verify/chunk row batch —
+    per-step work scales with resident pages, not the padded table,
+    exactly as gated for the decode kernel in ``decode_attention.py``.
+  * **modeled HBM bytes per decoded token (gated >= 1.5x)**: at a
+    serving operating point (8B-class fp8 weights, decode batch 8 at
+    1k context, one 64-token chunk in flight) every extra dispatch
+    re-reads the full weight stream, so bytes/decoded-token is
+    ``n_dispatches * weights + KV traffic`` over the decoded rows.
+    The measured dispatch gate pins n_dispatches (1 vs >= 2); the
+    model converts it to bytes. Decode at small batch is weight-bound
+    (the paper's bandwidth premise), so split / ragged ~= 2x.
+
+Wall-clock for both engines is reported but NOT gated: off-TPU the
+Pallas kernels run under the interpreter where per-grid-cell dispatch
+dominates and the one-dispatch win is invisible (same reasoning as
+``decode_attention.py``).
+
+  PYTHONPATH=src python benchmarks/ragged_step.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:  # package mode (python -m benchmarks.run)
+    from . import common
+except ImportError:  # script mode
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    import common
+
+GATE = 1.5
+
+
+# ---------------------------------------------------------------------------
+# modeled HBM bytes per decoded token (v5e-class serving operating point)
+# ---------------------------------------------------------------------------
+
+OP_POINT = dict(
+    weight_bytes=8.0e9,   # 8B-class model, fp8 weights + E8M0 scales
+    decode_rows=8,        # decoding slots per step
+    resident=1024,        # resident tokens per decoding sequence
+    chunk=64,             # one prefill chunk in flight (tokens)
+    kvh=8, d=128, ps=16, bsz=32, elem_bits=8,
+)
+
+
+def modeled_step_bytes(n_dispatches, *, weight_bytes, decode_rows, resident,
+                       chunk, kvh, d, ps, bsz, elem_bits):
+    """HBM bytes one steady-state mixed engine step moves.
+
+    Every dispatch streams the full weights once (decode-batch matmuls
+    are weight-bound). K/V reads are the resident compact pages of every
+    row — identical across paths, since the split dispatches read
+    disjoint row sets. Writes differ: the split path scatters one
+    compact row per decoded token (the ``.at[].set`` round-trip, write
+    + same-dispatch read-back); the ragged path writes its write-window
+    page tile back through the aliased output (PS rows per row).
+    """
+    compact = d * elem_bits / 8 + d // bsz  # bytes per token-head, K or V
+    kv_read = (decode_rows * resident + chunk) * kvh * 2 * compact
+    split_write = decode_rows * kvh * 2 * compact * 2  # write + read-back
+    ragged_write = (decode_rows + -(-chunk // ps)) * ps * kvh * 2 * compact
+    write = ragged_write if n_dispatches == 1 else split_write
+    return n_dispatches * weight_bytes + kv_read + write
+
+
+# ---------------------------------------------------------------------------
+# measured: both engines on a decode-overlapping-prefill workload
+# ---------------------------------------------------------------------------
+
+
+def _cfg():
+    from repro.core import MXFP8
+    from repro.nn import BlockDef, ModelConfig
+
+    return ModelConfig(
+        name="bench", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=1, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=True))
+
+
+def run_engines(smoke):
+    """Short decoders + one long prompt => a steady run of mixed steps."""
+    import jax
+
+    from repro.nn import model
+    from repro.serve import ContinuousBatchingEngine, ServeConfig
+
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    long_p = 16 if smoke else 40
+    m_short = 6 if smoke else 16
+    reqs = [(rng.integers(0, 128, (4,)).astype(np.int32), m_short),
+            (rng.integers(0, 128, (4,)).astype(np.int32), m_short),
+            (rng.integers(0, 128, (long_p,)).astype(np.int32), 4)]
+    out = {}
+    for mode in ("split", "ragged"):
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            step_mode=mode, max_seq=64, max_slots=3, page_size=4,
+            prefill_chunk=4))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        t0 = time.perf_counter()
+        streams = eng.run()
+        wall = time.perf_counter() - t0
+        out[mode] = dict(streams=[streams[i] for i in ids], wall_s=wall,
+                         stats=eng.cache_stats(), ragged=eng.ragged)
+    assert out["ragged"]["ragged"], "ragged engine fell back to split"
+    for a, b in zip(out["split"]["streams"], out["ragged"]["streams"]):
+        np.testing.assert_array_equal(a, b)
+    return out
+
+
+def visits_audit(rng):
+    """Exact page-visit count on a mixed decode/verify/chunk row batch."""
+    import jax.numpy as jnp
+
+    from repro.core import quantize
+    from repro.kernels import mx_attention_ragged_fused
+
+    kvh, d, ps, w, g, bsz = 2, 32, 8, 8, 2, 32
+    starts = [13, 9, 0, 12]          # decode / verify / fresh / mid-chunk
+    n_news = [1, 3, w, w]
+    totals = [s + n for s, n in zip(starts, n_news)]
+    pages_per = [-(-t // ps) for t in totals]
+    npages = sum(pages_per) + 2      # + spare + trash page
+    pmax = max(pages_per) + 1
+    perm = rng.permutation(npages - 1)
+    table = np.full((len(starts), pmax), -1, np.int32)
+    off = 0
+    for i, npg in enumerate(pages_per):
+        table[i, :npg] = perm[off:off + npg]
+        off += npg
+    qd = quantize(jnp.asarray(
+        rng.normal(size=(kvh, npages * ps, d)).astype(np.float32)),
+        "fp8_e4m3", bsz)
+    el = np.asarray(qd.elements).reshape(kvh, npages, ps, -1)
+    sc = np.asarray(qd.scales).reshape(kvh, npages, ps, -1)
+    ke = np.ascontiguousarray(el.transpose(1, 2, 0, 3))
+    ks = np.ascontiguousarray(sc.transpose(1, 2, 0, 3))
+    r = len(starts)
+    _, _, visits = mx_attention_ragged_fused(
+        jnp.asarray(rng.normal(size=(r, kvh, w, g, d)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(r, w, kvh, d)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(r, w, kvh, d)).astype(np.float32)),
+        jnp.asarray(ke), jnp.asarray(ks),
+        jnp.asarray(ke.copy()), jnp.asarray(ks.copy()),
+        jnp.asarray(table), jnp.asarray(starts, jnp.int32),
+        jnp.asarray(totals, jnp.int32), fmt_name="fp8_e4m3",
+        block_size=bsz, debug_visits=True)
+    visited = np.asarray(visits)[:, :, 0]
+    expect = np.broadcast_to(
+        np.array([-(-t // ps) for t in totals], np.int32)[:, None],
+        visited.shape)
+    grid = r * kvh * pmax
+    return int(visited.sum()), int(expect.sum()), grid, bool(
+        (visited == expect).all())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short workload for CI")
+    args = ap.parse_args(argv)
+
+    out = run_engines(args.smoke)
+    rs, ss = out["ragged"]["stats"], out["split"]["stats"]
+    for mode in ("split", "ragged"):
+        st = out[mode]["stats"]
+        common.emit(
+            f"ragged_step/{mode}", out[mode]["wall_s"] * 1e6,
+            f"{st['dispatches_total']} dispatches / {st['mixed_steps']} "
+            f"mixed steps (per-mixed {st['dispatches_per_mixed_step']:.2f})")
+
+    visited, resident, grid, visits_ok = visits_audit(
+        np.random.default_rng(0))
+
+    # modeled bytes per decoded token at the serving operating point,
+    # using the *measured* per-mixed-step dispatch counts
+    split_dpm = max(2.0, ss["dispatches_per_mixed_step"])
+    split_bpt = modeled_step_bytes(split_dpm, **OP_POINT) / OP_POINT[
+        "decode_rows"]
+    ragged_bpt = modeled_step_bytes(1, **OP_POINT) / OP_POINT["decode_rows"]
+    bytes_ratio = split_bpt / ragged_bpt
+
+    one_dispatch = (rs["mixed_steps"] >= 2
+                    and rs["dispatches_per_mixed_step"] == 1.0
+                    and rs["dispatches_ragged"] == rs["dispatches_total"])
+    ok = one_dispatch and visits_ok and bytes_ratio >= GATE
+    common.emit_json("ragged_step", {
+        "op_point": OP_POINT,
+        "wall_s": {m: out[m]["wall_s"] for m in out},
+        "dispatches_per_mixed_step": {
+            m: out[m]["stats"]["dispatches_per_mixed_step"] for m in out},
+        "mixed_steps": {m: out[m]["stats"]["mixed_steps"] for m in out},
+        "dispatch_counts": {
+            m: {k: v for k, v in out[m]["stats"].items()
+                if k.startswith("dispatches_")} for m in out},
+        "page_tiles_visited": visited,
+        "page_tiles_resident": resident,
+        "page_tiles_in_grid": grid,
+        "modeled_hbm_bytes_per_decoded_token": {
+            "split": split_bpt, "ragged": ragged_bpt,
+            "ratio": bytes_ratio},
+    })
+    print(f"\nragged {rs['dispatches_per_mixed_step']:.2f} vs split "
+          f"{ss['dispatches_per_mixed_step']:.2f} dispatches per mixed "
+          f"step ({rs['mixed_steps']} mixed steps), page tiles visited "
+          f"{visited}/{grid} (resident {resident}), modeled HBM "
+          f"{split_bpt / 1e6:.1f} -> {ragged_bpt / 1e6:.1f} MB per "
+          f"decoded token ({bytes_ratio:.2f}x): "
+          f"{'PASS' if ok else 'FAIL'} (gates: one dispatch per mixed "
+          f"step + exact visits + >= {GATE}x modeled bytes; wall-clock "
+          f"reported ungated, see module docstring)")
+    if not ok:
+        raise SystemExit(1)
+    return bytes_ratio
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

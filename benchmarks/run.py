@@ -11,8 +11,8 @@ import traceback
 
 from . import (block_size_sweep, common, decode_attention, e2e_step,
                emulation_breakdown, format_comparison, prefill,
-               serve_overload, serve_prefix, serve_throughput, spec_decode,
-               speedup, throughput_sweep, tiered_kv)
+               ragged_step, serve_overload, serve_prefix, serve_throughput,
+               spec_decode, speedup, throughput_sweep, tiered_kv)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -28,6 +28,7 @@ SUITES = [
     ("prefill", prefill.run),
     ("tiered_kv", tiered_kv.run),
     ("serve_overload", serve_overload.run),
+    ("ragged_step", ragged_step.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -40,6 +41,7 @@ _JSON_FILES = {
     "BENCH_prefill.json": ("prefill",),
     "BENCH_tiered.json": ("tiered_kv",),
     "BENCH_overload.json": ("serve_overload",),
+    "BENCH_ragged.json": ("ragged_step",),
 }
 
 

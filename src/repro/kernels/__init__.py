@@ -17,6 +17,7 @@ from .mx_attention import (gather_kv_pages, mx_attention_decode,
                            mx_attention_decode_fused,
                            mx_attention_decode_paged,
                            mx_attention_prefill_fused,
+                           mx_attention_ragged_fused,
                            mx_attention_verify_fused)
 from .mx_matmul import mx_matmul_dgrad
 from .mx_repack import mx_repack_pages
@@ -24,6 +25,7 @@ from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
 __all__ = ["gather_kv_pages", "mx_attention_decode",
            "mx_attention_decode_fused", "mx_attention_decode_paged",
-           "mx_attention_prefill_fused", "mx_attention_verify_fused",
+           "mx_attention_prefill_fused", "mx_attention_ragged_fused",
+           "mx_attention_verify_fused",
            "mx_matmul", "mx_matmul_dgrad", "mx_matmul_trainable",
            "mx_repack_pages", "quantize_pallas", "ref"]

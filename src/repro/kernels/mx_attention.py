@@ -389,32 +389,50 @@ def _quantize_rows(x, fmt_name: str, block_size: int):
     return F.snap_to_fp8_grid(ratio, fmt).astype(fmt.storage_dtype), e_biased
 
 
+#: row-tile budget for one flash-update step, in f32 elements of the
+#: (rows, D) partial-output slab. Verify windows and prefill/ragged
+#: chunks put ``num_q * G`` query rows in one cell; at large G*D (e.g.
+#: head_dim 128 x G 8 x a multi-token window) the full (rows, D) slab
+#: outgrows a comfortable VREG/VMEM working set, so the update walks
+#: static row tiles instead. Tiling is exact: the online-softmax state
+#: (m, l, acc) is per *query row*, so splitting rows changes no
+#: accumulation order within any row.
+_FLASH_ROW_TILE_ELEMS = 4096
+
+
 def _flash_update(m_ref, l_ref, acc_ref, q, k, v, mask, softcap):
     """One online-softmax accumulation step over a (PS, D) key/value tile.
 
-    Shared by the decode/verify and prefill kernels so the accumulation
-    order (and therefore the f32 rounding) of every fused path is
-    identical by construction. ``q`` (R, D) f32, ``mask`` (R, PS) bool.
+    Shared by the decode/verify, prefill, and ragged kernels so the
+    accumulation order (and therefore the f32 rounding) of every fused
+    path is identical by construction. ``q`` (R, D) f32, ``mask``
+    (R, PS) bool. When R * D exceeds :data:`_FLASH_ROW_TILE_ELEMS` the
+    update runs over static row tiles (see there) — bit-identical to the
+    untiled form because every row's state is independent.
     """
-    d = q.shape[-1]
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * (d ** -0.5)  # (R, PS)
-    if softcap:
-        s = jnp.tanh(s / softcap) * softcap
-    s = jnp.where(mask, s, NEG_INF)
-    m_prev = m_ref[...]  # (R, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    # the explicit mask (not just exp(NEG_INF - m)) guards the
-    # all-masked tile: there m_new == NEG_INF and the difference is 0
-    probs = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (R, PS)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
-                                              keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        probs, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    rows, d = q.shape
+    tile = max(1, _FLASH_ROW_TILE_ELEMS // max(d, 1))
+    for lo in range(0, rows, tile):
+        sl = slice(lo, min(lo + tile, rows))
+        s = jax.lax.dot_general(
+            q[sl], k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (d ** -0.5)  # (r, PS)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mrows = mask[sl]
+        s = jnp.where(mrows, s, NEG_INF)
+        m_prev = m_ref[sl]  # (r, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # the explicit mask (not just exp(NEG_INF - m)) guards the
+        # all-masked tile: there m_new == NEG_INF and the difference is 0
+        probs = jnp.where(mrows, jnp.exp(s - m_new), 0.0)  # (r, PS)
+        l_ref[sl] = l_ref[sl] * alpha + jnp.sum(probs, axis=-1,
+                                                keepdims=True)
+        acc_ref[sl] = acc_ref[sl] * alpha + jax.lax.dot_general(
+            probs, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[sl] = m_new
 
 
 def _first_window_page(qpos_min, window, page_size: int):
@@ -999,5 +1017,345 @@ def mx_attention_prefill_fused(q, k_chunk, v_chunk, ke_pool, ks_pool,
     )(*scalar_ops, qr, k_chunk, v_chunk,
       ke_pool, ks_pool, ve_pool, vs_pool)
     out = out.reshape(b, kvh, c, g, d)
+    pools = (oke, oks, ove, ovs)
+    return (out, pools, visits) if debug_visits else (out, pools)
+
+
+# ---------------------------------------------------------------------------
+# single-pass fused ragged engine step: decode + verify + prefill-chunk rows
+# in one page walk, with the write window quantized in-kernel
+# ---------------------------------------------------------------------------
+
+
+def _mx_attn_ragged_kernel(*refs, page_size: int, fmt_name: str,
+                           block_size: int, softcap, window, width: int,
+                           group: int, mixed_fmts=None):
+    """One page tile of one (row, kv-head) ragged-step cell.
+
+    The generalization that lets decode rows (1 new token), speculative
+    verify windows (1 + K new tokens), and prefill chunks (up to W new
+    tokens) coexist in ONE grid: each row carries only ``(row_start,
+    seq_len)`` scalars — ``row_start`` is where this step's new tokens
+    begin and ``seq_len = row_start + n_new`` where they end — and the
+    page walk splits into three regions per cell:
+
+      * ``first <= p < w0`` (resident pages, ``w0 = row_start // PS``):
+        read the compact pool tile, dequantize in-register, fold into the
+        online softmax — exactly the verify kernel's body.
+      * ``w0 <= p < valid`` (the row's *write window*): the step's wide
+        new K/V rows are scattered onto page-row positions by an exact
+        one-hot (PS, W) f32 matmul (each product is 1.0 * x or 0.0 * x,
+        so the gather is bit-exact), quantized in-register
+        (``_quantize_rows``, the same math as the host install path),
+        merged with the page's existing codes row-by-row in the *code*
+        domain (``where(row_start <= kpos < seq_len, new, old)`` — rows
+        outside the window keep their stored bytes untouched), written
+        back through the aliased pool outputs, and attended over the
+        merged dequantized tile. This is what removes the split path's
+        per-token host ``.at[].set`` HBM round-trip: unlike the prefill
+        kernel, the window need NOT be page-aligned — a decode token in
+        the middle of a half-full page merges into it in-register.
+      * ``p < first`` / ``p >= valid``: body predicated away, DMA elided
+        by index-map clamping (the decode/verify kernels' skip rule).
+
+    Query rows: the cell holds ``W * G`` query rows; row r belongs to
+    query ``t = r // G`` at absolute position ``row_start + min(t,
+    n_new - 1)`` — padding queries (t >= n_new: decode rows in a W > 1
+    batch, the tail of a final partial chunk) clamp onto the last real
+    position, producing duplicate garbage output rows the host ignores,
+    while real rows see exactly the mask the split kernels apply.
+
+    Inactive slots pass ``row_start = 0, seq_len = 1`` with an
+    all-negative table row: the wrapper maps negative entries onto the
+    pool's LAST page, which callers must reserve as a scratch ("trash")
+    page — inactive rows then read and write only that page and no live
+    page is ever touched by a dead row.
+
+    Mixed-format (tiered) pools: resident pages dequantize through the
+    per-page format id; write-window pages are guaranteed base-fp8 by
+    the engine (freshly written pages are hot), so old and new codes
+    merge in one format and the fp8 bytes bitcast into the full-width
+    uint8 rows exactly as in the prefill kernel.
+    """
+    if mixed_fmts is None:
+        (tbl_ref, start_ref, lens_ref, q_ref, kn_ref, vn_ref,
+         ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
+         oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
+         m_ref, l_ref, acc_ref) = refs
+        fmts_ref = None
+    else:
+        (tbl_ref, start_ref, lens_ref, fmts_ref, q_ref, kn_ref, vn_ref,
+         ke_ref, ks_ref, ve_ref, vs_ref, o_ref,
+         oke_ref, oks_ref, ove_ref, ovs_ref, visits_ref,
+         m_ref, l_ref, acc_ref) = refs
+    i = pl.program_id(0)
+    p = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        visits_ref[0, 0, 0] = 0
+
+    start = start_ref[i]  # first new-token row of this step
+    seq_len = lens_ref[i]  # resident rows incl. this step's new tokens
+    n_new = seq_len - start
+    w0 = start // page_size
+    valid_pages = pl.cdiv(seq_len, page_size)
+    first_page = _first_window_page(start, window, page_size)
+
+    def _attend_tile(k, v):
+        q = q_ref[0, 0].astype(jnp.float32)  # (W * G, D)
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        rows = width * group
+        # row r belongs to query t = r // G at absolute position
+        # start + min(t, n_new - 1): real queries get exactly the split
+        # kernels' positions, padding queries clamp onto the last real one
+        t = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // group
+        qpos = start + jnp.minimum(t, n_new - 1)
+        mask = kpos <= qpos  # (R, PS)
+        if window is not None:
+            mask &= kpos > qpos - window
+        _flash_update(m_ref, l_ref, acc_ref, q, k, v, mask, softcap)
+
+    @pl.when((p >= first_page) & (p < w0))
+    def _resident_page():
+        visits_ref[0, 0, 0] += 1
+        if mixed_fmts is None:
+            k = _dequant_rows(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                              fmt_name, block_size)  # (PS, D)
+            v = _dequant_rows(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                              fmt_name, block_size)
+        else:
+            fid = fmts_ref[tbl_ref[i, p]]
+            k = _dequant_rows_mixed(ke_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
+            v = _dequant_rows_mixed(ve_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                                    fid, mixed_fmts, block_size)
+        _attend_tile(k, v)
+
+    @pl.when((p >= w0) & (p < valid_pages))
+    def _write_page():
+        visits_ref[0, 0, 0] += 1
+        kw = kn_ref[0, :, 0, :].astype(jnp.float32)  # (W, D) wide new rows
+        vw = vn_ref[0, :, 0, :].astype(jnp.float32)
+        # scatter new row t onto page row j where start + t == p*PS + j:
+        # a one-hot f32 matmul (products are 1.0*x or 0.0*x — exact), so
+        # page rows outside [start, seq_len) gather exact zeros that the
+        # merge below discards anyway
+        jrow = jax.lax.broadcasted_iota(
+            jnp.int32, (page_size, width), 0)  # page row
+        tcol = jax.lax.broadcasted_iota(
+            jnp.int32, (page_size, width), 1)  # new-row index
+        kpos_rows = p * page_size + jrow[:, :1]  # (PS, 1)
+        onehot = ((start + tcol) == (p * page_size + jrow)
+                  ).astype(jnp.float32)  # (PS, W)
+        k_page = jax.lax.dot_general(
+            onehot, kw, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (PS, D)
+        v_page = jax.lax.dot_general(
+            onehot, vw, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        kq_e, kq_s = _quantize_rows(k_page, fmt_name, block_size)
+        vq_e, vq_s = _quantize_rows(v_page, fmt_name, block_size)
+        if mixed_fmts is not None:
+            kq_e = jax.lax.bitcast_convert_type(kq_e, jnp.uint8)
+            vq_e = jax.lax.bitcast_convert_type(vq_e, jnp.uint8)
+        # merge in the CODE domain: in-window page rows take this step's
+        # freshly quantized codes, the rest keep their stored bytes —
+        # then write the whole tile back through the aliased output
+        in_w = (kpos_rows >= start) & (kpos_rows < seq_len)  # (PS, 1)
+        k_codes = jnp.where(in_w, kq_e, ke_ref[0, :, 0, :])
+        v_codes = jnp.where(in_w, vq_e, ve_ref[0, :, 0, :])
+        k_scales = jnp.where(in_w, kq_s, ks_ref[0, :, 0, :])
+        v_scales = jnp.where(in_w, vq_s, vs_ref[0, :, 0, :])
+        oke_ref[0, :, 0, :] = k_codes
+        ove_ref[0, :, 0, :] = v_codes
+        oks_ref[0, :, 0, :] = k_scales
+        ovs_ref[0, :, 0, :] = v_scales
+        # attend over the merged tile — identical bytes (and therefore
+        # identical f32 values) to what the split path's separate host
+        # install + page re-read would produce
+        if mixed_fmts is None:
+            _attend_tile(
+                _dequant_rows(k_codes, k_scales, fmt_name, block_size),
+                _dequant_rows(v_codes, v_scales, fmt_name, block_size))
+        else:
+            fid = fmts_ref[tbl_ref[i, p]]
+            _attend_tile(
+                _dequant_rows_mixed(k_codes, k_scales, fid, mixed_fmts,
+                                    block_size),
+                _dequant_rows_mixed(v_codes, v_scales, fid, mixed_fmts,
+                                    block_size))
+
+    @pl.when(p == last)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def mx_attention_ragged_fused(q, k_new, v_new, ke_pool, ks_pool, ve_pool,
+                              vs_pool, page_table, row_start, seq_lens, *,
+                              fmt_name: str = "fp8_e4m3",
+                              block_size: int = 32, softcap=None,
+                              window=None, page_fmts=None, mixed_fmts=None,
+                              debug_visits: bool = False,
+                              interpret: bool | None = None):
+    """One-dispatch ragged engine step over the MX page pool.
+
+    The single kernel behind ``ServeConfig.step_mode="ragged"``: every
+    engine-step row — a plain decode token, a speculative verify window,
+    or an in-flight prefill chunk — is one grid row of the SAME
+    ``(R, KVH, P)`` scalar-prefetch page walk, distinguished only by its
+    ``(row_start, seq_len)`` metadata. Each row's new K/V rows are
+    quantized and merged into its pages *inside* the kernel through
+    aliased pool outputs (see :func:`_mx_attn_ragged_kernel`), so a
+    steady-state mixed batch costs exactly one device dispatch and the
+    decode/verify paths stop paying a separate 1-row ``.at[].set`` HBM
+    round-trip per token.
+
+    Layouts::
+
+      q          (R, KVH, W, G, D)  wide step queries (RoPE'd); W is the
+                                    static row width = max over modes of
+                                    the per-row new-token count
+      k_new      (R, W, KVH, D)     wide new keys (RoPE'd)
+      v_new      (R, W, KVH, D)     wide new values
+      pools      (NP, PS, KVH, ED/NB) as the decode/verify kernels
+      page_table (R, P) i32         entries < 0 map to pool page NP - 1
+      row_start  (R,) i32           first absolute row this step writes
+      seq_lens   (R,) i32           row_start + n_new (n_new in [1, W])
+
+    Unlike the prefill kernel, ``row_start`` need NOT be page-aligned —
+    the write window merges into partially filled pages row-by-row in
+    the code domain. Rows only ever write pages in ``[row_start // PS,
+    ceil(seq_len / PS))`` and the engine guarantees those pages are
+    exclusively owned (COW for decode/verify windows, fresh allocations
+    for chunk pages), so concurrent rows never write the same page.
+
+    Trash-page contract: negative table entries (inactive slots, table
+    tails) are mapped to the pool's **last** page, which the caller must
+    reserve as scratch — the ragged engine allocates ``num_pages + 1``
+    physical pages and never hands out the last one. Inactive rows
+    (``row_start = 0, seq_len = 1``) then write their garbage there.
+
+    Returns ``(out (R, KVH, W, G, D) f32, (ke, ks, ve, vs) updated
+    pools)`` — pool outputs alias the inputs. ``debug_visits=True``
+    additionally returns the (R, KVH, 1) executed-page counter, exactly
+    ``ceil(seq_lens / PS)`` minus sliding-window head pages as in the
+    other fused kernels. ``page_fmts``/``mixed_fmts`` switch to
+    mixed-format (tiered) pools; ``fmt_name`` must then be an fp8 (the
+    hot format) and every write-window page must already be base-fp8
+    (the engine's hot-write invariant).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    mixed = page_fmts is not None
+    _check_fmt(ke_pool, fmt_name, mixed=mixed)
+    if mixed:
+        if mixed_fmts is None:
+            mixed_fmts = MIXED_FMTS_DEFAULT
+        mixed_fmts = tuple(mixed_fmts)
+        if F.get_format(fmt_name).bits != 8:
+            raise ValueError(
+                "tiered ragged steps write the window in the hot format, "
+                f"which must be an fp8; got {fmt_name!r}")
+    else:
+        mixed_fmts = None
+    r, kvh, w, g, d = q.shape
+    rows = w * g
+    npages, ps = ke_pool.shape[0], ke_pool.shape[1]
+    ed = ke_pool.shape[-1]
+    nb = ks_pool.shape[-1]
+    pmax = page_table.shape[1]
+    table = jnp.asarray(page_table, jnp.int32)
+    # negative entries -> the reserved trash page (see docstring); live
+    # entries clamp defensively into the pool
+    table = jnp.where(table < 0, npages - 1,
+                      jnp.clip(table, 0, npages - 1))
+    start = jnp.asarray(row_start, jnp.int32)
+    # at least one new token per row, at most the whole width
+    lens = jnp.clip(jnp.asarray(seq_lens, jnp.int32), start + 1, start + w)
+    qr = q.reshape(r, kvh, rows, d)
+
+    def pool_in_spec(width_):
+        def imap(i, j, p, tbl, st, ln, *_fmts):
+            # every page in [first, valid) is read — resident pages to
+            # attend, write-window pages to merge with; skipped steps
+            # clamp into that range so their DMA is elided
+            valid = pl.cdiv(ln[i], ps)
+            first = _first_window_page(st[i], window, ps)
+            return (tbl[i, jnp.clip(p, first, valid - 1)], 0, j, 0)
+        return pl.BlockSpec((1, ps, 1, width_), imap)
+
+    def new_in_spec():
+        # the step's wide new rows: one (W, D) slab per (row, head),
+        # constant across the page walk (fetched once per cell)
+        return pl.BlockSpec((1, w, 1, d),
+                            lambda i, j, p, *_: (i, 0, j, 0))
+
+    def pool_out_spec(width_):
+        def imap(i, j, p, tbl, st, ln, *_fmts):
+            # steps below the write window park on its first page (it is
+            # written before the index ever changes), steps past the
+            # last written page park on it (flushed once at cell end)
+            w0 = st[i] // ps
+            valid = pl.cdiv(ln[i], ps)
+            return (tbl[i, jnp.clip(p, w0, valid - 1)], 0, j, 0)
+        return pl.BlockSpec((1, ps, 1, width_), imap)
+
+    scalar_ops = [table, start, lens]
+    if mixed:
+        scalar_ops.append(jnp.asarray(page_fmts, jnp.int32))
+    ns = len(scalar_ops)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=ns,
+        grid=(r, kvh, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
+            new_in_spec(), new_in_spec(),
+            pool_in_spec(ed), pool_in_spec(nb),
+            pool_in_spec(ed), pool_in_spec(nb),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda i, j, p, *_: (i, j, 0, 0)),
+            pool_out_spec(ed), pool_out_spec(nb),
+            pool_out_spec(ed), pool_out_spec(nb),
+            pl.BlockSpec((1, 1, 1), lambda i, j, p, *_: (i, j, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),  # running max m
+            pltpu.VMEM((rows, 1), jnp.float32),  # running denominator l
+            pltpu.VMEM((rows, d), jnp.float32),  # rescaled partial output
+        ],
+    )
+    kernel = functools.partial(
+        _mx_attn_ragged_kernel, page_size=ps, fmt_name=fmt_name,
+        block_size=block_size, softcap=softcap, window=window,
+        width=w, group=g, mixed_fmts=mixed_fmts)
+    out, oke, oks, ove, ovs, visits = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, kvh, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct(ke_pool.shape, ke_pool.dtype),
+            jax.ShapeDtypeStruct(ks_pool.shape, ks_pool.dtype),
+            jax.ShapeDtypeStruct(ve_pool.shape, ve_pool.dtype),
+            jax.ShapeDtypeStruct(vs_pool.shape, vs_pool.dtype),
+            jax.ShapeDtypeStruct((r, kvh, 1), jnp.int32),
+        ],
+        # pools update in place (operand indices count the scalar-prefetch
+        # operands, then q, k_new, v_new, then the four pools)
+        input_output_aliases={ns + 3 + k: 1 + k for k in range(4)},
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*scalar_ops, qr, k_new, v_new,
+      ke_pool, ks_pool, ve_pool, vs_pool)
+    out = out.reshape(r, kvh, w, g, d)
     pools = (oke, oks, ove, ovs)
     return (out, pools, visits) if debug_visits else (out, pools)

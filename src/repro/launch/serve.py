@@ -171,6 +171,16 @@ def main(argv=None):
     ap.add_argument("--tier-repack-pages", type=int, default=4,
                     help="max pages repacked per engine step (bounds the "
                          "background repack work on the decode path)")
+    ap.add_argument("--step-mode", default="ragged",
+                    choices=["ragged", "split"],
+                    help="engine step dispatch shape: 'ragged' (default) "
+                         "packs decode tokens, speculative verify windows "
+                         "and prefill chunks into ONE fused Pallas "
+                         "dispatch per step with the K/V write done "
+                         "in-kernel; 'split' runs the per-mode dispatches "
+                         "(the validated oracle). Ragged needs the fused "
+                         "kernel + a quantized KV cache and falls back to "
+                         "split otherwise")
     ap.add_argument("--spec-decode", action="store_true",
                     help="greedy speculative decoding: draft K tokens per "
                          "step (prompt-lookup n-gram, no second model) and "
@@ -222,6 +232,7 @@ def main(argv=None):
         prefill_mode=args.prefill_mode,
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_token_budget or None,
+        step_mode=args.step_mode,
         tiered=args.tiered,
         tier_policy=TierPolicy(
             mid_fmt=args.tier_mid_fmt, cold_fmt=args.tier_cold_fmt,
@@ -256,6 +267,19 @@ def main(argv=None):
                  stats["peak_paged_bytes"] / 1024, stats["preemptions"],
                  stats["prefix_hit_rate"], stats["prefill_tokens_computed"],
                  stats["prompt_tokens"])
+        if "dispatches_total" in stats:
+            log.info("device dispatches: %d total over %d steps "
+                     "(%.2f/step; %.2f per mixed decode+prefill step over "
+                     "%d mixed steps) — ragged %d, decode %d, verify %d, "
+                     "prefill %d, write %d, repack %d [step mode: %s]",
+                     stats["dispatches_total"], engine.steps,
+                     stats["dispatches_per_step"],
+                     stats["dispatches_per_mixed_step"],
+                     stats["mixed_steps"], stats["dispatches_ragged"],
+                     stats["dispatches_decode"], stats["dispatches_verify"],
+                     stats["dispatches_prefill"], stats["dispatches_write"],
+                     stats["dispatches_repack"],
+                     "ragged" if engine.ragged else "split")
         if "admission_latency_p95" in stats:
             log.info("admission latency (submit -> first token): "
                      "p50 %.3fs p95 %.3fs mean %.3fs over %d requests "

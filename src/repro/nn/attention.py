@@ -566,6 +566,65 @@ def apply_prefill_chunked(params, x, pool, page_rows, pos, num_valid,
                               compute_dtype)
 
 
+def apply_ragged(params, x, pool, page_rows, row_start, seq_lens,
+                 cfg: AttnConfig, quant: QuantConfig,
+                 compute_dtype=jnp.bfloat16, page_fmts=None,
+                 mixed_fmts=None):
+    """One ragged engine step: x (R, W, d_model), row_start/seq_lens (R,).
+
+    The one-dispatch generalization of decode, verify, AND chunked
+    prefill: every row feeds ``W`` token columns at absolute positions
+    ``row_start .. row_start + W - 1``, of which ``seq_lens - row_start``
+    are real this step — 1 for a plain decode row, 1 + K for a
+    speculative verify window, up to W for an in-flight prefill chunk.
+    Unlike :func:`apply_verify_paged` there is NO host-side ``.at[].set``
+    cache write: the new rows' K/V ride into
+    :func:`~repro.kernels.mx_attention_ragged_fused` wide and are
+    quantized + merged into the row's pages inside the kernel (aliased
+    pool outputs), so the whole step is one device dispatch and the
+    per-token write stops round-tripping through HBM.
+
+    Padding columns (past ``seq_lens``) project garbage the kernel
+    clamps onto the last real position; their outputs are ignored and
+    their K/V rows are excluded from the page merge, so real rows are
+    bit-identical to the split decode/verify/prefill paths (shared
+    ``_project_decode_qkv`` / ``_quantize_rows`` math, same page-walk
+    accumulation order).
+
+    Fused-MX-only: the ragged step exists to fuse the kernel page walk
+    with the in-kernel write, so there is no einsum/wide-pool fallback —
+    the engine falls back to ``step_mode="split"`` for those configs.
+    ``page_rows`` may contain negative entries; the kernel routes them
+    to the pool's reserved trash page (see the kernel's contract).
+    """
+    if cfg.decode_kernel != "fused" or "k_elems" not in pool:
+        raise ValueError(
+            "apply_ragged requires the fused MX decode kernel over an "
+            "MX-quantized page pool (use step_mode='split' otherwise)")
+    from repro.kernels import mx_attention_ragged_fused
+
+    r, w, _ = x.shape
+    h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    row_start = jnp.asarray(row_start, jnp.int32)
+    posv = row_start[:, None] + jnp.arange(w, dtype=jnp.int32)[None]
+    q, k, v = _project_decode_qkv(params, x, posv, cfg, quant,
+                                  compute_dtype)
+    qk = q.reshape(r, w, kvh, h // kvh, d).transpose(0, 2, 1, 3, 4)
+    out, (ke, ks, ve, vs) = mx_attention_ragged_fused(
+        qk, k, v, pool["k_elems"], pool["k_scales"], pool["v_elems"],
+        pool["v_scales"], page_rows, row_start,
+        jnp.asarray(seq_lens, jnp.int32),
+        fmt_name=quant.fmt, block_size=min(quant.block_size, d),
+        softcap=cfg.softcap, window=cfg.window,
+        page_fmts=page_fmts, mixed_fmts=mixed_fmts)
+    pool = dict(pool, k_elems=ke, k_scales=ks, v_elems=ve, v_scales=vs)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(
+        r, w, h, d).astype(compute_dtype)
+    y = linear.apply(params["wo"], out.reshape(r, w, h * d), quant,
+                     compute_dtype, tp_on="in")
+    return y, pool
+
+
 def prefill_cache(params, x, positions, cfg: AttnConfig, quant: QuantConfig,
                   k, v, max_seq: int):
     """Populate a fresh cache from full-sequence K/V (last window if ring)."""

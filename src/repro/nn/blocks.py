@@ -291,6 +291,31 @@ def apply_prefill_chunked(params, x, cache, page_rows, pos, num_valid,
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
+def apply_ragged_step(params, x, cache, page_rows, row_start, seq_lens,
+                      bd: BlockDef, cfg: ModelConfig, page_fmts=None,
+                      mixed_fmts=None):
+    """One ragged engine step: x (R, W, d_model), row_start/seq_lens (R,).
+
+    Decode rows, speculative verify windows, and in-flight prefill
+    chunks share ONE fused dispatch (see ``attention.apply_ragged``).
+    Attention-only, for the union of the reasons the verify and chunked
+    paths it subsumes are: recurrent state has neither a position axis
+    to roll rejected drafts back through nor pages for a chunk to
+    resume from.
+    """
+    if bd.mixer != "attn":
+        raise NotImplementedError(
+            f"the ragged engine step requires attention mixers, got "
+            f"{bd.mixer!r} (the engine falls back to step_mode='split')")
+    quant, dt = cfg.quant, cfg.compute_dtype
+    h = rmsnorm_apply(params["norm_mixer"], x, cfg.norm_eps)
+    h, cache = attention.apply_ragged(
+        params["mixer"], h, cache, page_rows, row_start, seq_lens,
+        _attn_cfg(cfg, bd), quant, dt, page_fmts=page_fmts,
+        mixed_fmts=mixed_fmts)
+    return _decode_tail(params, x, h, bd, cfg), cache
+
+
 def _attn_prefill_qkv(mixer_params, h, positions, acfg, quant, dt):
     """Shared prefill prologue: QKV projection + RoPE at ``positions``.
 

@@ -357,6 +357,83 @@ def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     return logits, cache
 
 
+def ragged_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
+                      row_start, seq_lens, logit_idx, num_logits: int = 1,
+                      page_fmts=None, mixed_fmts=None):
+    """One-dispatch ragged engine step: tokens (R, W), page_rows (R, P),
+    row_start (R,) first new-token position per row, seq_lens (R,) =
+    row_start + n_new, logit_idx (R,) first row whose logits to return,
+    num_logits static count of logit rows gathered per row.
+
+    The single entry point behind ``ServeConfig.step_mode="ragged"``:
+    decode rows (n_new == 1), verify windows (n_new == 1 + K) and
+    prefill chunks (n_new up to W) coexist in one batch, so a steady
+    mixed step issues ONE device dispatch per layer-stack traversal
+    instead of decode + verify + prefill + K/V-write calls. Each row's
+    new K/V is quantize-written into its pages inside the fused kernel
+    (``kernels.mx_attention_ragged_fused``) — no ``.at[].set`` HBM
+    round-trip anywhere on this path. Rows shorter than W clamp their
+    padding queries onto the last real position; their outputs are
+    garbage duplicates the host never reads. Inactive rows
+    (row_start 0, seq_len 1, page_rows all -1) write only the pool's
+    reserved trash page.
+
+    Returns (logits (R, num_logits, V), new_cache). Logit rows are
+    gathered pre-final-norm at ``logit_idx .. logit_idx + num_logits - 1``
+    clamped to the last real row — decode/prefill-final rows use row 0 /
+    the last prompt row, verify rows all 1 + K draft rows. Shapes are
+    fixed by (R, W, P, num_logits), so one jitted trace covers every
+    batch composition. Attention-only models (see
+    ``blocks.apply_ragged_step``).
+    """
+    x = _embed_inputs(params, cfg, tokens)
+    r = x.shape[0]
+    cache = dict(cache)
+    for j, bd in enumerate(cfg.prologue):
+        x, cache[f"prologue{j}"] = blocks.apply_ragged_step(
+            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
+            row_start, seq_lens, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        new = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = blocks.apply_ragged_step(gparams[f"block{i}"], x,
+                                            gcache[i], page_rows, row_start,
+                                            seq_lens, bd, cfg,
+                                            page_fmts=page_fmts,
+                                            mixed_fmts=mixed_fmts)
+            new.append(c)
+        return x, tuple(new)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        x, cache[f"epilogue{j}"] = blocks.apply_ragged_step(
+            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
+            row_start, seq_lens, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts)
+    # gather the requested rows BEFORE the final norm + lm head (both are
+    # row-independent, so this is bit-identical to slicing afterwards);
+    # out-of-range gather rows clamp onto the row's last real token, whose
+    # duplicate logits the host ignores
+    last = jnp.maximum(seq_lens - row_start - 1, 0)[:, None]
+    idx = jnp.clip(jnp.asarray(logit_idx, jnp.int32)[:, None]
+                   + jnp.arange(num_logits, dtype=jnp.int32)[None, :],
+                   0, last)
+    x = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx[:, :, None], (r, num_logits, x.shape[-1])),
+        axis=1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(r, num_logits, cfg.num_codebooks,
+                                cfg.vocab_size)
+    return logits, cache
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             max_seq: Optional[int] = None):
     """Process the prompt, build caches. Returns (last-token logits, cache)."""

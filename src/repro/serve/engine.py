@@ -206,6 +206,17 @@ class ServeConfig:
     # before it gives up on sharing and prefills independently (a
     # preempted or budget-starved leader must not starve followers)
     max_deferrals: int = 8
+    # engine step assembly: "ragged" (default) packs every decode-ready
+    # sequence's pending token (+ drafts under speculative decoding) and
+    # one prompt chunk per prefilling sequence into ONE fused Pallas
+    # dispatch per step — attention, the in-kernel quantize-write of each
+    # row's new K/V, sampling and draft verification all ride the single
+    # call, so a steady mixed batch costs exactly one device dispatch.
+    # "split" keeps the separate decode / verify / prefill-chunk / K/V
+    # write dispatches as the validated oracle. Ragged requires the fused
+    # decode kernel, a quantized (MX) KV cache and attention-only mixers;
+    # unsupported configs fall back to split automatically.
+    step_mode: str = "ragged"
 
 
 def _sample(logits, key, temperature: float):
@@ -331,6 +342,28 @@ class ContinuousBatchingEngine:
                 // serve_cfg.prefill_chunk)
         if serve_cfg.prefill_trace_cache < 1:
             raise ValueError("prefill_trace_cache must be >= 1")
+        if serve_cfg.step_mode not in ("ragged", "split"):
+            raise ValueError(
+                f"unknown step_mode {serve_cfg.step_mode!r} "
+                "(expected 'ragged' or 'split')")
+        # the one-dispatch ragged step needs every row to run the fused
+        # quantize-into-pages attention path: attention-only mixers, the
+        # fused decode kernel, an MX-quantized KV pool, and chunked
+        # prefill (monolithic admission would dispatch outside the step)
+        ragged_ok = (mixers <= {"attn"}
+                     and serve_cfg.decode_kernel == "fused"
+                     and cfg.quant.quantize_kv_cache
+                     and self.chunked)
+        self.ragged = serve_cfg.step_mode == "ragged" and ragged_ok
+        if serve_cfg.step_mode == "ragged" and not self.ragged:
+            log.info("ragged step disabled: needs attention-only mixers, "
+                     "decode_kernel='fused', a quantized KV cache and "
+                     "chunked prefill; using split dispatches")
+        # the ragged kernel routes inactive rows' writes to a reserved
+        # trash page (page-table entries of -1 map to the pool's last
+        # physical page in-kernel), so the physical pool carries one page
+        # the scheduler never hands out
+        self._trash_pages = 1 if self.ragged else 0
         # tiered mixed-format pool: num_pages is reinterpreted as the
         # fp8-equivalent byte budget (unit-metered); the physical pool
         # over-provisions 2x so repacked (narrower) pages buy residency
@@ -354,8 +387,8 @@ class ContinuousBatchingEngine:
             max_deferrals=serve_cfg.max_deferrals,
             unit_budget=unit_budget, track_allocs=self.tiered)
         self.cache = model.init_paged_cache(
-            cfg, serve_cfg.max_slots, self.num_pages, ps,
-            tiered=self.tiered)
+            cfg, serve_cfg.max_slots, self.num_pages + self._trash_pages,
+            ps, tiered=self.tiered)
         # donate the cache pytree: without donation every decode step /
         # install / restore copies the whole multi-layer page pool, which
         # would cancel the paged-cache footprint win. CPU has no donation
@@ -442,6 +475,43 @@ class ContinuousBatchingEngine:
                 model.prefill_chunk_paged(
                     p, self.cfg_decode, c, toks, rows, pos, nv, idx),
                 donate_argnums=() if cpu else (1,))
+        # the ragged step's single jitted trace: fixed (max_slots, W)
+        # tokens — W wide enough for one prefill chunk and one verify
+        # window — with per-row (row_start, seq_lens, logit_idx) scalars,
+        # so EVERY batch composition (decode-only, decode+verify,
+        # decode+prefill, all three) reuses the one compiled executable.
+        # Sampling always runs on each row's first gathered logits row
+        # (decode's next token / a prompt-final chunk's first token);
+        # draft verification additionally runs when speculative decoding
+        # is on. The host picks per row by mode; unused lanes are
+        # discarded exactly like inactive slots' logits always were.
+        if self.ragged:
+            self._ragged_k = (serve_cfg.num_draft_tokens
+                              if self.spec_enabled else 0)
+            self._ragged_width = max(
+                1 + self._ragged_k,
+                serve_cfg.prefill_chunk if self.chunked else 1)
+            nl = 1 + self._ragged_k
+            rk = self._ragged_k
+
+            def _ragged_step_fn(p, c, tok, rows, start, lens, lidx, temps,
+                                tps, tks, seeds, ctrs, fmts=None):
+                kw = ({"page_fmts": fmts, "mixed_fmts": mf}
+                      if fmts is not None else {})
+                logits, c = model.ragged_step_paged(
+                    p, self.cfg_decode, c, tok, rows, start, lens, lidx,
+                    num_logits=nl, **kw)
+                toks = sampling.sample(logits[:, 0], temps, tps, tks,
+                                       seeds, ctrs)
+                if rk:
+                    n_emit, emitted = sampling.verify_rejection(
+                        logits, tok[:, 1:1 + rk], temps, tps, tks, seeds,
+                        ctrs)
+                    return toks, n_emit, emitted, c
+                return toks, c
+
+            self._ragged_fn = jax.jit(_ragged_step_fn,
+                                      donate_argnums=() if cpu else (1,))
         self._key = jax.random.PRNGKey(0)
         # requests that don't carry SamplingParams sample with these
         self._default_sampling = SamplingParams(
@@ -453,6 +523,17 @@ class ContinuousBatchingEngine:
         self.overload = OverloadController(OverloadConfig(
             slo_ms=serve_cfg.slo_ms, max_queue=serve_cfg.max_queue))
         self.steps = 0
+        # device-dispatch accounting: every jitted call an engine step
+        # issues lands in one bucket, so the ragged step's whole claim —
+        # dispatches_per_mixed_step == 1 — is measured, never asserted
+        self.dispatch_counts = {"decode": 0, "verify": 0, "prefill": 0,
+                                "ragged": 0, "write": 0, "repack": 0}
+        self.dispatches_last_step = 0
+        self._step_dispatches = 0
+        self.mixed_steps = 0  # steps doing decode AND prefill work
+        self.mixed_step_dispatches = 0
+        self._step_had_prefill = False
+        self._step_had_decode = False
         self.prompt_tokens = 0  # total prompt tokens admitted
         self.prefill_tokens = 0  # prompt tokens actually computed
         self.prefill_chunks = 0  # per-sequence chunks processed
@@ -477,11 +558,13 @@ class ContinuousBatchingEngine:
         self._tick = 0  # advances every step(); drives page ages
         if self.tiered:
             self._base_fmt_id = FORMAT_IDS[cfg.quant.fmt]
-            self.page_fmts = np.full((self.num_pages,), self._base_fmt_id,
-                                     np.int32)
+            self.page_fmts = np.full(
+                (self.num_pages + self._trash_pages,), self._base_fmt_id,
+                np.int32)
             self._page_fmts_dev = jnp.asarray(self.page_fmts)
             self._fmts_dirty = False
-            self._last_write = np.zeros((self.num_pages,), np.int64)
+            self._last_write = np.zeros(
+                (self.num_pages + self._trash_pages,), np.int64)
             # swap snapshots preserve raw page bytes, so the pages'
             # format ids must survive the free/realloc cycle with them
             self._swap_fmts: Dict[int, list] = {}
@@ -583,6 +666,12 @@ class ContinuousBatchingEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _count_dispatch(self, kind: str, n: int = 1) -> None:
+        """Record ``n`` device dispatches of ``kind`` against the current
+        engine step (see ``dispatch_counts`` / ``cache_stats``)."""
+        self.dispatch_counts[kind] += n
+        self._step_dispatches += n
+
     def _record_first_token(self, req_id: int) -> None:
         """Admission-latency sample: submit() -> first sampled token."""
         t0 = self._submit_time.pop(req_id, None)
@@ -632,6 +721,7 @@ class ContinuousBatchingEngine:
             sp = self._req_sampling(seq.req)
             temps[i], tps[i], tks[i] = sp.temperature, sp.top_p, sp.top_k
             seeds[i] = seq.req.seed
+        self._count_dispatch("prefill")
         return np.asarray(self._sample_fn(
             logits, jnp.asarray(temps), jnp.asarray(tps),
             jnp.asarray(tks), jnp.asarray(seeds),
@@ -734,6 +824,7 @@ class ContinuousBatchingEngine:
                 jnp.asarray(fmts, jnp.int32),
                 jnp.asarray(len(group), jnp.int32))
             self.repack_dispatches += 1
+            self._count_dispatch("repack")
             for pid in group:
                 self._set_page_fmt(pid, dst_fmt)
             self.repacked_pages += len(group)
@@ -810,6 +901,7 @@ class ContinuousBatchingEngine:
                         jnp.asarray(seq.slot, jnp.int32),
                         jnp.asarray([seq.pages[i] for i in owned_idx],
                                     jnp.int32))
+                    self._count_dispatch("write")
                 if self.tiered:
                     # the snapshot restored the pages' raw bytes, narrow
                     # encodings included — re-apply the format ids they
@@ -848,6 +940,7 @@ class ContinuousBatchingEngine:
                         self.cache = self._copy_page(
                             self.cache, jnp.asarray(old, jnp.int32),
                             jnp.asarray(new, jnp.int32))
+                        self._count_dispatch("write")
                         sched.pool.free([old])
                         seq.pages[n_full] = new
                         sched.cow_copies += 1
@@ -859,6 +952,7 @@ class ContinuousBatchingEngine:
                         self.params, self.cache,
                         jnp.asarray(tail, jnp.int32)[None],
                         jnp.asarray(seq.pages[:n_gather], jnp.int32))
+                self._count_dispatch("prefill")
                 self.prefill_tokens += len(tail)
                 if valid:
                     install = self._lru_trace(
@@ -880,13 +974,16 @@ class ContinuousBatchingEngine:
                         self.cache, pfcache,
                         jnp.asarray(seq.slot, jnp.int32),
                         jnp.asarray(seq.pages[n_full:], jnp.int32))
+                self._count_dispatch("write")
             else:
                 logits, pfcache = self._prefill_for(len(prompt))(
                     self.params, jnp.asarray(prompt, jnp.int32)[None])
+                self._count_dispatch("prefill")
                 self.prefill_tokens += len(prompt)
                 self.cache = self._install(
                     self.cache, pfcache, jnp.asarray(seq.slot, jnp.int32),
                     jnp.asarray(seq.pages, jnp.int32))
+                self._count_dispatch("write")
             sched.register_prefix(seq)
             tok = int(self._sample_prefill_rows([seq], logits[:, -1])[0])
             self._record_first_token(seq.req.id)
@@ -958,6 +1055,8 @@ class ContinuousBatchingEngine:
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(rows), jnp.asarray(starts), jnp.asarray(reals),
             jnp.asarray(reals - 1), *args)
+        self._count_dispatch("prefill")
+        self._step_had_prefill = True
         self.prefill_tokens += int(reals.sum())
         self.prefill_chunks += bsz
         self.prefill_dispatches += 1
@@ -986,6 +1085,7 @@ class ContinuousBatchingEngine:
             snapshot = self._extract(
                 self.cache, jnp.asarray(victim.slot, jnp.int32),
                 jnp.asarray(owned_ids, jnp.int32))
+            self._count_dispatch("write")
         if self.tiered:
             # snapshots carry raw page bytes, so the element format of
             # each owned page must travel with them — restore re-applies
@@ -1017,6 +1117,7 @@ class ContinuousBatchingEngine:
             extra = self._extract(
                 self.cache, jnp.asarray(0, jnp.int32),
                 jnp.asarray([pages[i] for i in shared_idx], jnp.int32))
+            self._count_dispatch("write")
             req.swap = (kv_cache.merge_snapshots(snapshot, extra),
                         owned_idx + shared_idx, pages, pos, cached,
                         prefill_pos)
@@ -1095,6 +1196,7 @@ class ContinuousBatchingEngine:
                     self.cache = self._copy_page(
                         self.cache, jnp.asarray(pid, jnp.int32),
                         jnp.asarray(new, jnp.int32))
+                    self._count_dispatch("write")
                     sched.pool.free([pid])
                     seq.pages[wp] = new
                     sched.cow_copies += 1
@@ -1119,7 +1221,22 @@ class ContinuousBatchingEngine:
     def step(self) -> bool:
         """Admit what fits, advance prefill chunks under the token
         budget, run one decode (or speculative verify) step over the
-        decode-ready slots. Returns True if any work remains afterwards."""
+        decode-ready slots — as ONE ragged dispatch by default
+        (``step_mode="ragged"``), or as the split decode / verify /
+        prefill dispatch sequence (``"split"``, the validated oracle).
+        Returns True if any work remains afterwards."""
+        self._step_dispatches = 0
+        self._step_had_prefill = False
+        self._step_had_decode = False
+        try:
+            return self._step_inner()
+        finally:
+            self.dispatches_last_step = self._step_dispatches
+            if self._step_had_decode and self._step_had_prefill:
+                self.mixed_steps += 1
+                self.mixed_step_dispatches += self._step_dispatches
+
+    def _step_inner(self) -> bool:
         sched = self.scheduler
         self._tick += 1
         self._admit()
@@ -1130,6 +1247,10 @@ class ContinuousBatchingEngine:
                 if sched.queue:
                     raise RuntimeError("scheduler stalled with queued work")
                 return sched.has_work
+        if self.ragged:
+            self._run_repack()
+            self._ragged_step()
+            return sched.has_work
         self._run_prefill_chunks()
         self._run_repack()
         if not sched.decode_ready():
@@ -1146,6 +1267,8 @@ class ContinuousBatchingEngine:
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(page_rows), jnp.asarray(pos),
             *self._slot_sampling(act), *args)
+        self._count_dispatch("decode")
+        self._step_had_decode = True
         toks = np.asarray(toks_dev)
         self.steps += 1
         for seq in act:
@@ -1153,6 +1276,112 @@ class ContinuousBatchingEngine:
             sched.record_token(seq, int(toks[seq.slot]),
                                eos_id=self.serve_cfg.eos_id)
         return sched.has_work
+
+    def _ragged_step(self) -> None:
+        """One single-dispatch ragged engine step.
+
+        Every decode-ready sequence contributes its pending token (plus K
+        drafter proposals under speculative decoding) and every prefilling
+        sequence contributes its next prompt chunk; the packed
+        (max_slots, W) row batch runs through ONE jitted call of
+        ``model.ragged_step_paged`` — attention over the paged MX cache,
+        the in-kernel quantize-write of every row's new K/V (no
+        ``.at[].set`` round-trip anywhere), next-token sampling and draft
+        verification all inside the dispatch. Token streams match the
+        split path bit-for-bit: each row runs the same projection / RoPE
+        / quantize / flash math its split counterpart ran, and sampling
+        keys are (request seed, stream index) in both modes. Unlike the
+        split path's budgeted round-robin, every prefilling sequence
+        advances one chunk per step — the per-step prefill cost is
+        bounded by the batch width instead of ``prefill_token_budget``.
+        """
+        sched = self.scheduler
+        k = self._ragged_k
+        self._ensure_pages(1 + k)
+        if self.tiered:
+            self._drain_allocs()
+            ps = self.serve_cfg.page_size
+            for seq in sched.prefilling():
+                st = seq.prefill_pos
+                real = min(self.serve_cfg.prefill_chunk,
+                           len(seq.req.prompt) - st)
+                if real > 0:
+                    self._mark_write(
+                        seq.pages[st // ps: (st + real - 1) // ps + 1])
+        (tokens, row_start, seq_lens, logit_idx, page_rows, modes,
+         decode, prefill) = sched.assemble_ragged(self._ragged_width,
+                                                  extra_tokens=k)
+        if not decode and not prefill:
+            return
+        if k:
+            for seq in decode:
+                history = np.concatenate(
+                    [seq.req.prompt,
+                     np.asarray(seq.req.generated, np.int32)])
+                drafts = np.asarray(self.drafter.propose(history, k),
+                                    np.int32)
+                if drafts.shape != (k,):
+                    raise ValueError(
+                        f"drafter returned shape {drafts.shape}, "
+                        f"wanted ({k},)")
+                tokens[seq.slot, 1:1 + k] = drafts
+        # prefill-final rows sample at stream index 0 (len(generated) is
+        # 0), decode/verify rows at their next index — one parameter
+        # vector covers every mode
+        samp = self._slot_sampling(decode + [t[0] for t in prefill])
+        args = (self._sync_fmts(),) if self.tiered else ()
+        out = self._ragged_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(page_rows), jnp.asarray(row_start),
+            jnp.asarray(seq_lens), jnp.asarray(logit_idx), *samp, *args)
+        self._count_dispatch("ragged")
+        if k:
+            toks_dev, n_emit_dev, emitted_dev, self.cache = out
+            n_emit = np.asarray(n_emit_dev)
+            emitted = np.asarray(emitted_dev)
+        else:
+            toks_dev, self.cache = out
+        toks = np.asarray(toks_dev)
+        if decode:
+            self.steps += 1
+            self._step_had_decode = True
+        if prefill:
+            self._step_had_prefill = True
+            self.prefill_chunks += len(prefill)
+            self.prefill_tokens += int(sum(t[2] for t in prefill))
+            self.prefill_dispatches += 1
+        # decode / verify rows: the advance-then-record pairing of the
+        # split loops, EOS and max_new recycling the slot the same step
+        if k:
+            if decode:
+                self.spec_steps += 1
+            for seq in decode:
+                cnt = int(n_emit[seq.slot])
+                self.spec_seq_steps += 1
+                self.drafted_tokens += k
+                self.accepted_tokens += cnt - 1
+                for tok in emitted[seq.slot, :cnt]:
+                    sched.advance(seq)
+                    self.emitted_tokens += 1
+                    if not sched.record_token(
+                            seq, int(tok), eos_id=self.serve_cfg.eos_id):
+                        break
+        else:
+            for seq in decode:
+                sched.advance(seq)
+                sched.record_token(seq, int(toks[seq.slot]),
+                                   eos_id=self.serve_cfg.eos_id)
+        # prefill rows: the chunk's K/V already landed in-dispatch; a
+        # prompt-final chunk samples its request's first token from its
+        # own logits row and flips the sequence to decoding
+        for seq, st, real, final in prefill:
+            seq.pos = st + real
+            seq.prefill_pos = None if final else st + real
+            if final:
+                sched.register_prefix(seq)
+                self._record_first_token(seq.req.id)
+                sched.record_token(seq, int(toks[seq.slot]),
+                                   eos_id=self.serve_cfg.eos_id)
 
     def _spec_step(self) -> None:
         """One speculative draft + batched verify + rollback step.
@@ -1192,6 +1421,8 @@ class ContinuousBatchingEngine:
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(page_rows), jnp.asarray(pos),
             *self._slot_sampling(act), *args)
+        self._count_dispatch("verify")
+        self._step_had_decode = True
         n_emit = np.asarray(n_emit_dev)
         emitted = np.asarray(emitted_dev)
         self.steps += 1
@@ -1374,8 +1605,9 @@ class ContinuousBatchingEngine:
         return out
 
     def cache_stats(self) -> Dict[str, float]:
-        """Allocation + peak-usage + prefix-sharing stats."""
-        page_bytes = kv_cache.pool_page_nbytes(self.cache, self.num_pages)
+        """Allocation + peak-usage + prefix-sharing + dispatch stats."""
+        page_bytes = kv_cache.pool_page_nbytes(
+            self.cache, self.num_pages + self._trash_pages)
         sched = self.scheduler
         stats = {
             "allocated_bytes": kv_cache.cache_nbytes(self.cache),
@@ -1404,6 +1636,22 @@ class ContinuousBatchingEngine:
             "prefill_traces": (len(self._prefill_fns)
                                + len(self._prefill_tail_fns)),
         }
+        # device-dispatch accounting: the ragged step's claim is
+        # dispatches_per_mixed_step == 1 — every step that does decode
+        # AND prefill work issues exactly one jitted call
+        for kind, n in self.dispatch_counts.items():
+            stats[f"dispatches_{kind}"] = n
+        total_dispatches = sum(self.dispatch_counts.values())
+        stats.update({
+            "dispatches_total": total_dispatches,
+            "dispatches_last_step": self.dispatches_last_step,
+            "dispatches_per_step": (total_dispatches / self.steps
+                                    if self.steps else 0.0),
+            "mixed_steps": self.mixed_steps,
+            "dispatches_per_mixed_step": (
+                self.mixed_step_dispatches / self.mixed_steps
+                if self.mixed_steps else 0.0),
+        })
         if self.tiered:
             pool = sched.pool
             for fmt in self._mixed_fmts:

@@ -528,3 +528,75 @@ class Scheduler:
             self.resident_at_peak = (resident if self.resident_at_peak == 0
                                      else min(self.resident_at_peak, resident))
         return tokens, pos, page_rows, act
+
+    def assemble_ragged(self, width: int, extra_tokens: int = 0):
+        """One packed ragged row batch for the single-dispatch engine step.
+
+        Every active slot becomes one row of a (NS, width) token batch:
+        decode-ready sequences contribute their pending token (plus
+        ``extra_tokens`` draft columns the engine fills for speculative
+        verify), sequences mid chunked-prefill contribute their next
+        prompt chunk. Returns (tokens (NS, W), row_start (NS,), seq_lens
+        (NS,), logit_idx (NS,), page_rows (NS, P), modes (NS,), decode,
+        prefill):
+
+          * ``row_start[s]`` — cache position of row s's first new token
+          * ``seq_lens[s]`` — ``row_start + n_new`` (1 for inactive rows,
+            whose pages are all -1 so the kernel's write lands on the
+            pool's reserved trash page)
+          * ``logit_idx[s]`` — first new-token row whose logits the host
+            reads (0 for decode/verify, the last real row for a
+            prompt-final chunk)
+          * ``modes[s]`` — 0 inactive, 1 decode/verify, 2 prefill chunk
+          * ``decode`` — the decode-ready ActiveSeqs (slot order)
+          * ``prefill`` — ``[(seq, start, real, final)]``, one chunk per
+            prefilling sequence (oldest first): ``real`` valid prompt
+            tokens from position ``start``; ``final`` marks the chunk
+            whose last row's logits sample the first generated token
+
+        Shapes are static per (width, extra_tokens), so ONE jitted trace
+        of the ragged step covers every decode / verify / prefill batch
+        composition the engine can assemble.
+        """
+        ns, pps = self.max_slots, self.pages_per_slot
+        tokens = np.zeros((ns, width), np.int32)
+        row_start = np.zeros((ns,), np.int32)
+        seq_lens = np.ones((ns,), np.int32)
+        logit_idx = np.zeros((ns,), np.int32)
+        modes = np.zeros((ns,), np.int32)
+        page_rows = np.full((ns, pps), -1, np.int32)
+        decode = self.decode_ready()
+        for seq in decode:
+            assert seq.req.generated, "active sequence with no pending token"
+            tokens[seq.slot, 0] = seq.req.generated[-1]
+            row_start[seq.slot] = seq.pos
+            seq_lens[seq.slot] = seq.pos + 1 + extra_tokens
+            modes[seq.slot] = 1
+            page_rows[seq.slot, : len(seq.pages)] = seq.pages
+        prefill = []
+        chunk = min(self.prefill_chunk, width) if self.prefill_chunk else 0
+        for seq in self.prefilling():
+            st = seq.prefill_pos
+            real = min(chunk, len(seq.req.prompt) - st)
+            if real <= 0:
+                continue
+            tokens[seq.slot, :real] = seq.req.prompt[st:st + real]
+            row_start[seq.slot] = st
+            seq_lens[seq.slot] = st + real
+            final = st + real == len(seq.req.prompt)
+            logit_idx[seq.slot] = real - 1 if final else 0
+            modes[seq.slot] = 2
+            page_rows[seq.slot, : len(seq.pages)] = seq.pages
+            prefill.append((seq, st, real, final))
+        # mirror assemble()'s peak-step sampling so bytes/token stats stay
+        # comparable across step modes
+        resident = int(sum(s.pos + (1 if s.prefill_pos is None else 0)
+                           for s in self.active()))
+        if self.pool.pages_in_use > self.peak_pages:
+            self.peak_pages = self.pool.pages_in_use
+            self.resident_at_peak = resident
+        elif self.pool.pages_in_use == self.peak_pages:
+            self.resident_at_peak = (resident if self.resident_at_peak == 0
+                                     else min(self.resident_at_peak, resident))
+        return (tokens, row_start, seq_lens, logit_idx, page_rows, modes,
+                decode, prefill)
