@@ -12,7 +12,8 @@ import traceback
 from . import (block_size_sweep, common, decode_attention, e2e_step,
                emulation_breakdown, format_comparison, prefill,
                ragged_step, serve_overload, serve_prefix, serve_throughput,
-               spec_decode, speedup, throughput_sweep, tiered_kv)
+               sharded_step, spec_decode, speedup, throughput_sweep,
+               tiered_kv)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -29,6 +30,7 @@ SUITES = [
     ("tiered_kv", tiered_kv.run),
     ("serve_overload", serve_overload.run),
     ("ragged_step", ragged_step.run),
+    ("sharded_step", sharded_step.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -42,6 +44,7 @@ _JSON_FILES = {
     "BENCH_tiered.json": ("tiered_kv",),
     "BENCH_overload.json": ("serve_overload",),
     "BENCH_ragged.json": ("ragged_step",),
+    "BENCH_sharded.json": ("sharded_step",),
 }
 
 

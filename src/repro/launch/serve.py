@@ -181,6 +181,16 @@ def main(argv=None):
                          "(the validated oracle). Ragged needs the fused "
                          "kernel + a quantized KV cache and falls back to "
                          "split otherwise")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="sharded serving: KV-head-parallel ways over a "
+                         "(1, M) device mesh — the page pool and q/k/v "
+                         "projections split along the KV-head axis, wo "
+                         "stays replicated behind the step's one "
+                         "all-gather, tokens stay identical to "
+                         "single-device. Needs M devices (on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=M), the ragged step mode, and "
+                         "num_kv_heads divisible by M. 0 = unsharded")
     ap.add_argument("--spec-decode", action="store_true",
                     help="greedy speculative decoding: draft K tokens per "
                          "step (prompt-lookup n-gram, no second model) and "
@@ -196,6 +206,9 @@ def main(argv=None):
     if args.serve and args.engine != "continuous":
         ap.error("--serve requires --engine continuous (the async front "
                  "end drives the continuous-batching step loop)")
+    if args.mesh > 1 and args.engine != "continuous":
+        ap.error("--mesh requires --engine continuous (sharding wraps "
+                 "the continuous-batching ragged step)")
     if args.tiered:
         if args.engine != "continuous":
             ap.error("--tiered requires --engine continuous")
@@ -233,6 +246,7 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_token_budget or None,
         step_mode=args.step_mode,
+        mesh_shape=(1, args.mesh) if args.mesh > 1 else None,
         tiered=args.tiered,
         tier_policy=TierPolicy(
             mid_fmt=args.tier_mid_fmt, cold_fmt=args.tier_cold_fmt,
@@ -240,6 +254,13 @@ def main(argv=None):
             repack_pages_per_step=args.tier_repack_pages)
         if args.tiered else None)
     engine = build_engine(cfg, serve_cfg, params, args.engine)
+    if args.mesh > 1:
+        if getattr(engine, "mesh", None) is not None:
+            log.info("sharded serving: %d KV-head shards over a (1, %d) "
+                     "device mesh", engine.tp, args.mesh)
+        else:
+            log.info("sharded serving fell back to single-device "
+                     "(see engine log above for the reason)")
     if args.serve:
         return _run_server(engine, args)
     rng = np.random.default_rng(0)

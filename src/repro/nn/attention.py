@@ -278,12 +278,17 @@ def _project_decode_qkv(params, x, posv, cfg: AttnConfig,
     for a verify chunk. Every op is token-row independent, and keeping
     this (and ``_quantize_kv_token`` / ``_read_cache``) single-sourced is
     what makes continuous-batching and speculative outputs
-    token-identical to the fixed-slot path."""
+    token-identical to the fixed-slot path.
+
+    Head counts are inferred from the projection widths, not the config:
+    inside the sharded serve step (``parallel.ctx.serve_tp_axis``) the
+    wq/wk/wv shards carry only the device's KV-head slice, so the
+    reshape must follow the local width."""
     b, s = x.shape[:2]
-    h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = linear.apply(params["wq"], x, quant, compute_dtype).reshape(b, s, h, d)
-    k = linear.apply(params["wk"], x, quant, compute_dtype).reshape(b, s, kvh, d)
-    v = linear.apply(params["wv"], x, quant, compute_dtype).reshape(b, s, kvh, d)
+    d = cfg.head_dim
+    q = linear.apply(params["wq"], x, quant, compute_dtype).reshape(b, s, -1, d)
+    k = linear.apply(params["wk"], x, quant, compute_dtype).reshape(b, s, -1, d)
+    v = linear.apply(params["wv"], x, quant, compute_dtype).reshape(b, s, -1, d)
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
     return q, k, v
@@ -596,20 +601,39 @@ def apply_ragged(params, x, pool, page_rows, row_start, seq_lens,
     the engine falls back to ``step_mode="split"`` for those configs.
     ``page_rows`` may contain negative entries; the kernel routes them
     to the pool's reserved trash page (see the kernel's contract).
+
+    Inside the engine's KV-head-sharded serve step
+    (``parallel.ctx.serve_tp_axis`` set, i.e. traced under the engine's
+    ``shard_map``) the pool leaves and the wq/wk/wv projections carry
+    only this device's ``KVH / M`` head slice, so the kernel's grid —
+    already ``(R, KVH, P)`` — shards along its KV-head dimension for
+    free. The ONE collective of the whole step happens here: the kernel
+    output is all-gathered over the mesh axis (tiled along the KV-head
+    dim, device order == head order) before the output projection, whose
+    replicated ``wo`` then sees bit-identical full-width operands on
+    every device — which is what keeps the sharded engine
+    token-identical to the single-device one (a sharded-``wo`` psum
+    would split the f32 reduction instead and drift).
     """
     if cfg.decode_kernel != "fused" or "k_elems" not in pool:
         raise ValueError(
             "apply_ragged requires the fused MX decode kernel over an "
             "MX-quantized page pool (use step_mode='split' otherwise)")
     from repro.kernels import mx_attention_ragged_fused
+    from repro.parallel.ctx import serve_tp_axis
 
     r, w, _ = x.shape
-    h, kvh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = cfg.head_dim
     row_start = jnp.asarray(row_start, jnp.int32)
     posv = row_start[:, None] + jnp.arange(w, dtype=jnp.int32)[None]
     q, k, v = _project_decode_qkv(params, x, posv, cfg, quant,
                                   compute_dtype)
-    qk = q.reshape(r, w, kvh, h // kvh, d).transpose(0, 2, 1, 3, 4)
+    # local head counts (== cfg's when unsharded; the device's slice
+    # under serve TP — heads are laid out KV-major, so contiguous q-head
+    # shards align with contiguous KV-head shards)
+    kvh = k.shape[2]
+    g = q.shape[2] // kvh
+    qk = q.reshape(r, w, kvh, g, d).transpose(0, 2, 1, 3, 4)
     out, (ke, ks, ve, vs) = mx_attention_ragged_fused(
         qk, k, v, pool["k_elems"], pool["k_scales"], pool["v_elems"],
         pool["v_scales"], page_rows, row_start,
@@ -618,9 +642,15 @@ def apply_ragged(params, x, pool, page_rows, row_start, seq_lens,
         softcap=cfg.softcap, window=cfg.window,
         page_fmts=page_fmts, mixed_fmts=mixed_fmts)
     pool = dict(pool, k_elems=ke, k_scales=ks, v_elems=ve, v_scales=vs)
-    out = out.transpose(0, 2, 1, 3, 4).reshape(
-        r, w, h, d).astype(compute_dtype)
-    y = linear.apply(params["wo"], out.reshape(r, w, h * d), quant,
+    axis = serve_tp_axis()
+    if axis is not None:
+        # (R, KVH/M, W, G, D) -> (R, KVH, W, G, D): the step's one
+        # collective; per-(row, kv-head) online softmax is independent,
+        # so the gathered tensor is exactly the unsharded kernel output
+        out = jax.lax.all_gather(out, axis, axis=1, tiled=True)
+    out = out.transpose(0, 2, 1, 3, 4)
+    out = out.reshape(r, w, -1).astype(compute_dtype)
+    y = linear.apply(params["wo"], out, quant,
                      compute_dtype, tp_on="in")
     return y, pool
 

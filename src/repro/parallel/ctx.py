@@ -42,6 +42,34 @@ def use_mesh(mesh: Optional[Mesh]):
         _CURRENT_MESH.reset(token)
 
 
+_SERVE_TP_AXIS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_serve_tp_axis", default=None)
+
+
+def serve_tp_axis() -> Optional[str]:
+    """Mesh axis name the serve step is KV-head-sharded over, or None.
+
+    Set only *inside* the body of the engine's ``shard_map``-wrapped step
+    (a trace-time signal, not a runtime one): attention's fused apply
+    paths read it to learn that their K/V pools and q/k/v projections
+    carry only ``KVH / mesh.shape[axis]`` local heads and that the
+    kernel output must be all-gathered over this axis before the
+    (replicated) output projection. Everything outside the serve step —
+    training, the single-device engine, the einsum oracles — sees None
+    and runs unchanged.
+    """
+    return _SERVE_TP_AXIS.get()
+
+
+@contextlib.contextmanager
+def use_serve_tp(axis_name: Optional[str]):
+    token = _SERVE_TP_AXIS.set(axis_name)
+    try:
+        yield
+    finally:
+        _SERVE_TP_AXIS.reset(token)
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=None,
                      axis_names=None):
     """``jax.shard_map`` across JAX versions.

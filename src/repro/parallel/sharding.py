@@ -138,6 +138,46 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def serve_param_specs(params, axis: str = TP_AXIS):
+    """PartitionSpec tree for the KV-head-sharded serve step's params.
+
+    Attention projections are recognized structurally (a dict carrying
+    all of wq/wk/wv/wo — ``attention.init``'s output, whether stacked
+    under a scanned group or not): wq/wk/wv shard their *output* (heads)
+    dim on ``axis`` — heads are laid out KV-major, so a contiguous
+    column shard is exactly the device's KV-head slice — while ``wo``
+    and every other parameter stay replicated.
+
+    This deliberately deviates from ``PARAM_RULES`` (which would also
+    shard ``wo``'s heads input dim): a row-sharded ``wo`` needs a psum
+    that *splits* the f32 contraction across devices, and a split
+    reduction is not bit-identical to the single-device matmul. The
+    serve step instead all-gathers the (small) attention output over
+    the KV-head axis and runs the replicated ``wo`` — the token-identity
+    guarantee the engine tests pin down. Everything outside attention is
+    replicated because it is already per-token work the engine runs in
+    lockstep on each device.
+    """
+    def shard_last(a):
+        return P(*([None] * (a.ndim - 1)), axis)
+
+    def rep(node):
+        return jax.tree_util.tree_map(lambda a: P(), node)
+
+    def walk(node):
+        if isinstance(node, dict):
+            if {"wq", "wk", "wv", "wo"} <= set(node):
+                return {name: (jax.tree_util.tree_map(shard_last, sub)
+                               if name in ("wq", "wk", "wv") else rep(sub))
+                        for name, sub in node.items()}
+            return {key: walk(val) for key, val in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return rep(node)
+
+    return walk(params)
+
+
 def constraint(x, mesh: Mesh, *spec_entries):
     """Hand-placed activation sharding constraint (perf-iteration hook)."""
     return jax.lax.with_sharding_constraint(

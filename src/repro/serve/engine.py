@@ -217,6 +217,18 @@ class ServeConfig:
     # decode kernel, a quantized (MX) KV cache and attention-only mixers;
     # unsupported configs fall back to split automatically.
     step_mode: str = "ragged"
+    # sharded serving: (data, model) device-mesh shape, e.g. (1, 8). The
+    # ragged step then runs KV-head-parallel under shard_map: the page
+    # pool's K/V (+ per-page scale) leaves and the wq/wk/wv projections
+    # are partitioned along the KV-head axis over the "model" axis, page
+    # tables / row metadata / sampling vectors are replicated, and the
+    # ONE collective per step is an all-gather of the attention output
+    # before the (replicated) output projection — so per-device HBM
+    # holds only KVH/M of the pool while token streams stay identical to
+    # the single-device engine. Requires the ragged step (falls back to
+    # unsharded otherwise) and num_kv_heads divisible by the model dim.
+    # None (default) = single-device, no mesh.
+    mesh_shape: Optional[tuple] = None
 
 
 def _sample(logits, key, temperature: float):
@@ -364,6 +376,51 @@ class ContinuousBatchingEngine:
         # physical page in-kernel), so the physical pool carries one page
         # the scheduler never hands out
         self._trash_pages = 1 if self.ragged else 0
+        # sharded serving: KV-head-parallel ragged step over a
+        # (data, model) mesh (see ServeConfig.mesh_shape). Fallback
+        # ladder: a 1x1 mesh or a non-ragged config runs unsharded; an
+        # indivisible KV-head count or missing devices is a hard error
+        # (silent replication there would just waste the machine).
+        self.mesh = None
+        self._tp_axis: Optional[str] = None
+        self.tp = 1
+        if serve_cfg.mesh_shape is not None:
+            shape = tuple(int(s) for s in serve_cfg.mesh_shape)
+            if len(shape) != 2 or any(s < 1 for s in shape):
+                raise ValueError(
+                    f"mesh_shape must be a (data, model) pair of positive "
+                    f"ints, got {serve_cfg.mesh_shape!r}")
+            if shape[0] != 1:
+                raise ValueError(
+                    "sharded serving is KV-head (model) parallel only: "
+                    f"mesh_shape[0] (data) must be 1, got {shape[0]} — "
+                    "data-parallel replicas are a router-level follow-on")
+            ndev = shape[0] * shape[1]
+            if ndev == 1:
+                log.info("mesh_shape %s is a single device; running "
+                         "unsharded", shape)
+            elif not self.ragged:
+                log.info("sharded serving disabled: it requires the ragged "
+                         "step (attention-only mixers, decode_kernel="
+                         "'fused', a quantized KV cache, chunked prefill); "
+                         "running unsharded")
+            else:
+                if cfg.num_kv_heads % shape[1] != 0:
+                    raise ValueError(
+                        f"sharded serving splits KV heads over the model "
+                        f"axis: num_kv_heads={cfg.num_kv_heads} is not "
+                        f"divisible by mesh model dim {shape[1]}")
+                if len(jax.devices()) < ndev:
+                    raise ValueError(
+                        f"mesh_shape {shape} needs {ndev} devices, found "
+                        f"{len(jax.devices())} — set XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count={ndev} "
+                        "before any jax import")
+                from repro.launch.mesh import _make_mesh
+                self.mesh = _make_mesh(shape, ("data", "model"),
+                                       jax.devices()[:ndev])
+                self._tp_axis = "model"
+                self.tp = shape[1]
         # tiered mixed-format pool: num_pages is reinterpreted as the
         # fp8-equivalent byte budget (unit-metered); the physical pool
         # over-provisions 2x so repacked (narrower) pages buy residency
@@ -403,6 +460,20 @@ class ContinuousBatchingEngine:
                 (cfg.quant.fmt, self.tier.mid_fmt, self.tier.cold_fmt)))
         else:
             mf = None
+
+        # sharded placement: the pool's KV-head axis and the attention
+        # projections' head columns land on their mesh shards ONCE, at
+        # init — every step then runs shard-local, no per-step reshards.
+        # wo and everything outside attention stay replicated (see
+        # parallel.sharding.serve_param_specs for why that — not a
+        # sharded-wo psum — is what keeps tokens bit-identical).
+        if self.mesh is not None:
+            from repro.parallel.sharding import serve_param_specs
+            self._param_specs = serve_param_specs(self.params)
+            self._pool_specs = kv_cache.pool_specs(self.cache,
+                                                   self._tp_axis)
+            self.params = self._shard_put(self.params, self._param_specs)
+            self.cache = self._shard_put(self.cache, self._pool_specs)
 
         # sampling happens INSIDE the jitted step, fed per-slot parameter
         # vectors (temperature / top-p / top-k / seed / stream counter):
@@ -510,8 +581,38 @@ class ContinuousBatchingEngine:
                     return toks, n_emit, emitted, c
                 return toks, c
 
-            self._ragged_fn = jax.jit(_ragged_step_fn,
-                                      donate_argnums=() if cpu else (1,))
+            if self.mesh is not None:
+                from jax.sharding import PartitionSpec as P
+
+                from repro.parallel.ctx import shard_map_compat, use_serve_tp
+                axis = self._tp_axis
+
+                def _sharded_step(p, c, *rest):
+                    # trace-time signal: attention.apply_ragged reads it
+                    # to size reshapes by the local head slice and to
+                    # insert the step's one all-gather
+                    with use_serve_tp(axis):
+                        return _ragged_step_fn(p, c, *rest)
+
+                # page tables, row metadata and sampling vectors are
+                # replicated (every device runs the same host schedule
+                # in lockstep); only params' head columns and the pool's
+                # KV-head axis are sharded. Outputs: sampled tokens /
+                # verify results are factually replicated — each device
+                # computed them from the identical post-gather tensor.
+                n_meta = 10 + (1 if self.tiered else 0)
+                out_specs = ((P(), P(), P(), self._pool_specs) if rk
+                             else (P(), self._pool_specs))
+                fn = shard_map_compat(
+                    _sharded_step, mesh=self.mesh,
+                    in_specs=(self._param_specs, self._pool_specs)
+                    + (P(),) * n_meta,
+                    out_specs=out_specs, check_vma=False)
+                self._ragged_fn = jax.jit(
+                    fn, donate_argnums=() if cpu else (1,))
+            else:
+                self._ragged_fn = jax.jit(
+                    _ragged_step_fn, donate_argnums=() if cpu else (1,))
         self._key = jax.random.PRNGKey(0)
         # requests that don't carry SamplingParams sample with these
         self._default_sampling = SamplingParams(
@@ -610,6 +711,20 @@ class ContinuousBatchingEngine:
                 "repack_list_len >= 1")
 
     # -- internals ----------------------------------------------------------
+
+    def _shard_put(self, tree, specs):
+        """Place ``tree`` per a matching PartitionSpec tree on the mesh.
+
+        Flattened with ``flatten_up_to`` so the spec tree's P entries are
+        treated as leaves even on JAX versions where PartitionSpec is
+        itself a pytree container (it subclasses tuple on some)."""
+        from jax.sharding import NamedSharding
+
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        flat_s = treedef.flatten_up_to(specs)
+        placed = [jax.device_put(x, NamedSharding(self.mesh, s))
+                  for x, s in zip(flat, flat_s)]
+        return jax.tree_util.tree_unflatten(treedef, placed)
 
     def _lru_trace(self, store: OrderedDict, key, build):
         """Fetch-or-build a jitted trace with LRU eviction at the cap.
@@ -805,7 +920,20 @@ class ContinuousBatchingEngine:
                     cache = kv_cache._set_block(cache, path, new)
                 return cache
 
-            fn = jax.jit(run, donate_argnums=() if cpu else (0,))
+            run_fn = run
+            if self.mesh is not None:
+                # the repack kernel's grid is (page-list, KVH): with the
+                # pool's KV-head axis sharded it runs shard-local on each
+                # device's head slice — the page ids / formats / count
+                # are replicated, no collective anywhere
+                from jax.sharding import PartitionSpec as P
+
+                from repro.parallel.ctx import shard_map_compat
+                run_fn = shard_map_compat(
+                    run, mesh=self.mesh,
+                    in_specs=(self._pool_specs, P(), P(), P()),
+                    out_specs=self._pool_specs, check_vma=False)
+            fn = jax.jit(run_fn, donate_argnums=() if cpu else (0,))
             self._repack_fns[dst_fmt] = fn
         return fn
 
@@ -1635,6 +1763,9 @@ class ContinuousBatchingEngine:
             # batch size only, bounded by max_slots
             "prefill_traces": (len(self._prefill_fns)
                                + len(self._prefill_tail_fns)),
+            # sharded serving: KV-head shards the pool/projections are
+            # split over (1 = single-device / unsharded fallback)
+            "kv_head_shards": self.tp,
         }
         # device-dispatch accounting: the ragged step's claim is
         # dispatches_per_mixed_step == 1 — every step that does decode

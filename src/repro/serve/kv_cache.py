@@ -435,6 +435,43 @@ def restore_seq(cache, snapshot, slot, page_ids):
 
 
 # ---------------------------------------------------------------------------
+# sharded pools (KV-head-parallel serve step)
+# ---------------------------------------------------------------------------
+
+
+def pool_specs(cache, axis: str):
+    """PartitionSpec pytree sharding every pool leaf's KV-head axis.
+
+    The sharded serve engine partitions each attention layer's page pool
+    along its KV-head dimension — layout ``(NP, PS, KVH, ·)``, grouped
+    ``(G, NP, PS, KVH, ·)``, so the KV-head axis is always ``ndim - 2``.
+    The page axis stays unsharded: every device holds pages
+    ``0..NP`` for *its* head slice, so the host page table is replicated
+    metadata and extract/restore/copy_page stay shard-local gathers
+    under GSPMD. Recurrent state blocks (and anything else that is not a
+    pool) are replicated. Returns a tree with the same structure as
+    ``cache`` whose leaves are ``PartitionSpec``s — usable both as
+    ``shard_map`` in/out specs and (through ``NamedSharding``) as
+    ``device_put`` targets.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    specs = cache
+    for path, blk, _grouped in _iter_blocks(cache):
+        if _is_pool(blk):
+            # no trailing None past the sharded axis: jit hashes the
+            # canonical (trimmed) form the step's outputs come back
+            # with, and a P(..., axis, None) _shard_put placement would
+            # make the first call a second trace
+            new = {key: P(*([None] * (leaf.ndim - 2)), axis)
+                   for key, leaf in blk.items()}
+        else:
+            new = jax.tree_util.tree_map(lambda leaf: P(), blk)
+        specs = _set_block(specs, path, new)
+    return specs
+
+
+# ---------------------------------------------------------------------------
 # byte accounting (benchmark: cache bytes per resident token)
 # ---------------------------------------------------------------------------
 

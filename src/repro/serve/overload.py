@@ -70,13 +70,19 @@ class OverloadConfig:
     cap; None disables it. ``ewma_alpha`` — smoothing for the interval /
     latency estimates (higher = faster reaction). ``hysteresis`` — the
     fraction of the SLO the prediction must fall back under before
-    shedding stops.
+    shedding stops. ``min_retry_after_s`` — floor on every ShedError's
+    ``retry_after_s``: the hard ``max_queue`` cap can fire before any
+    first-token interval was ever observed (cold controller), and the
+    latency model's excess can round to ~0 right at the SLO boundary —
+    either way a literal ``Retry-After: 0`` makes well-behaved clients
+    hot-loop against a full queue.
     """
 
     slo_ms: Optional[float] = None
     max_queue: Optional[int] = None
     ewma_alpha: float = 0.3
     hysteresis: float = 0.85
+    min_retry_after_s: float = 0.05
 
     def validate(self) -> "OverloadConfig":
         if self.slo_ms is not None and self.slo_ms <= 0:
@@ -88,6 +94,10 @@ class OverloadConfig:
             raise ValueError("ewma_alpha must be in (0, 1]")
         if not 0 < self.hysteresis <= 1:
             raise ValueError("hysteresis must be in (0, 1]")
+        if self.min_retry_after_s < 0:
+            raise ValueError(
+                f"min_retry_after_s must be >= 0, "
+                f"got {self.min_retry_after_s}")
         return self
 
 
@@ -139,10 +149,14 @@ class OverloadController:
         cfg = self.cfg
         if cfg.max_queue is not None and queue_depth >= cfg.max_queue:
             self.shed_count += 1
+            # cold controller: the cap can trip before any first-token
+            # interval exists, so the drain-rate estimate is 0 — floor it
+            # (and every hint below) at min_retry_after_s so the client's
+            # Retry-After is never a hot-loop-inducing 0
             interval = self.ewma_interval or 0.0
             raise ShedError(
                 f"queue full ({queue_depth} >= max_queue={cfg.max_queue})",
-                retry_after_s=interval)
+                retry_after_s=max(interval, cfg.min_retry_after_s))
         # the latency model only gates arrivals that would actually wait
         # behind a queue: at depth 0 admission is imminent and the model
         # has nothing but its (possibly stale, measured-under-load) EWMA
@@ -165,7 +179,8 @@ class OverloadController:
                         f"predicted first-token latency "
                         f"{predicted * 1e3:.0f}ms exceeds SLO "
                         f"{cfg.slo_ms:.0f}ms at queue depth {queue_depth}",
-                        retry_after_s=predicted - slo)
+                        retry_after_s=max(predicted - slo,
+                                          cfg.min_retry_after_s))
         self.admitted_count += 1
 
     def stats(self) -> dict:

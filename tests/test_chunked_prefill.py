@@ -538,3 +538,71 @@ def test_same_shape_chunk_dispatch_batches_across_sequences():
     # batching must not fracture the O(1)-trace guarantee: one trace per
     # distinct batch width at most
     assert ch._prefill_chunk._cache_size() <= 2
+
+
+def test_cancel_deferred_follower_holds_no_pages():
+    """Regression (deferred-cancel accounting): a follower deferring
+    behind a mid-prefill leader holds NO pages while queued — its
+    tentative prefix hit is released at deferral time. Cancelling it in
+    that state must be a pure dequeue: no page frees (nothing to free,
+    a double free would corrupt refcounts shared with the leader) and
+    the pool must drain to exactly the prefix tree's holdings."""
+    cfg = _cfg(MXFP8)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        max_seq=48, max_slots=2, page_size=4, prefill_chunk=4,
+        prefix_cache=True, num_pages=24))
+    head = np.arange(1, 25, dtype=np.int32)  # 6 chunks: a slow leader
+    leader = eng.submit(head, 4)
+    eng.step()  # leader admitted, one chunk in: mid-prefill
+    followers = [eng.submit(
+        np.concatenate([head, np.asarray([90 + i], np.int32)]), 4)
+        for i in range(3)]
+    eng.step()  # followers defer against the unregistered shared head
+    sched = eng.scheduler
+    assert sched.deferred_admissions >= 1
+    assert eng.cancel(followers[0])  # cancelled while deferred+queued
+    assert eng.cancel(followers[1])
+    out = eng.run()
+    assert followers[0] not in out and followers[1] not in out
+    # survivors complete, the late follower via a real prefix hit
+    assert out[leader].shape[0] == 24 + 4
+    assert out[followers[2]].shape[0] == 25 + 4
+    assert sched.cancellations == 2
+    assert sched.pool.pages_in_use == len(sched.prefix.pages_held)
+
+
+def test_cancel_churn_with_deferrals_property():
+    """Random cancels over a workload built to defer constantly (every
+    request shares one long unregistered head): whatever mix of states
+    the victims are in — queued-deferred, mid-prefill, decoding — pages
+    drain to the prefix tree's count and every survivor finishes."""
+    cfg = _cfg(MXFP8)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(17)
+    for mode in ("ragged", "split"):
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            max_seq=48, max_slots=2, page_size=4, prefill_chunk=4,
+            prefix_cache=True, num_pages=20, step_mode=mode))
+        head = np.arange(1, 21, dtype=np.int32)
+        ids = [eng.submit(
+            np.concatenate([head[:12 + 4 * (i % 3)],
+                            rng.integers(0, 128, (i % 4,)).astype(np.int32)]),
+            int(rng.integers(3, 7))) for i in range(8)]
+        cancelled, steps = set(), 0
+        while eng.scheduler.has_work and steps < 1000:
+            eng.step()
+            steps += 1
+            if rng.random() < 0.35:
+                victim = int(rng.choice(ids))
+                if victim not in cancelled and eng.cancel(victim):
+                    cancelled.add(victim)
+        out = eng.run()
+        sched = eng.scheduler
+        assert steps < 1000, "churn did not drain"
+        assert sched.cancellations == len(cancelled)
+        assert set(out) == set(ids) - cancelled
+        assert sched.deferred_admissions >= 1, \
+            "workload failed to exercise the deferral path"
+        assert all(s is None for s in sched.slots)
+        assert sched.pool.pages_in_use == len(sched.prefix.pages_held)

@@ -92,10 +92,51 @@ def test_overload_max_queue_is_a_hard_cap():
 
 def test_overload_config_validation():
     for bad in (dict(slo_ms=0), dict(max_queue=-1), dict(ewma_alpha=0),
-                dict(hysteresis=1.5)):
+                dict(hysteresis=1.5), dict(min_retry_after_s=-1.0)):
         with pytest.raises(ValueError):
             OverloadConfig(**bad).validate()
     assert ShedError("x", retry_after_s=-1.0).retry_after_s == 0.0
+
+
+def test_overload_retry_after_never_zero():
+    """A cold controller's max_queue cap has no drain-rate estimate and
+    the SLO branch can overshoot by epsilon — both used to hand clients
+    Retry-After: 0, a reconnect hot loop. Every shed now floors at
+    min_retry_after_s."""
+    now = [0.0]
+    # cold cap: no first-token interval ever observed -> estimate is 0
+    ctl = OverloadController(OverloadConfig(max_queue=1),
+                             clock=lambda: now[0])
+    ctl.admit(0)
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(1)
+    assert ei.value.retry_after_s == pytest.approx(0.05)
+    # warm cap: a real interval beats the floor
+    ctl = OverloadController(OverloadConfig(max_queue=1),
+                             clock=lambda: now[0])
+    ctl.observe_first_token(0.01)
+    now[0] += 0.25
+    ctl.observe_first_token(0.01)
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(5)
+    assert ei.value.retry_after_s == pytest.approx(0.25)
+    # SLO branch at the boundary: predicted - slo ~ 0 -> clamped to floor
+    ctl = OverloadController(OverloadConfig(slo_ms=100),
+                             clock=lambda: now[0])
+    ctl.observe_first_token(0.02)
+    now[0] += 0.01
+    ctl.observe_first_token(0.02)
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(9)  # predicted 110ms, 10ms over -> under the 50ms floor
+    assert ei.value.retry_after_s == pytest.approx(0.05)
+    # and a custom floor propagates
+    ctl = OverloadController(OverloadConfig(max_queue=1,
+                                            min_retry_after_s=2.0),
+                             clock=lambda: now[0])
+    ctl.admit(0)
+    with pytest.raises(ShedError) as ei:
+        ctl.admit(1)
+    assert ei.value.retry_after_s == pytest.approx(2.0)
 
 
 def test_engine_submit_sheds_and_counts(model_and_cfg):
@@ -435,6 +476,43 @@ def test_prefix_snapshot_roundtrip_tiered_formats(model_and_cfg,
     r = e2.submit(p1, 8)
     out2 = e2.run()
     np.testing.assert_array_equal(out2[r], out1[r1])
+
+
+@pytest.mark.parametrize("save_mode,load_mode",
+                         [("ragged", "split"), ("split", "ragged")])
+def test_prefix_snapshot_roundtrip_across_step_modes(model_and_cfg,
+                                                     tmp_path, save_mode,
+                                                     load_mode):
+    """The ragged engine's pool carries one extra trash page (the sink
+    for masked-lane K/V writes) that the split engine's does not. A
+    snapshot is addressed by *listed page*, not pool geometry, so it
+    must round-trip between the two modes — the trash page must neither
+    leak into the snapshot nor shift the importer's page indexing."""
+    params, cfg = model_and_cfg
+    kw = dict(max_seq=32, max_slots=2, page_size=4)
+    e1 = _engine(params, cfg, step_mode=save_mode, **kw)
+    assert e1._trash_pages == (1 if save_mode == "ragged" else 0)
+    p1 = np.arange(1, 13, dtype=np.int32)
+    r1 = e1.submit(p1, 6)
+    e1.submit(np.concatenate([p1[:8], np.arange(50, 58, dtype=np.int32)]),
+              6)
+    out1 = e1.run()
+    path = tmp_path / "xmode.npz"
+    assert e1.save_prefix_cache(path) > 0
+
+    e2 = _engine(params, cfg, step_mode=load_mode, **kw)
+    assert e2.load_prefix_cache(path) > 0
+    st1, _ = _export_pages(e1)
+    st2, pages2 = _export_pages(e2)
+    strip = lambda st: [{k: v for k, v in nd.items() if k != "page"}
+                        for nd in st["nodes"] + st["partials"]]
+    assert strip(st1) == strip(st2)
+    # no imported entry may sit on the importer's trash page
+    assert all(p < e2.num_pages for p in pages2)
+    r = e2.submit(p1, 6)
+    out2 = e2.run()
+    np.testing.assert_array_equal(out2[r], out1[r1])
+    assert e2.cache_stats()["prefix_hit_rate"] > 0
 
 
 def test_prefix_snapshot_rejects_mismatched_geometry(model_and_cfg,

@@ -260,6 +260,41 @@ def test_tiered_aggressive_churn_invariants():
         np.testing.assert_array_equal(a, b)
 
 
+def test_trash_page_outside_tiering_and_census():
+    """The ragged step appends ONE trash page past the schedulable pool
+    (pid == num_pages) as the sink for masked-lane K/V writes. It is
+    never allocated, never ages, never demotes, and never appears in
+    the per-format census — an off-by-one in any geometry consumer
+    (repack scan, stats census, pool bounds) would surface here."""
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    reqs = _churn_reqs(np.random.default_rng(9), n=8)
+    policy = TierPolicy(hot_steps=1, cold_steps=2, repack_pages_per_step=4)
+    _, eng = _serve(params, cfg, reqs, num_pages=14, tiered=True,
+                    tier_policy=policy)
+    assert eng.ragged and eng._trash_pages == 1
+    stats = eng.cache_stats()
+    assert stats["repacked_pages"] > 0
+    # the trash page sits at pid == num_pages (tiering doubles the
+    # schedulable pool first, so num_pages here is the doubled count)
+    trash = eng.num_pages
+    assert len(eng.page_fmts) == eng.num_pages + 1
+    assert int(eng.page_fmts[trash]) == eng._base_fmt_id, \
+        "trash page was demoted/repacked"
+    # it is not schedulable: the pool's bounds stop short of it
+    pool = eng.scheduler.pool
+    with pytest.raises(ValueError, match="unknown page"):
+        pool.ref(trash)
+    # census over schedulable pages only == unit metering
+    assert _census_units(eng) == pool.units_in_use
+    assert sum(stats[f"pages_{f}"] for f in eng._mixed_fmts) == \
+        sum(1 for pid in range(eng.num_pages) if pool.ref(pid) > 0)
+    # pool byte accounting covers the trash page exactly once
+    from repro.serve.kv_cache import pool_page_nbytes
+    assert stats["page_bytes"] == pool_page_nbytes(
+        eng.cache, eng.num_pages + 1)
+
+
 def test_swap_restore_preserves_narrow_page_formats():
     """A sequence whose prompt pages already demoted is preempted and
     restored; generation must continue exactly as if the preemption
