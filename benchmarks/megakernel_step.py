@@ -1,0 +1,278 @@
+"""Layer-fused megakernel step vs the per-layer ragged engine step.
+
+The ragged engine step already collapsed the per-mode dispatches into
+one jitted call — but that call still launches one ``pallas_call`` per
+layer (the pattern scan), and between layers the residual stream plus
+every projection/FFN intermediate round-trips HBM. The megakernel
+(``kernels.mx_megakernel_step``) fuses the entire layer stack into ONE
+``pallas_call`` that carries the residual in VMEM scratch across layer
+grid steps. Three axes:
+
+  * **kernel-count gate (measured, exact)**: the engine's jaxpr audit
+    (``pallas_calls_per_step``, derived from the traced step at the
+    first dispatch — scan trip counts multiplied through) must report
+    exactly 1 for the megakernel engine and exactly L for the
+    per-layer oracle, at L >= 4 — while both engines emit
+    token-identical streams and keep ``dispatches_per_mixed_step == 1``.
+  * **page-visit audit (measured, exact)**: ``debug_visits`` returns an
+    (L, R, KVH, 1) executed-page counter; summed over layers it must
+    equal ``L * ceil(seq_len / PS)`` per (row, kv-head) — the fused
+    stack walks exactly the resident pages of every layer, nothing
+    more, on a mixed decode/verify/chunk batch.
+  * **modeled activation HBM bytes per decoded token (gated >= 1.5x)**:
+    at an 8B-class operating point, the per-layer path materializes
+    the residual and every matmul operand/result at each of its L
+    kernel boundaries; the fused stack touches HBM with activations
+    exactly twice (embedded input in, final hidden out). Weights and
+    K/V pages stream identically on both paths, so the *activation*
+    stream is where the fusion pays — the gate is on that component.
+
+Wall-clock is reported but NOT gated: off-TPU the Pallas kernels run
+under the interpreter where per-grid-cell Python dominates (same
+reasoning as ``ragged_step.py``).
+
+  PYTHONPATH=src python benchmarks/megakernel_step.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:  # package mode (python -m benchmarks.run)
+    from . import common
+except ImportError:  # script mode
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    import common
+
+GATE = 1.5
+PS = 8
+
+
+# ---------------------------------------------------------------------------
+# modeled activation/residual-stream HBM bytes (8B-class operating point)
+# ---------------------------------------------------------------------------
+
+OP_POINT = dict(
+    layers=32, d_model=4096, heads=32, kvh=8, d=128, d_ff=14336,
+    decode_rows=8, width=1, act_bytes=2,  # bf16 activations
+)
+
+
+def modeled_activation_bytes(fused, *, layers, d_model, heads, kvh, d,
+                             d_ff, decode_rows, width, act_bytes):
+    """Activation-stream HBM bytes one engine step moves.
+
+    Weights and K/V pages are deliberately excluded: both paths stream
+    the full weight set and the same resident pages once per step, so
+    they cancel in the ratio. What differs is the activation traffic at
+    kernel boundaries. Per layer, the per-layer step materializes the
+    scan-carried residual (in + out), the q/k/v operands entering the
+    attention ``pallas_call`` and its output, the output projection,
+    and the FFN's gate/up/product intermediates plus its down output.
+    The fused stack keeps all of that in VMEM scratch: activations
+    cross HBM exactly twice — the embedded input tile in, the final
+    hidden state out.
+    """
+    tok = decode_rows * width * act_bytes
+    if fused:
+        return 2 * tok * d_model
+    per_layer = (2 * tok * d_model          # scan-carried residual in/out
+                 + tok * (heads + 2 * kvh) * d  # q/k/v into the kernel
+                 + tok * heads * d          # attention output out
+                 + tok * d_model            # wo result
+                 + 3 * tok * d_ff           # gate / up / gated product
+                 + tok * d_model)           # down result
+    return layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# measured: kernel-count audit on both engines, token identity riding along
+# ---------------------------------------------------------------------------
+
+L = 4  # layer count for the measured engines (the gate demands >= 4)
+
+
+def _cfg():
+    from repro.core import MXFP8
+    from repro.nn import BlockDef, ModelConfig
+
+    return ModelConfig(
+        name="bench", family="dense", d_model=64, vocab_size=128,
+        pattern=(BlockDef("attn"),), num_groups=L, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128,
+        quant=MXFP8.replace(block_size=16, quantize_acts=False,
+                            quantize_kv_cache=True))
+
+
+def run_engines(smoke):
+    """Short decoders + one long prompt => a steady run of mixed steps."""
+    import jax
+
+    from repro.nn import model
+    from repro.serve import ContinuousBatchingEngine, ServeConfig
+
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    long_p = 16 if smoke else 32
+    m_short = 6 if smoke else 12
+    reqs = [(rng.integers(0, 128, (4,)).astype(np.int32), m_short),
+            (rng.integers(0, 128, (4,)).astype(np.int32), m_short),
+            (rng.integers(0, 128, (long_p,)).astype(np.int32), 4)]
+    out = {}
+    for mode in ("ragged", "megakernel"):
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            step_mode=mode, max_seq=48, max_slots=3, page_size=4,
+            prefill_chunk=4, prefill_max_chunks=2))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        t0 = time.perf_counter()
+        streams = eng.run()
+        wall = time.perf_counter() - t0
+        out[mode] = dict(streams=[streams[i] for i in ids], wall_s=wall,
+                         stats=eng.cache_stats())
+        if mode == "megakernel":
+            assert eng.megakernel, (
+                f"megakernel fell back: {eng._megakernel_fallback_reason}")
+    for a, b in zip(out["ragged"]["streams"], out["megakernel"]["streams"]):
+        np.testing.assert_array_equal(a, b)
+    return out
+
+
+def visits_audit(rng):
+    """Exact per-layer page-visit count through the fused stack."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import mx_megakernel_step
+    from repro.nn import model
+
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    packed = model.pack_megakernel_params(params, cfg)
+    num_pages = 12
+    cache = model.init_paged_cache(cfg, 4, num_pages, PS)
+    pool = {}
+    for key, leaf in cache["groups"][0].items():
+        arr = np.asarray(leaf)
+        if key.endswith("_scales"):
+            pool[key] = jnp.asarray(
+                rng.integers(118, 134, arr.shape).astype(np.uint8))
+        elif arr.dtype == np.uint8:
+            pool[key] = jnp.asarray(
+                rng.integers(0, 256, arr.shape).astype(np.uint8))
+        else:
+            pool[key] = jnp.asarray(
+                rng.normal(size=arr.shape).astype(np.float32)).astype(
+                    arr.dtype)
+
+    w = 8
+    starts = [13, 9, 0, 12]          # decode / verify / fresh / mid-chunk
+    n_news = [1, 3, w, w]
+    totals = [s + n for s, n in zip(starts, n_news)]
+    pages_per = [-(-t // PS) for t in totals]
+    pmax = max(pages_per) + 1
+    perm = rng.permutation(num_pages - 1)
+    table = np.full((len(starts), pmax), -1, np.int32)
+    off = 0
+    for i, npg in enumerate(pages_per):
+        table[i, :npg] = perm[off:off + npg]
+        off += npg
+
+    r = len(starts)
+    x0 = jnp.asarray(rng.normal(size=(r, w, cfg.d_model)).astype(
+        np.float32)).astype(cfg.compute_dtype)
+    lay = packed["layers"]
+    _, _, visits = mx_megakernel_step(
+        x0, lay["norm_mixer"]["scale"], lay["wq"]["w"], lay["wk"]["w"],
+        lay["wv"]["w"], lay["wo"]["w"], lay["norm_ffn"]["scale"],
+        lay["gate"]["w"], lay["up"]["w"], lay["down"]["w"],
+        pool["k_elems"], pool["k_scales"], pool["v_elems"],
+        pool["v_scales"], jnp.asarray(table),
+        jnp.asarray(starts, jnp.int32), jnp.asarray(totals, jnp.int32),
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        norm_eps=cfg.norm_eps, ffn_kind=cfg.ffn_kind, quant=cfg.quant,
+        fmt_name=cfg.quant.fmt, block_size=cfg.quant.block_size,
+        compute_dtype=cfg.compute_dtype, debug_visits=True)
+    visited = np.asarray(visits)[..., 0]          # (L, R, KVH)
+    kvh = visited.shape[-1]
+    expect = np.broadcast_to(
+        np.array([-(-t // PS) for t in totals], np.int32)[None, :, None],
+        visited.shape)
+    grid = int(np.prod(visited.shape)) * pmax
+    return (int(visited.sum()), int(expect.sum()), grid,
+            bool((visited == expect).all()), kvh)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short workload for CI")
+    args = ap.parse_args(argv)
+
+    out = run_engines(args.smoke)
+    ms, rs = out["megakernel"]["stats"], out["ragged"]["stats"]
+    for mode in ("ragged", "megakernel"):
+        st = out[mode]["stats"]
+        common.emit(
+            f"megakernel_step/{mode}", out[mode]["wall_s"] * 1e6,
+            f"{st['pallas_calls_per_step']} pallas_calls/step, "
+            f"{st['prefill_rows_per_step']:.1f} prefill rows/dispatch")
+
+    visited, resident, grid, visits_ok, _ = visits_audit(
+        np.random.default_rng(0))
+
+    mk_bytes = modeled_activation_bytes(True, **OP_POINT)
+    pl_bytes = modeled_activation_bytes(False, **OP_POINT)
+    mk_bpt = mk_bytes / OP_POINT["decode_rows"]
+    pl_bpt = pl_bytes / OP_POINT["decode_rows"]
+    bytes_ratio = pl_bpt / mk_bpt
+
+    kernel_gate = (ms["pallas_calls_per_step"] == 1
+                   and rs["pallas_calls_per_step"] == L
+                   and L >= 4
+                   and ms["dispatches_per_mixed_step"] == 1.0
+                   and ms["mixed_steps"] >= 1)
+    ok = kernel_gate and visits_ok and bytes_ratio >= GATE
+    common.emit_json("megakernel_step", {
+        "op_point": OP_POINT,
+        "layers_measured": L,
+        "wall_s": {m: out[m]["wall_s"] for m in out},
+        "pallas_calls_per_step": {
+            m: out[m]["stats"]["pallas_calls_per_step"] for m in out},
+        "dispatches_per_mixed_step": {
+            m: out[m]["stats"]["dispatches_per_mixed_step"] for m in out},
+        "prefill_rows_per_step": {
+            m: out[m]["stats"]["prefill_rows_per_step"] for m in out},
+        "page_tiles_visited": visited,
+        "page_tiles_resident": resident,
+        "page_tiles_in_grid": grid,
+        "modeled_activation_bytes_per_decoded_token": {
+            "per_layer": pl_bpt, "megakernel": mk_bpt,
+            "ratio": bytes_ratio},
+    })
+    print(f"\nmegakernel {ms['pallas_calls_per_step']} vs per-layer "
+          f"{rs['pallas_calls_per_step']} pallas_calls per step at L={L}, "
+          f"page tiles visited {visited} == resident {resident} (grid "
+          f"{grid}), modeled activation HBM {pl_bpt / 1e6:.2f} -> "
+          f"{mk_bpt / 1e6:.4f} MB per decoded token "
+          f"({bytes_ratio:.0f}x): {'PASS' if ok else 'FAIL'} "
+          f"(gates: 1 vs L kernels + exact visits + >= {GATE}x modeled "
+          f"activation bytes; wall-clock reported ungated)")
+    if not ok:
+        raise SystemExit(1)
+    return bytes_ratio
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

@@ -10,10 +10,10 @@ import pathlib
 import traceback
 
 from . import (block_size_sweep, common, decode_attention, e2e_step,
-               emulation_breakdown, format_comparison, prefill,
-               ragged_step, serve_overload, serve_prefix, serve_throughput,
-               sharded_step, spec_decode, speedup, throughput_sweep,
-               tiered_kv)
+               emulation_breakdown, format_comparison, megakernel_step,
+               prefill, ragged_step, serve_overload, serve_prefix,
+               serve_throughput, sharded_step, spec_decode, speedup,
+               throughput_sweep, tiered_kv)
 
 SUITES = [
     ("fig2_emulation_breakdown", emulation_breakdown.run),
@@ -31,6 +31,7 @@ SUITES = [
     ("serve_overload", serve_overload.run),
     ("ragged_step", ragged_step.run),
     ("sharded_step", sharded_step.run),
+    ("megakernel_step", megakernel_step.run),
 ]
 
 # suites register dicts in common.json_results under these keys; each
@@ -45,6 +46,7 @@ _JSON_FILES = {
     "BENCH_overload.json": ("serve_overload",),
     "BENCH_ragged.json": ("ragged_step",),
     "BENCH_sharded.json": ("sharded_step",),
+    "BENCH_megakernel.json": ("megakernel_step",),
 }
 
 

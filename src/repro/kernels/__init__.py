@@ -6,6 +6,10 @@
                   paged flash-decode/verify kernels the serve engine
                   runs, and the fused chunked-prefill kernel that
                   quantize-writes each chunk's K/V into its pages
+  mx_megakernel.py layer-fused megakernel: the whole attention-only
+                  decoder stack (norm, QKV+RoPE, ragged MX page walk,
+                  output projection, gated MLP) as ONE pallas_call with
+                  the layer as the outermost grid dimension
   mx_quantize.py  fused block quantization (amax + E8M0 + RNE cast)
   mx_repack.py    in-place page requantization down the tier ladder
                   (fp8 -> fp6 -> fp4) for the mixed-format KV pool
@@ -20,6 +24,7 @@ from .mx_attention import (gather_kv_pages, mx_attention_decode,
                            mx_attention_ragged_fused,
                            mx_attention_verify_fused)
 from .mx_matmul import mx_matmul_dgrad
+from .mx_megakernel import mx_megakernel_step
 from .mx_repack import mx_repack_pages
 from .ops import mx_matmul, mx_matmul_trainable, quantize_pallas
 
@@ -28,4 +33,5 @@ __all__ = ["gather_kv_pages", "mx_attention_decode",
            "mx_attention_prefill_fused", "mx_attention_ragged_fused",
            "mx_attention_verify_fused",
            "mx_matmul", "mx_matmul_dgrad", "mx_matmul_trainable",
+           "mx_megakernel_step",
            "mx_repack_pages", "quantize_pallas", "ref"]

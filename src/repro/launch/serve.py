@@ -172,7 +172,7 @@ def main(argv=None):
                     help="max pages repacked per engine step (bounds the "
                          "background repack work on the decode path)")
     ap.add_argument("--step-mode", default="ragged",
-                    choices=["ragged", "split"],
+                    choices=["ragged", "split", "megakernel"],
                     help="engine step dispatch shape: 'ragged' (default) "
                          "packs decode tokens, speculative verify windows "
                          "and prefill chunks into ONE fused Pallas "
@@ -180,7 +180,21 @@ def main(argv=None):
                          "in-kernel; 'split' runs the per-mode dispatches "
                          "(the validated oracle). Ragged needs the fused "
                          "kernel + a quantized KV cache and falls back to "
-                         "split otherwise")
+                         "split otherwise. 'megakernel' additionally "
+                         "fuses the whole layer stack — norms, QKV+RoPE, "
+                         "the paged MX page walk, output projection and "
+                         "the gated MLP for EVERY layer — into ONE "
+                         "pallas_call per step (the ragged step pays one "
+                         "per layer); configs the fused stack cannot "
+                         "serve fall back to the per-layer ragged step "
+                         "with a logged reason")
+    ap.add_argument("--prefill-max-chunks", type=int, default=1,
+                    help="ragged-aware prefill budgeting: chunks one "
+                         "prefilling sequence may stream in a single "
+                         "ragged step while the batch is undersubscribed "
+                         "(fewer active sequences than slots); a full "
+                         "batch always drops back to 1 chunk/step so "
+                         "decode rows are never starved")
     ap.add_argument("--mesh", type=int, default=0,
                     help="sharded serving: KV-head-parallel ways over a "
                          "(1, M) device mesh — the page pool and q/k/v "
@@ -246,6 +260,7 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_token_budget or None,
         step_mode=args.step_mode,
+        prefill_max_chunks=args.prefill_max_chunks,
         mesh_shape=(1, args.mesh) if args.mesh > 1 else None,
         tiered=args.tiered,
         tier_policy=TierPolicy(
@@ -289,6 +304,8 @@ def main(argv=None):
                  stats["prefix_hit_rate"], stats["prefill_tokens_computed"],
                  stats["prompt_tokens"])
         if "dispatches_total" in stats:
+            mode = ("megakernel" if getattr(engine, "megakernel", False)
+                    else "ragged" if engine.ragged else "split")
             log.info("device dispatches: %d total over %d steps "
                      "(%.2f/step; %.2f per mixed decode+prefill step over "
                      "%d mixed steps) — ragged %d, decode %d, verify %d, "
@@ -299,8 +316,20 @@ def main(argv=None):
                      stats["mixed_steps"], stats["dispatches_ragged"],
                      stats["dispatches_decode"], stats["dispatches_verify"],
                      stats["dispatches_prefill"], stats["dispatches_write"],
-                     stats["dispatches_repack"],
-                     "ragged" if engine.ragged else "split")
+                     stats["dispatches_repack"], mode)
+            # the serving claim, measured end to end: every mixed
+            # decode+prefill step is ONE jitted call, and (megakernel)
+            # that call traces to ONE device kernel for the whole stack
+            if stats["mixed_steps"] and mode in ("ragged", "megakernel"):
+                gate = stats["dispatches_per_mixed_step"] == 1.0
+                log.info("dispatch gate: dispatches_per_mixed_step == 1 "
+                         "%s", "HELD" if gate else "FAILED")
+            if stats.get("pallas_calls_per_step") is not None:
+                log.info("step audit: %d pallas_call(s) per engine step "
+                         "(%.1f prefill tokens retired per prefill-"
+                         "carrying dispatch)",
+                         stats["pallas_calls_per_step"],
+                         stats["prefill_rows_per_step"])
         if "admission_latency_p95" in stats:
             log.info("admission latency (submit -> first token): "
                      "p50 %.3fs p95 %.3fs mean %.3fs over %d requests "

@@ -614,6 +614,16 @@ def apply_ragged(params, x, pool, page_rows, row_start, seq_lens,
     every device — which is what keeps the sharded engine
     token-identical to the single-device one (a sharded-``wo`` psum
     would split the f32 reduction instead and drift).
+
+    MIRROR CONTRACT: the layer-fused megakernel
+    (``kernels.mx_megakernel_step``) re-implements this row math —
+    norm, QKV projection + RoPE, the fused page walk, the in-kernel
+    quantized write — inside its own kernel body, and its acceptance
+    bar is bit-identity with this path (logits AND written pool bytes).
+    Any numeric change here (rounding points, projection order, RoPE
+    variant, quantize math) must land in ``kernels/mx_megakernel.py``
+    in the same PR or ``tests/test_megakernel.py`` will catch the
+    drift.
     """
     if cfg.decode_kernel != "fused" or "k_elems" not in pool:
         raise ValueError(

@@ -316,6 +316,45 @@ def apply_ragged_step(params, x, cache, page_rows, row_start, seq_lens,
     return _decode_tail(params, x, h, bd, cfg), cache
 
 
+def megakernel_reject_reason(cfg: ModelConfig):
+    """Why the layer-fused megakernel cannot serve ``cfg`` (None = it can).
+
+    The static half of the serve engine's fallback ladder for
+    ``step_mode="megakernel"`` (the engine adds runtime conditions on
+    top: ragged prerequisites, unsharded mesh, wide weights). One string
+    per rung so tests can pin the ladder and the serve log can name the
+    reason it fell back to the per-layer ragged path.
+    """
+    all_blocks = cfg.all_blocks()
+    if not all_blocks:
+        return "empty layer stack"
+    if any(bd.mixer != "attn" for bd in all_blocks):
+        mixers = sorted({bd.mixer for bd in all_blocks if bd.mixer != "attn"})
+        return f"non-attention mixers {mixers} (MoE/recurrent hybrids)"
+    if any(bd != all_blocks[0] for bd in all_blocks):
+        return ("non-uniform block pattern (per-layer windows or channel "
+                "mixers need per-layer kernel specialization)")
+    if cfg.prologue or cfg.epilogue or len(cfg.pattern) != 1:
+        # with one scanned pattern slot and no unscanned blocks, the
+        # per-layer cache ({"groups": (pool,)} stacked over num_groups)
+        # and the megakernel cache (leading L axis) are the SAME pytree —
+        # the engine's page/snapshot/repack helpers then apply unchanged
+        return ("non-trivial stack layout (prologue/epilogue blocks or a "
+                "multi-block pattern break the stacked-cache coincidence "
+                "with the per-layer scan)")
+    if all_blocks[0].ffn != "dense":
+        return (f"ffn kind {all_blocks[0].ffn!r} (the fused layer tail "
+                "implements the dense gated MLP only)")
+    if cfg.post_norms:
+        return "sandwich post-norms (not folded into the fused layer tail)"
+    if cfg.quant.enabled and cfg.quant.quantize_acts:
+        return ("activation quantization (qat_matmul's custom-vjp pallas "
+                "path cannot nest inside the megakernel)")
+    if not (cfg.quant.enabled and cfg.quant.quantize_kv_cache):
+        return "wide bf16 KV pool (no MX page walk to fuse over)"
+    return None
+
+
 def _attn_prefill_qkv(mixer_params, h, positions, acfg, quant, dt):
     """Shared prefill prologue: QKV projection + RoPE at ``positions``.
 

@@ -54,6 +54,29 @@ def cast_compute(x, dtype):
     return x
 
 
+def round_to(x, dtype):
+    """Round ``x`` to ``dtype`` precision through an op XLA cannot elide.
+
+    ``astype`` narrowing inside a fused elementwise chain may be skipped
+    under XLA's default excess-precision rules (the value stays f32 in
+    registers), so two structurally different programs — e.g. the
+    per-layer engine step and the layer-fused megakernel, whose whole
+    body is one fused kernel jaxpr — can round the SAME chain at
+    different points and drift by 1 ulp. ``lax.reduce_precision`` is the
+    HLO op defined to defeat exactly that, making the rounding part of
+    the program's semantics rather than a fusion accident. Used at the
+    narrowing points that sit between two elementwise ops.
+
+    Applying it with ``dtype == x.dtype`` is NOT a no-op: it snaps a
+    value whose jaxpr dtype is already narrow but whose runtime carrier
+    may be wide (e.g. a bf16 elementwise result feeding an f32-preferred
+    dot) back onto the representable grid.
+    """
+    fi = jnp.finfo(dtype)
+    x = jax.lax.reduce_precision(x, fi.nexp, fi.nmant)
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
 def stack_inits(init_fn, key, n):
     """vmap ``init_fn(key) -> (params, axes)`` over ``n`` stacked copies.
 

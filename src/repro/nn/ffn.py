@@ -26,11 +26,22 @@ def init(key, d_model: int, d_ff: int, kind: str = "swiglu"):
 def apply(params, x, quant: QuantConfig, kind: str = "swiglu",
           compute_dtype=jnp.bfloat16):
     up = linear.apply(params["up"], x, quant, compute_dtype)
+    # activation narrowings go through C.round_to, not bare astype: these
+    # casts sit between elementwise ops, where XLA's excess-precision
+    # fusion may skip the rounding — which would make the layer-fused
+    # megakernel (one fused kernel jaxpr) round differently from the
+    # per-layer step and break their bit-identity
     if kind == "gelu":
-        h = jax.nn.gelu(up.astype(jnp.float32)).astype(compute_dtype)
+        h = C.round_to(jax.nn.gelu(up.astype(jnp.float32)), compute_dtype)
     else:
         gate = linear.apply(params["gate"], x, quant, compute_dtype)
         g32 = gate.astype(jnp.float32)
         act = jax.nn.silu(g32) if kind == "swiglu" else jax.nn.gelu(g32, approximate=True)
-        h = (act.astype(compute_dtype) * up)
+        # product of two compute-dtype values is exact in f32, so one
+        # explicit rounding == true narrow-multiply semantics
+        h = C.round_to(
+            C.round_to(act, compute_dtype).astype(jnp.float32)
+            * up.astype(jnp.float32),
+            compute_dtype,
+        )
     return linear.apply(params["down"], h, quant, compute_dtype, tp_on="in")

@@ -46,7 +46,7 @@ def apply(params, x, quant: QuantConfig, compute_dtype=jnp.bfloat16,
         return y.astype(compute_dtype)
     if not quant.enabled:
         xw = x.astype(compute_dtype)
-        return (xw @ w.astype(compute_dtype)).astype(compute_dtype)
+        return _dot_rounded(xw, w.astype(compute_dtype), compute_dtype)
     if quant.quantize_acts:
         # activations enter in compute dtype (bf16): the QAT path is
         # dtype-preserving end to end (§Perf iteration 2)
@@ -63,8 +63,27 @@ def apply(params, x, quant: QuantConfig, compute_dtype=jnp.bfloat16,
     else:
         # weight-only: straight-through fake-quantized weights, wide acts
         wq = fake_quant(w.astype(jnp.float32), quant.fmt, quant.block_size, 0)
-        y = x.astype(compute_dtype) @ wq.astype(compute_dtype)
+        y = _dot_rounded(x.astype(compute_dtype), wq.astype(compute_dtype),
+                         compute_dtype)
     return y.astype(compute_dtype)
+
+
+def _dot_rounded(x, w, compute_dtype):
+    """``x @ w`` with the output narrowing made explicit.
+
+    A bf16-output dot accumulates in f32 and rounds at the output — but
+    when the dot's consumer is an elementwise op inside one fused
+    computation (the layer-fused megakernel body), XLA's excess-precision
+    rules may hand the consumer the f32 accumulator instead. Accumulating
+    in f32 and narrowing through ``reduce_precision`` pins the rounding
+    point into the program so the per-layer step and the megakernel see
+    bit-identical values. Numerically this is exactly what the plain
+    bf16-output dot does when the rounding is *not* elided.
+    """
+    x = C.round_to(x, x.dtype)  # snap operand: its producer chain may
+    w = C.round_to(w, w.dtype)  # carry excess precision into the f32 dot
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    return C.round_to(y, compute_dtype)
 
 
 def _maybe_q_act(x, quant: QuantConfig):

@@ -56,6 +56,72 @@ def init(key, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# layer enumeration (shared by every per-layer walk and the megakernel)
+# ---------------------------------------------------------------------------
+
+
+def iter_layer_blocks(cfg: ModelConfig):
+    """Yield ``(param_key, group_index, bd)`` for every decoder block in
+    execution order: prologue, then ``num_groups`` repetitions of the
+    pattern, then epilogue (``group_index`` is None for unscanned blocks).
+
+    This is THE layer enumeration: the per-layer step functions walk it
+    through :func:`_walk_blocks`, and the megakernel's stacked-weight
+    packing (:func:`pack_megakernel_params`) and stacked-pool cache
+    (:func:`init_megakernel_cache`) consume the same order — so layer
+    ``l`` of the megakernel grid and step ``l`` of the per-layer oracle
+    can never disagree about which weights they mean.
+    """
+    for j, bd in enumerate(cfg.prologue):
+        yield f"prologue{j}", None, bd
+    for g in range(cfg.num_groups):
+        for i, bd in enumerate(cfg.pattern):
+            yield f"block{i}", g, bd
+    for j, bd in enumerate(cfg.epilogue):
+        yield f"epilogue{j}", None, bd
+
+
+def layer_params(params, key: str, group_index):
+    """One layer's parameter subtree for an :func:`iter_layer_blocks` entry."""
+    if group_index is None:
+        return params[key]
+    return jax.tree_util.tree_map(lambda leaf: leaf[group_index],
+                                  params["groups"][key])
+
+
+def _walk_blocks(apply_fn, params, cfg: ModelConfig, x, cache):
+    """Shared prologue -> ``lax.scan`` (groups) -> epilogue traversal.
+
+    ``apply_fn(block_params, x, block_cache, bd) -> (x, new_block_cache)``
+    is applied to every block in :func:`iter_layer_blocks` order; the
+    repeated pattern runs under ``jax.lax.scan`` exactly as before (one
+    trace of the pattern regardless of depth). Factoring the six
+    near-identical per-step walks here keeps the residual threading — and
+    therefore the layer order the megakernel must reproduce — defined in
+    one place.
+    """
+    cache = dict(cache)
+    for j, bd in enumerate(cfg.prologue):
+        key = f"prologue{j}"
+        x, cache[key] = apply_fn(params[key], x, cache[key], bd)
+
+    def scan_fn(x, inputs):
+        gparams, gcache = inputs
+        new = []
+        for i, bd in enumerate(cfg.pattern):
+            x, c = apply_fn(gparams[f"block{i}"], x, gcache[i], bd)
+            new.append(c)
+        return x, tuple(new)
+
+    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+    cache["groups"] = gcaches
+    for j, bd in enumerate(cfg.epilogue):
+        key = f"epilogue{j}"
+        x, cache[key] = apply_fn(params[key], x, cache[key], bd)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
@@ -207,29 +273,11 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     """
     x = _embed_inputs(params, cfg, tokens)
     b = x.shape[0]
-    cache = dict(cache)
-    for j, bd in enumerate(cfg.prologue):
-        x, cache[f"prologue{j}"] = blocks.apply_decode_paged(
-            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        new = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.apply_decode_paged(gparams[f"block{i}"], x,
-                                             gcache[i], page_rows, pos,
-                                             bd, cfg, page_fmts=page_fmts,
-                                             mixed_fmts=mixed_fmts)
-            new.append(c)
-        return x, tuple(new)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, cache[f"epilogue{j}"] = blocks.apply_decode_paged(
-            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
+    x, cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.apply_decode_paged(
+            bp, x, bc, page_rows, pos, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts),
+        params, cfg, x, cache)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)
@@ -258,29 +306,11 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     """
     x = _embed_inputs(params, cfg, tokens)
     b = x.shape[0]
-    cache = dict(cache)
-    for j, bd in enumerate(cfg.prologue):
-        x, cache[f"prologue{j}"] = blocks.apply_verify_paged(
-            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        new = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.apply_verify_paged(gparams[f"block{i}"], x,
-                                             gcache[i], page_rows, pos,
-                                             bd, cfg, page_fmts=page_fmts,
-                                             mixed_fmts=mixed_fmts)
-            new.append(c)
-        return x, tuple(new)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, cache[f"epilogue{j}"] = blocks.apply_verify_paged(
-            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, bd, cfg, page_fmts=page_fmts, mixed_fmts=mixed_fmts)
+    x, cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.apply_verify_paged(
+            bp, x, bc, page_rows, pos, bd, cfg, page_fmts=page_fmts,
+            mixed_fmts=mixed_fmts),
+        params, cfg, x, cache)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)
@@ -317,32 +347,11 @@ def prefill_chunk_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     """
     x = _embed_inputs(params, cfg, tokens)
     b = x.shape[0]
-    cache = dict(cache)
-    for j, bd in enumerate(cfg.prologue):
-        x, cache[f"prologue{j}"] = blocks.apply_prefill_chunked(
-            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            pos, num_valid, bd, cfg, page_fmts=page_fmts,
-            mixed_fmts=mixed_fmts)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        new = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.apply_prefill_chunked(gparams[f"block{i}"], x,
-                                                gcache[i], page_rows, pos,
-                                                num_valid, bd, cfg,
-                                                page_fmts=page_fmts,
-                                                mixed_fmts=mixed_fmts)
-            new.append(c)
-        return x, tuple(new)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, cache[f"epilogue{j}"] = blocks.apply_prefill_chunked(
-            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            pos, num_valid, bd, cfg, page_fmts=page_fmts,
-            mixed_fmts=mixed_fmts)
+    x, cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.apply_prefill_chunked(
+            bp, x, bc, page_rows, pos, num_valid, bd, cfg,
+            page_fmts=page_fmts, mixed_fmts=mixed_fmts),
+        params, cfg, x, cache)
     # slice the requested row BEFORE the final norm + lm head: every op is
     # row-independent, so this matches the monolithic prefill's last-token
     # logits bit-for-bit while paying the vocab matmul for one row only
@@ -388,36 +397,139 @@ def ragged_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
     """
     x = _embed_inputs(params, cfg, tokens)
     r = x.shape[0]
-    cache = dict(cache)
-    for j, bd in enumerate(cfg.prologue):
-        x, cache[f"prologue{j}"] = blocks.apply_ragged_step(
-            params[f"prologue{j}"], x, cache[f"prologue{j}"], page_rows,
-            row_start, seq_lens, bd, cfg, page_fmts=page_fmts,
-            mixed_fmts=mixed_fmts)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        new = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.apply_ragged_step(gparams[f"block{i}"], x,
-                                            gcache[i], page_rows, row_start,
-                                            seq_lens, bd, cfg,
-                                            page_fmts=page_fmts,
-                                            mixed_fmts=mixed_fmts)
-            new.append(c)
-        return x, tuple(new)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, cache[f"epilogue{j}"] = blocks.apply_ragged_step(
-            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], page_rows,
-            row_start, seq_lens, bd, cfg, page_fmts=page_fmts,
-            mixed_fmts=mixed_fmts)
+    x, cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.apply_ragged_step(
+            bp, x, bc, page_rows, row_start, seq_lens, bd, cfg,
+            page_fmts=page_fmts, mixed_fmts=mixed_fmts),
+        params, cfg, x, cache)
     # gather the requested rows BEFORE the final norm + lm head (both are
     # row-independent, so this is bit-identical to slicing afterwards);
     # out-of-range gather rows clamp onto the row's last real token, whose
     # duplicate logits the host ignores
+    last = jnp.maximum(seq_lens - row_start - 1, 0)[:, None]
+    idx = jnp.clip(jnp.asarray(logit_idx, jnp.int32)[:, None]
+                   + jnp.arange(num_logits, dtype=jnp.int32)[None, :],
+                   0, last)
+    x = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx[:, :, None], (r, num_logits, x.shape[-1])),
+        axis=1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
+                              cfg.compute_dtype)
+    if cfg.num_codebooks > 1:
+        logits = logits.reshape(r, num_logits, cfg.num_codebooks,
+                                cfg.vocab_size)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# megakernel step: the whole layer stack as ONE pallas_call
+# ---------------------------------------------------------------------------
+
+
+def init_megakernel_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                          page_size: int, tiered: bool = False):
+    """Stacked-layer paged cache for the megakernel step.
+
+    ONE grouped pool whose leaves carry a leading ``L = cfg.num_layers``
+    axis (layer order = :func:`iter_layer_blocks`), wrapped as
+    ``{"groups": (pool,)}`` so every ``serve.kv_cache`` structural walk —
+    copy_page, extract/restore, ``pool_specs`` (KV heads stay at
+    ``ndim - 2``), repack — treats the layer axis exactly like the
+    per-layer cache's group axis. For an attention-only config with
+    ``pattern == (bd,)`` and ``num_groups == L`` this is bit-for-bit the
+    same pytree layout as :func:`init_paged_cache`, which is what lets
+    the megakernel tests compare written pool bytes directly against the
+    per-layer ragged oracle.
+    """
+    bd0 = cfg.all_blocks()[0]
+    pool = blocks.init_paged_cache(num_slots, num_pages, page_size, bd0,
+                                   cfg, tiered=tiered)
+    layers = cfg.num_layers
+    return {"groups": (jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (layers, *x.shape)).copy(), pool),)}
+
+
+def pack_megakernel_params(params, cfg: ModelConfig):
+    """Stack per-layer weights along a leading L axis for the megakernel.
+
+    Consumes the SAME layer enumeration as the per-layer oracle
+    (:func:`iter_layer_blocks`), so megakernel grid coordinate ``l``
+    indexes exactly the weights the oracle's step ``l`` applies. The
+    packed dict keeps the ``wq/wk/wv/wo`` key structure, so
+    ``parallel.sharding.serve_param_specs`` still finds the attention
+    projection group and shards the head columns (the KV-head slice)
+    exactly as on the per-layer path. Embedding and final norm stay
+    unstacked — they run outside the kernel.
+    """
+    layers = [layer_params(params, key, g)
+              for key, g, _ in iter_layer_blocks(cfg)]
+
+    def stack(pick):
+        return jnp.stack([pick(bp) for bp in layers], axis=0)
+
+    packed = {
+        "norm_mixer": {"scale": stack(lambda bp: bp["norm_mixer"]["scale"])},
+        "wq": {"w": stack(lambda bp: bp["mixer"]["wq"]["w"])},
+        "wk": {"w": stack(lambda bp: bp["mixer"]["wk"]["w"])},
+        "wv": {"w": stack(lambda bp: bp["mixer"]["wv"]["w"])},
+        "wo": {"w": stack(lambda bp: bp["mixer"]["wo"]["w"])},
+        "norm_ffn": {"scale": stack(lambda bp: bp["norm_ffn"]["scale"])},
+        "up": {"w": stack(lambda bp: bp["ffn"]["up"]["w"])},
+        "down": {"w": stack(lambda bp: bp["ffn"]["down"]["w"])},
+    }
+    if cfg.ffn_kind != "gelu":
+        packed["gate"] = {"w": stack(lambda bp: bp["ffn"]["gate"]["w"])}
+    return {"embedding": params["embedding"],
+            "final_norm": params["final_norm"], "layers": packed}
+
+
+def megakernel_step_paged(params, cfg: ModelConfig, cache, tokens, page_rows,
+                          row_start, seq_lens, logit_idx, num_logits: int = 1,
+                          page_fmts=None, mixed_fmts=None):
+    """:func:`ragged_step_paged` with the whole layer stack fused into ONE
+    ``pallas_call`` (``kernels.mx_megakernel_step``).
+
+    ``params`` is a :func:`pack_megakernel_params` dict and ``cache`` an
+    :func:`init_megakernel_cache` stacked pool; everything else —
+    ragged row metadata, trash-page contract, tiered ``page_fmts``,
+    logit-row gather — matches the per-layer oracle argument-for-argument.
+    Embedding, the pre-head logit-row gather, final norm, and the LM head
+    run outside the kernel exactly as written in :func:`ragged_step_paged`,
+    so the returned logits are bit-identical to the oracle's whenever the
+    kernel's per-layer math is (which the megakernel guarantees by reusing
+    the oracle's own jnp helpers and fused-kernel primitives).
+
+    Only configs accepted by ``blocks.megakernel_reject_reason`` may come
+    here; the serve engine enforces that and falls back to
+    ``step_mode="ragged"`` otherwise.
+    """
+    from repro.kernels import mx_megakernel_step
+
+    x = _embed_inputs(params, cfg, tokens)
+    r = x.shape[0]
+    lay = params["layers"]
+    pool = cache["groups"][0]
+    bd0 = cfg.all_blocks()[0]
+    d = cfg.head_dim
+    x, pools = mx_megakernel_step(
+        x, lay["norm_mixer"]["scale"], lay["wq"]["w"], lay["wk"]["w"],
+        lay["wv"]["w"], lay["wo"]["w"], lay["norm_ffn"]["scale"],
+        lay["gate"]["w"] if "gate" in lay else None,
+        lay["up"]["w"], lay["down"]["w"],
+        pool["k_elems"], pool["k_scales"], pool["v_elems"],
+        pool["v_scales"], page_rows, row_start, seq_lens,
+        head_dim=d, rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+        ffn_kind=cfg.ffn_kind, quant=cfg.quant, fmt_name=cfg.quant.fmt,
+        block_size=min(cfg.quant.block_size, d), softcap=cfg.attn_softcap,
+        window=bd0.window, compute_dtype=cfg.compute_dtype,
+        page_fmts=page_fmts, mixed_fmts=mixed_fmts)
+    ke, ks, ve, vs = pools
+    cache = {"groups": (dict(pool, k_elems=ke, k_scales=ks, v_elems=ve,
+                             v_scales=vs),)}
+    # logit-row gather + head: verbatim the per-layer oracle's tail
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    row_start = jnp.asarray(row_start, jnp.int32)
     last = jnp.maximum(seq_lens - row_start - 1, 0)[:, None]
     idx = jnp.clip(jnp.asarray(logit_idx, jnp.int32)[:, None]
                    + jnp.arange(num_logits, dtype=jnp.int32)[None, :],
@@ -493,28 +605,13 @@ def prefill_with_prefix(params, cfg: ModelConfig, cache, tokens,
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(
         pos0 + jnp.arange(s, dtype=jnp.int32), (b, s))
-    out_cache = {}
-    for j, bd in enumerate(cfg.prologue):
-        x, out_cache[f"prologue{j}"] = blocks.prefill_block_tail(
-            params[f"prologue{j}"], x, positions, cache[f"prologue{j}"],
-            prefix_pages, bd, cfg, max_seq)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        caches = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.prefill_block_tail(gparams[f"block{i}"], x,
-                                             positions, gcache[i],
-                                             prefix_pages, bd, cfg, max_seq)
-            caches.append(c)
-        return x, tuple(caches)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    out_cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, out_cache[f"epilogue{j}"] = blocks.prefill_block_tail(
-            params[f"epilogue{j}"], x, positions, cache[f"epilogue{j}"],
-            prefix_pages, bd, cfg, max_seq)
+    # the walk threads the read-only prefix pool in and the tail cache out:
+    # every block's returned cache entry replaces its input entry, so the
+    # result dict holds exactly the new-token tail caches
+    x, out_cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.prefill_block_tail(
+            bp, x, positions, bc, prefix_pages, bd, cfg, max_seq),
+        params, cfg, x, cache)
     x = rmsnorm_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)
@@ -531,25 +628,9 @@ def decode_step(params, cfg: ModelConfig, cache, tokens=None, embeds=None,
     """
     x = _embed_inputs(params, cfg, tokens, embeds)
     b = x.shape[0]
-    cache = dict(cache)
-    for j, bd in enumerate(cfg.prologue):
-        x, cache[f"prologue{j}"] = blocks.apply_decode(
-            params[f"prologue{j}"], x, cache[f"prologue{j}"], pos, bd, cfg)
-
-    def scan_fn(x, inputs):
-        gparams, gcache = inputs
-        new = []
-        for i, bd in enumerate(cfg.pattern):
-            x, c = blocks.apply_decode(gparams[f"block{i}"], x, gcache[i],
-                                       pos, bd, cfg)
-            new.append(c)
-        return x, tuple(new)
-
-    x, gcaches = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
-    cache["groups"] = gcaches
-    for j, bd in enumerate(cfg.epilogue):
-        x, cache[f"epilogue{j}"] = blocks.apply_decode(
-            params[f"epilogue{j}"], x, cache[f"epilogue{j}"], pos, bd, cfg)
+    x, cache = _walk_blocks(
+        lambda bp, x, bc, bd: blocks.apply_decode(bp, x, bc, pos, bd, cfg),
+        params, cfg, x, cache)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = embedding.logits(params["embedding"], x, cfg.logit_softcap,
                               cfg.compute_dtype)

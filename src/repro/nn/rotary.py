@@ -1,11 +1,18 @@
 """Rotary position embeddings (RoPE), with partial-dim support for MLA."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
 def rope_freqs(head_dim: int, theta: float = 10000.0):
-    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    # built from iota rather than a jnp.arange constant so the SAME
+    # function traces inside Pallas kernels (which reject captured array
+    # constants) — the layer-fused megakernel applies RoPE in-kernel via
+    # this exact code path, and identical ops keep it bit-identical to
+    # the outside-the-kernel oracle
+    exponent = 2.0 * jax.lax.broadcasted_iota(
+        jnp.float32, (1, head_dim // 2), 1)[0] / head_dim
     return 1.0 / (theta**exponent)  # (head_dim // 2,)
 
 

@@ -157,6 +157,13 @@ def serve_param_specs(params, axis: str = TP_AXIS):
     guarantee the engine tests pin down. Everything outside attention is
     replicated because it is already per-token work the engine runs in
     lockstep on each device.
+
+    The megakernel's packed params (``model.pack_megakernel_params``)
+    keep the ``wq/wk/wv/wo`` key structure with a leading stacked-layer
+    axis, so this walk covers them too: head columns stay the last dim
+    of each stacked leaf, the layer axis lands on a leading ``None``.
+    ``megakernel_param_specs`` below pins that down for the sharded-
+    megakernel ROADMAP rung.
     """
     def shard_last(a):
         return P(*([None] * (a.ndim - 1)), axis)
@@ -176,6 +183,23 @@ def serve_param_specs(params, axis: str = TP_AXIS):
         return rep(node)
 
     return walk(params)
+
+
+def megakernel_param_specs(packed, axis: str = TP_AXIS):
+    """PartitionSpec tree for a ``pack_megakernel_params`` tree.
+
+    Groundwork for running the layer-fused megakernel under the serve
+    engine's KV-head ``shard_map`` (ROADMAP rung — the engine currently
+    falls back to the per-layer ragged step on a >1-way mesh): the
+    stacked ``(L, d_in, heads*head_dim)`` q/k/v leaves shard their head
+    columns on ``axis`` exactly like the per-layer specs, layer axis
+    replicated, everything else replicated. Delegates to
+    ``serve_param_specs``'s structural walk — the packed dict keeps the
+    wq/wk/wv/wo keys precisely so that recognition still fires — and
+    exists as a named entry point so tests can pin the stacked layout's
+    placement independently of the per-layer one.
+    """
+    return serve_param_specs(packed, axis)
 
 
 def constraint(x, mesh: Mesh, *spec_entries):

@@ -78,8 +78,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import FORMAT_BY_ID, FORMAT_IDS
+from repro.core.mx_tensor import MXTensor
 from repro.kernels import mx_repack_pages
-from repro.nn import model
+from repro.nn import blocks, model
 from repro.nn.config import ModelConfig
 
 from . import kv_cache, sampling, spec_decode
@@ -185,6 +186,15 @@ class ServeConfig:
     # admitted-but-prefilling sequences, so a short prompt's first token
     # never waits for a long neighbour's full prompt.
     prefill_token_budget: Optional[int] = None
+    # ragged-aware prefill budgeting: how many chunks one prefilling
+    # sequence may advance in a single ragged step WHEN the row budget is
+    # undersubscribed (fewer active sequences than slots). The ragged
+    # trace width grows to prefill_chunk * prefill_max_chunks, and the
+    # starvation bound is built in: the moment every slot is occupied,
+    # rows fall back to one chunk per step so resident decoders' per-step
+    # latency is not taxed by wide prefill rows. 1 (default) = the
+    # original one-chunk-per-step behavior.
+    prefill_max_chunks: int = 1
     # LRU bound on the monolithic path's per-(length, prefix) jitted
     # prefill traces — a long-running server on the fallback path must
     # not grow trace memory without limit (the chunked path's trace
@@ -216,6 +226,17 @@ class ServeConfig:
     # write dispatches as the validated oracle. Ragged requires the fused
     # decode kernel, a quantized (MX) KV cache and attention-only mixers;
     # unsupported configs fall back to split automatically.
+    # "megakernel" goes one rung further: the ENTIRE layer stack of the
+    # ragged step runs as ONE pallas_call per engine step
+    # (kernels.mx_megakernel_step) — per-layer weights stacked along a
+    # leading layer axis, the residual stream carried across layer grid
+    # steps in VMEM — collapsing device dispatches per mixed step from
+    # O(num_layers) to exactly 1. Ragged assembly, the scheduler,
+    # speculative rollback, tiering and prefix sharing are unchanged;
+    # configs the megakernel cannot serve (nn.blocks.
+    # megakernel_reject_reason, plus the runtime conditions: ragged
+    # prerequisites, unsharded mesh, wide weight masters) fall back to
+    # the per-layer ragged path with a logged reason.
     step_mode: str = "ragged"
     # sharded serving: (data, model) device-mesh shape, e.g. (1, 8). The
     # ragged step then runs KV-head-parallel under shard_map: the page
@@ -237,6 +258,44 @@ def _sample(logits, key, temperature: float):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(
         key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _sub_jaxprs(params):
+    """Inner jaxprs held by one equation's params (jit/scan/cond/...)."""
+    import jax.extend.core as jex
+
+    for v in params.values():
+        if isinstance(v, jex.ClosedJaxpr):
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, jex.ClosedJaxpr):
+                    yield x.jaxpr
+                elif hasattr(x, "eqns"):
+                    yield x
+
+
+def _pallas_calls_in(jaxpr) -> int:
+    """Device-kernel launches one execution of ``jaxpr`` performs.
+
+    Counts ``pallas_call`` equations, multiplying through ``scan`` trip
+    counts — the per-layer ragged step scans its pattern over
+    ``num_groups``, so its ONE lexical pallas_call runs L times, while
+    the layer-fused megakernel's single call runs once. This is the
+    measured (not asserted) form of the step's dispatch claim.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        inner = sum(_pallas_calls_in(s) for s in _sub_jaxprs(eqn.params))
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        elif eqn.primitive.name == "scan":
+            n += inner * int(eqn.params.get("length", 1))
+        else:
+            n += inner
+    return n
 
 
 class FixedSlotEngine:
@@ -354,10 +413,12 @@ class ContinuousBatchingEngine:
                 // serve_cfg.prefill_chunk)
         if serve_cfg.prefill_trace_cache < 1:
             raise ValueError("prefill_trace_cache must be >= 1")
-        if serve_cfg.step_mode not in ("ragged", "split"):
+        if serve_cfg.step_mode not in ("ragged", "split", "megakernel"):
             raise ValueError(
                 f"unknown step_mode {serve_cfg.step_mode!r} "
-                "(expected 'ragged' or 'split')")
+                "(expected 'ragged', 'split' or 'megakernel')")
+        if serve_cfg.prefill_max_chunks < 1:
+            raise ValueError("prefill_max_chunks must be >= 1")
         # the one-dispatch ragged step needs every row to run the fused
         # quantize-into-pages attention path: attention-only mixers, the
         # fused decode kernel, an MX-quantized KV pool, and chunked
@@ -366,8 +427,12 @@ class ContinuousBatchingEngine:
                      and serve_cfg.decode_kernel == "fused"
                      and cfg.quant.quantize_kv_cache
                      and self.chunked)
-        self.ragged = serve_cfg.step_mode == "ragged" and ragged_ok
-        if serve_cfg.step_mode == "ragged" and not self.ragged:
+        # "megakernel" is ragged assembly with a fused layer stack, so it
+        # inherits every ragged prerequisite (and falls all the way back
+        # to split dispatches when those are unmet)
+        ragged_like = serve_cfg.step_mode in ("ragged", "megakernel")
+        self.ragged = ragged_like and ragged_ok
+        if ragged_like and not self.ragged:
             log.info("ragged step disabled: needs attention-only mixers, "
                      "decode_kernel='fused', a quantized KV cache and "
                      "chunked prefill; using split dispatches")
@@ -421,6 +486,37 @@ class ContinuousBatchingEngine:
                                        jax.devices()[:ndev])
                 self._tp_axis = "model"
                 self.tp = shape[1]
+        # layer-fused megakernel: the whole attention-only decoder step —
+        # every layer's norm/QKV/RoPE/page-walk/output-proj/FFN plus the
+        # in-kernel quantized K/V writes — as ONE pallas_call, with the
+        # per-layer ragged step kept as the validated oracle. The ladder
+        # is static (config + params), decided once at init; any rung
+        # that fails drops to the per-layer ragged step with a log line.
+        self.megakernel = False
+        self._megakernel_fallback_reason = None
+        if serve_cfg.step_mode == "megakernel":
+            if not self.ragged:
+                reason = ("ragged prerequisites unmet (the megakernel is "
+                          "the ragged step fused over layers)")
+            elif self.tp > 1:
+                reason = ("sharded mesh — megakernel under shard_map is a "
+                          "follow-on (see ROADMAP)")
+            elif any(isinstance(leaf, MXTensor)
+                     for leaf in jax.tree_util.tree_leaves(
+                         self.params,
+                         is_leaf=lambda x: isinstance(x, MXTensor))):
+                reason = ("MXTensor (pre-quantized) weights — the "
+                          "megakernel pre-quantizes wide masters itself")
+            else:
+                reason = blocks.megakernel_reject_reason(self.cfg_decode)
+            if reason is None:
+                self.megakernel = True
+            else:
+                self._megakernel_fallback_reason = reason
+                log.info("megakernel step disabled: %s; falling back to "
+                         "the %s step", reason,
+                         "per-layer ragged" if self.ragged
+                         else "split-dispatch")
         # tiered mixed-format pool: num_pages is reinterpreted as the
         # fp8-equivalent byte budget (unit-metered); the physical pool
         # over-provisions 2x so repacked (narrower) pages buy residency
@@ -441,6 +537,7 @@ class ContinuousBatchingEngine:
             num_draft_tokens=(serve_cfg.num_draft_tokens
                               if self.spec_enabled else 0),
             prefill_chunk=(serve_cfg.prefill_chunk if self.chunked else 0),
+            prefill_max_chunks=serve_cfg.prefill_max_chunks,
             max_deferrals=serve_cfg.max_deferrals,
             unit_budget=unit_budget, track_allocs=self.tiered)
         self.cache = model.init_paged_cache(
@@ -561,15 +658,23 @@ class ContinuousBatchingEngine:
                               if self.spec_enabled else 0)
             self._ragged_width = max(
                 1 + self._ragged_k,
-                serve_cfg.prefill_chunk if self.chunked else 1)
+                (serve_cfg.prefill_chunk * serve_cfg.prefill_max_chunks)
+                if self.chunked else 1)
             nl = 1 + self._ragged_k
             rk = self._ragged_k
+            # the megakernel step is call-compatible with the per-layer
+            # ragged step; it takes the layer-stacked params instead
+            step_model = (model.megakernel_step_paged if self.megakernel
+                          else model.ragged_step_paged)
+            self._step_params = (
+                model.pack_megakernel_params(self.params, self.cfg_decode)
+                if self.megakernel else self.params)
 
             def _ragged_step_fn(p, c, tok, rows, start, lens, lidx, temps,
                                 tps, tks, seeds, ctrs, fmts=None):
                 kw = ({"page_fmts": fmts, "mixed_fmts": mf}
                       if fmts is not None else {})
-                logits, c = model.ragged_step_paged(
+                logits, c = step_model(
                     p, self.cfg_decode, c, tok, rows, start, lens, lidx,
                     num_logits=nl, **kw)
                 toks = sampling.sample(logits[:, 0], temps, tps, tks,
@@ -613,6 +718,10 @@ class ContinuousBatchingEngine:
             else:
                 self._ragged_fn = jax.jit(
                     _ragged_step_fn, donate_argnums=() if cpu else (1,))
+            # unjitted handle for the dispatch audit (jaxpr pallas_call
+            # count, measured lazily at the first ragged step)
+            self._ragged_fn_raw = _ragged_step_fn
+        self.pallas_calls_per_step = None
         self._key = jax.random.PRNGKey(0)
         # requests that don't carry SamplingParams sample with these
         self._default_sampling = SamplingParams(
@@ -786,6 +895,22 @@ class ContinuousBatchingEngine:
         engine step (see ``dispatch_counts`` / ``cache_stats``)."""
         self.dispatch_counts[kind] += n
         self._step_dispatches += n
+
+    def _audit_dispatches(self, call_args) -> None:
+        """Measure ``pallas_calls_per_step`` from the traced step's jaxpr.
+
+        Runs ONCE, lazily, on the first ragged step's real argument
+        shapes (abstract trace only — nothing executes), so the number
+        in ``cache_stats()`` / the serve log is derived from the same
+        program the engine dispatches, not asserted from code structure.
+        """
+        jaxpr = jax.make_jaxpr(self._ragged_fn_raw)(*call_args)
+        self.pallas_calls_per_step = _pallas_calls_in(jaxpr.jaxpr)
+        log.info(
+            "step audit: %d pallas_call(s) per engine step (%s)",
+            self.pallas_calls_per_step,
+            "layer-fused megakernel" if self.megakernel
+            else "per-layer ragged step")
 
     def _record_first_token(self, req_id: int) -> None:
         """Admission-latency sample: submit() -> first sampled token."""
@@ -1431,8 +1556,9 @@ class ContinuousBatchingEngine:
             ps = self.serve_cfg.page_size
             for seq in sched.prefilling():
                 st = seq.prefill_pos
-                real = min(self.serve_cfg.prefill_chunk,
-                           len(seq.req.prompt) - st)
+                # same formula assemble_ragged is about to apply — the
+                # pre-pass must mark exactly the pages the step writes
+                real = sched.planned_prefill_real(seq, self._ragged_width)
                 if real > 0:
                     self._mark_write(
                         seq.pages[st // ps: (st + real - 1) // ps + 1])
@@ -1458,10 +1584,13 @@ class ContinuousBatchingEngine:
         # vector covers every mode
         samp = self._slot_sampling(decode + [t[0] for t in prefill])
         args = (self._sync_fmts(),) if self.tiered else ()
-        out = self._ragged_fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(page_rows), jnp.asarray(row_start),
-            jnp.asarray(seq_lens), jnp.asarray(logit_idx), *samp, *args)
+        call_args = (self._step_params, self.cache, jnp.asarray(tokens),
+                     jnp.asarray(page_rows), jnp.asarray(row_start),
+                     jnp.asarray(seq_lens), jnp.asarray(logit_idx),
+                     *samp, *args)
+        if self.pallas_calls_per_step is None and self.mesh is None:
+            self._audit_dispatches(call_args)
+        out = self._ragged_fn(*call_args)
         self._count_dispatch("ragged")
         if k:
             toks_dev, n_emit_dev, emitted_dev, self.cache = out
@@ -1782,6 +1911,18 @@ class ContinuousBatchingEngine:
             "dispatches_per_mixed_step": (
                 self.mixed_step_dispatches / self.mixed_steps
                 if self.mixed_steps else 0.0),
+            # jaxpr-derived device-kernel count of ONE traced engine step
+            # (measured at the first ragged dispatch; None before then or
+            # off the ragged path): the layer-fused megakernel's whole
+            # claim is that this is 1 where the per-layer step pays L
+            "pallas_calls_per_step": self.pallas_calls_per_step,
+            "megakernel": getattr(self, "megakernel", False),
+            # ragged-aware prefill budgeting: prompt rows retired per
+            # ragged dispatch that carried prefill work (> chunk size
+            # means multi-chunk bites were taken on undersubscribed steps)
+            "prefill_rows_per_step": (
+                self.prefill_tokens / self.prefill_dispatches
+                if self.prefill_dispatches else 0.0),
         })
         if self.tiered:
             pool = sched.pool

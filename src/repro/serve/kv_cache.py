@@ -445,6 +445,12 @@ def pool_specs(cache, axis: str):
     The sharded serve engine partitions each attention layer's page pool
     along its KV-head dimension — layout ``(NP, PS, KVH, ·)``, grouped
     ``(G, NP, PS, KVH, ·)``, so the KV-head axis is always ``ndim - 2``.
+    The megakernel's stacked-layer pool (``model.init_megakernel_cache``)
+    is the grouped layout with ``G == num_layers``, so these specs — and
+    every other structural walk in this module (copy_page,
+    extract/restore, repack) — apply to it unchanged; that layout
+    coincidence is load-bearing (see ``blocks.megakernel_reject_reason``)
+    and is what the sharded-megakernel ROADMAP rung builds on.
     The page axis stays unsharded: every device holds pages
     ``0..NP`` for *its* head slice, so the host page table is replicated
     metadata and extract/restore/copy_page stay shard-local gathers

@@ -140,6 +140,7 @@ class Scheduler:
                  max_seq: int, prefix_cache: bool = False,
                  admit_window: int = 4, num_draft_tokens: int = 0,
                  prefill_chunk: int = 0, max_deferrals: int = 8,
+                 prefill_max_chunks: int = 1,
                  unit_budget: Optional[int] = None,
                  track_allocs: bool = False):
         self.max_slots = max_slots
@@ -155,6 +156,14 @@ class Scheduler:
                 f"page_size={page_size}: chunk starts must stay "
                 "page-aligned so no page blends two chunks")
         self.prefill_chunk = prefill_chunk
+        # ragged-aware prefill budgeting: when decode rows undersubscribe
+        # the batch (fewer active sequences than slots), a prefilling
+        # sequence may take up to this many chunks in one step. Admission
+        # bound all of the prompt's pages already, so a bigger bite needs
+        # no allocation — only wider (still static) step rows.
+        if prefill_max_chunks < 1:
+            raise ValueError("prefill_max_chunks must be >= 1")
+        self.prefill_max_chunks = prefill_max_chunks
         self.pages_per_slot = pages_for(max_seq, page_size)
         if num_pages < self.pages_per_slot:
             raise ValueError(
@@ -529,6 +538,32 @@ class Scheduler:
                                      else min(self.resident_at_peak, resident))
         return tokens, pos, page_rows, act
 
+    def prefill_allowed_chunks(self) -> int:
+        """How many prefill chunks one sequence may take this step.
+
+        Undersubscribed batches (fewer active sequences than slots —
+        tokens the static row width would otherwise waste) let a
+        prefilling sequence stream up to ``prefill_max_chunks`` at once;
+        a full batch drops back to exactly one chunk, which is the
+        starvation bound: decode rows are never displaced, and a
+        prefilling sequence always advances >= 1 chunk per step.
+        """
+        if len(self.active()) < self.max_slots:
+            return self.prefill_max_chunks
+        return 1
+
+    def planned_prefill_real(self, seq: "ActiveSeq", width: int) -> int:
+        """Valid prompt tokens ``seq``'s next ragged chunk will carry.
+
+        Single source of truth for the chunk-size formula: used by
+        ``assemble_ragged`` to pack rows and by the tiered engine's
+        write-marking pre-pass, which must mark exactly the pages the
+        step is about to touch.
+        """
+        chunk = min(self.prefill_chunk, width) if self.prefill_chunk else 0
+        bite = min(chunk * self.prefill_allowed_chunks(), width)
+        return min(bite, len(seq.req.prompt) - seq.prefill_pos)
+
     def assemble_ragged(self, width: int, extra_tokens: int = 0):
         """One packed ragged row batch for the single-dispatch engine step.
 
@@ -574,10 +609,9 @@ class Scheduler:
             modes[seq.slot] = 1
             page_rows[seq.slot, : len(seq.pages)] = seq.pages
         prefill = []
-        chunk = min(self.prefill_chunk, width) if self.prefill_chunk else 0
         for seq in self.prefilling():
             st = seq.prefill_pos
-            real = min(chunk, len(seq.req.prompt) - st)
+            real = self.planned_prefill_real(seq, width)
             if real <= 0:
                 continue
             tokens[seq.slot, :real] = seq.req.prompt[st:st + real]

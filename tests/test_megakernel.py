@@ -1,0 +1,365 @@
+"""Layer-fused megakernel: the whole engine step as ONE pallas_call.
+
+The megakernel (`kernels.mx_megakernel_step`) runs every layer's
+RMSNorm, fused QKV+RoPE, ragged MX page walk (with the in-kernel
+quantized K/V write), output projection and gated MLP in a single
+Pallas dispatch, with the per-layer ragged step kept as the validated
+oracle. Its acceptance bar, pinned here:
+
+  * step-level bit-identity — logits AND written pool bytes must equal
+    `model.ragged_step_paged` exactly, across fp8 e4m3/e5m2 + fp4,
+    block sizes 16/32/64, unaligned mid-page row starts, speculative
+    verify windows, sliding windows, and tiered mixed-format pools;
+  * engine-level token identity — `step_mode="megakernel"` emits the
+    same per-request streams as `step_mode="ragged"` under churn,
+    preemption, speculative decoding, tiering and prefix sharing;
+  * the structural claim — the traced step's jaxpr executes exactly
+    ONE pallas_call where the per-layer oracle executes L;
+  * the fallback ladder — configs the fused stack cannot serve are
+    rejected with a named reason and drop to the per-layer step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXFP8
+from repro.nn import BlockDef, ModelConfig, blocks, model
+from repro.serve import ContinuousBatchingEngine, ServeConfig
+from repro.serve.engine import _pallas_calls_in
+
+PS = 8
+
+
+def _cfg(fmt="fp8_e4m3", block_size=16, head_dim=16, num_groups=2,
+         window=None, quantize_acts=False, d_model=64):
+    return ModelConfig(
+        name="t", family="dense", d_model=d_model, vocab_size=128,
+        pattern=(BlockDef("attn", window=window),), num_groups=num_groups,
+        num_heads=4, num_kv_heads=2, head_dim=head_dim, d_ff=128,
+        quant=MXFP8.replace(fmt=fmt, block_size=block_size,
+                            quantize_acts=quantize_acts,
+                            quantize_kv_cache=True),
+        decode_kernel="fused")
+
+
+# ---------------------------------------------------------------------------
+# step-level bit-identity vs the per-layer ragged oracle
+# ---------------------------------------------------------------------------
+
+
+def _fill_pool(pool, rng):
+    """Decoy-filled pool: valid random bytes everywhere, so unwritten
+    rows must survive the in-kernel merge untouched and garbage pages
+    must never contribute. Scale bytes stay in a finite-decode range —
+    E8M0 code 255 is an inf scale, which poisons both sides' logits
+    with NaNs whose payload bits are schedule-dependent."""
+    out = {}
+    for key, leaf in pool.items():
+        arr = np.asarray(leaf)
+        if key.endswith("_scales"):
+            out[key] = jnp.asarray(
+                rng.integers(118, 134, arr.shape).astype(np.uint8))
+        elif arr.dtype == np.uint8:
+            out[key] = jnp.asarray(
+                rng.integers(0, 256, arr.shape).astype(np.uint8))
+        else:
+            out[key] = jnp.asarray(
+                rng.normal(size=arr.shape).astype(np.float32)).astype(
+                    arr.dtype)
+    return out
+
+
+def _run_both_steps(cfg, tiered=False, seed=0, w=8):
+    """One mixed ragged batch through oracle and megakernel.
+
+    Row modes cover the full composition: plain decode from a mid-page
+    start (13), a 3-token verify window straddling a page boundary (9),
+    a fresh prefill chunk (0), and a continuation chunk from an
+    unaligned mid-page start (12)."""
+    rng = np.random.default_rng(seed)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    num_slots, num_pages = 4, 12
+    cache = model.init_paged_cache(cfg, num_slots, num_pages, PS,
+                                   tiered=tiered)
+    cache_a = {"groups": tuple(_fill_pool(p, rng)
+                               for p in cache["groups"])}
+    flat, td = jax.tree_util.tree_flatten(cache_a)
+    cache_b = jax.tree_util.tree_unflatten(td, list(flat))
+
+    starts = np.asarray([13, 9, 0, 12], np.int32)
+    n_news = np.asarray([1, 3, w, w], np.int32)
+    lens = starts + n_news
+    r = len(starts)
+    pages_per = [-(-int(t) // PS) for t in lens]
+    perm = rng.permutation(num_pages - 1)  # never the trash page
+    table = np.full((r, max(pages_per) + 1), -1, np.int32)
+    off = 0
+    for i, npg in enumerate(pages_per):
+        table[i, :npg] = perm[off:off + npg]
+        off += npg
+    tokens = rng.integers(0, cfg.vocab_size, (r, w)).astype(np.int32)
+    logit_idx = np.zeros(r, np.int32)
+    page_fmts = None
+    if tiered:
+        page_fmts = rng.integers(0, 3, (num_pages,)).astype(np.int32)
+        for row in table:  # hot-write invariant: written pages are fp8
+            for pidx in row:
+                if pidx >= 0:
+                    page_fmts[pidx] = 0
+        page_fmts = jnp.asarray(page_fmts)
+
+    args = (jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(starts),
+            jnp.asarray(lens), jnp.asarray(logit_idx))
+    la, ca = jax.jit(lambda p, c, *a: model.ragged_step_paged(
+        p, cfg, c, *a, num_logits=2, page_fmts=page_fmts))(
+            params, cache_a, *args)
+    mk = model.pack_megakernel_params(params, cfg)
+    lb, cb = jax.jit(lambda p, c, *a: model.megakernel_step_paged(
+        p, cfg, c, *a, num_logits=2, page_fmts=page_fmts))(
+            mk, cache_b, *args)
+    return np.asarray(la), ca, np.asarray(lb), cb
+
+
+def _assert_bit_identical(la, ca, lb, cb):
+    np.testing.assert_array_equal(la.view(np.uint8), lb.view(np.uint8))
+    for x, y in zip(jax.tree_util.tree_leaves(ca),
+                    jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(x).view(np.uint8),
+                                      np.asarray(y).view(np.uint8))
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1"])
+@pytest.mark.parametrize("block_size", [16, 32, 64])
+def test_megakernel_bit_matches_ragged_oracle(fmt, block_size):
+    """Format x block-size matrix: logits AND pool bytes, exactly."""
+    cfg = _cfg(fmt=fmt, block_size=block_size, head_dim=block_size,
+               d_model=block_size * 4)
+    _assert_bit_identical(*_run_both_steps(cfg, seed=11 + block_size))
+
+
+def test_megakernel_sliding_window():
+    cfg = _cfg(window=12)
+    _assert_bit_identical(*_run_both_steps(cfg, seed=5))
+
+
+@pytest.mark.parametrize("num_groups", [1, 3])
+def test_megakernel_tiered_mixed_pool(num_groups):
+    """Tiered pools: per-page fp8/fp6/fp4 dequant select + trash-page
+    isolation must survive the layer fusion, at L=1 and an odd L."""
+    cfg = _cfg(num_groups=num_groups)
+    _assert_bit_identical(
+        *_run_both_steps(cfg, tiered=True, seed=3 + num_groups))
+
+
+# ---------------------------------------------------------------------------
+# structural: ONE pallas_call per step (oracle pays L)
+# ---------------------------------------------------------------------------
+
+
+def test_megakernel_jaxpr_one_pallas_call():
+    """The tentpole's whole claim, measured on traced jaxprs: the fused
+    step launches 1 device kernel; the per-layer oracle launches L
+    (its one lexical pallas_call times the scan trip count)."""
+    L = 4
+    cfg = _cfg(num_groups=L)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    cache = model.init_paged_cache(cfg, 2, 8, PS)
+    args = (jnp.zeros((2, 4), jnp.int32), jnp.zeros((2, 3), jnp.int32),
+            jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32),
+            jnp.zeros((2,), jnp.int32))
+    ragged = jax.make_jaxpr(
+        lambda p, c: model.ragged_step_paged(p, cfg, c, *args))(
+            params, cache)
+    assert _pallas_calls_in(ragged.jaxpr) == L
+    mk = model.pack_megakernel_params(params, cfg)
+    mega = jax.make_jaxpr(
+        lambda p, c: model.megakernel_step_paged(p, cfg, c, *args))(
+            mk, cache)
+    assert _pallas_calls_in(mega.jaxpr) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level token identity vs the ragged engine
+# ---------------------------------------------------------------------------
+
+
+def _churn_reqs(rng):
+    return [(rng.integers(0, 128, (s,)).astype(np.int32), m)
+            for s, m in [(4, 12), (4, 12), (7, 5), (3, 8)]]
+
+
+def _run_pair(cfg, reqs, **kw):
+    outs, engines = {}, {}
+    for mode in ("ragged", "megakernel"):
+        params, _ = model.init(jax.random.PRNGKey(0), cfg)
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            step_mode=mode, **kw))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        out = eng.run()
+        outs[mode] = [out[i] for i in ids]
+        engines[mode] = eng
+    assert engines["megakernel"].megakernel, (
+        engines["megakernel"]._megakernel_fallback_reason)
+    for a, b in zip(outs["ragged"], outs["megakernel"]):
+        np.testing.assert_array_equal(a, b)
+    return engines
+
+
+SCENARIOS = {
+    "churn-prefix": dict(max_seq=24, max_slots=2, page_size=4, num_pages=7,
+                         prefix_cache=True),
+    "chunked": dict(max_seq=48, max_slots=2, page_size=8, prefill_chunk=8),
+    "spec": dict(max_seq=24, max_slots=2, page_size=4, num_pages=7,
+                 prefix_cache=True, spec_decode=True, num_draft_tokens=2),
+    "tiered": dict(max_seq=48, max_slots=2, page_size=8, prefill_chunk=8,
+                   num_pages=14, tiered=True),
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_megakernel_engine_token_identical(scenario):
+    """Churn, preemption, speculative verify+rollback, tiering, prefix
+    sharing: per-request streams equal the ragged engine exactly, and
+    the jaxpr audit confirms 1 kernel/step vs the oracle's L."""
+    cfg = _cfg()
+    reqs = _churn_reqs(np.random.default_rng(3))
+    engines = _run_pair(cfg, reqs, **SCENARIOS[scenario])
+    sm = engines["megakernel"].cache_stats()
+    sr = engines["ragged"].cache_stats()
+    assert sm["pallas_calls_per_step"] == 1, sm
+    assert sr["pallas_calls_per_step"] == cfg.num_layers, sr
+    assert sm["megakernel"] and not sr["megakernel"]
+    if sm["mixed_steps"]:
+        assert sm["dispatches_per_mixed_step"] == 1.0, sm
+
+
+def test_megakernel_multichunk_prefill_budgeting():
+    """Ragged-aware prefill budgeting: with the batch undersubscribed,
+    prefill_max_chunks=4 retires a 30-token prompt in fewer dispatches
+    than one-chunk-per-step, token streams unchanged (chunk splits are
+    numerics-invariant on the ragged path)."""
+    cfg = _cfg()
+    rng = np.random.default_rng(21)
+    reqs = [(rng.integers(0, 128, (30,)).astype(np.int32), 4),
+            (rng.integers(0, 128, (4,)).astype(np.int32), 6)]
+    outs, engines = {}, {}
+    for tag, mc in (("one", 1), ("four", 4)):
+        params, _ = model.init(jax.random.PRNGKey(0), cfg)
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            step_mode="megakernel", max_seq=48, max_slots=3, page_size=4,
+            prefill_chunk=4, prefill_max_chunks=mc))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        out = eng.run()
+        outs[tag] = [out[i] for i in ids]
+        engines[tag] = eng
+    for a, b in zip(outs["one"], outs["four"]):
+        np.testing.assert_array_equal(a, b)
+    s1 = engines["one"].cache_stats()
+    s4 = engines["four"].cache_stats()
+    assert s4["prefill_dispatches"] < s1["prefill_dispatches"], (s1, s4)
+    assert s4["prefill_rows_per_step"] > s1["prefill_rows_per_step"]
+
+
+def test_scheduler_prefill_chunk_budget():
+    """The budgeting formula's starvation bound: a full batch always
+    drops back to exactly one chunk per sequence per step."""
+    from repro.serve.scheduler import Scheduler
+    sched = Scheduler(max_slots=2, num_pages=16, page_size=4, max_seq=16,
+                      prefill_chunk=4, prefill_max_chunks=3)
+    assert sched.prefill_allowed_chunks() == 3  # empty batch
+    for _ in range(2):
+        sched.submit(np.arange(12, dtype=np.int32), 2)
+    assert sched.admit_next() is not None
+    assert sched.prefill_allowed_chunks() == 3  # one slot still free
+    assert sched.admit_next() is not None
+    assert sched.prefill_allowed_chunks() == 1  # fully subscribed
+    seq = sched.prefilling()[0]
+    # undersubscribed width caps the bite at width and at the prompt
+    assert sched.planned_prefill_real(seq, 4) == 4
+    with pytest.raises(ValueError):
+        Scheduler(max_slots=2, num_pages=16, page_size=4, max_seq=16,
+                  prefill_chunk=4, prefill_max_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# fallback ladder
+# ---------------------------------------------------------------------------
+
+
+def test_reject_reason_ladder():
+    good = _cfg()
+    assert blocks.megakernel_reject_reason(good) is None
+    cases = [
+        (good.replace(pattern=(BlockDef("ssd"),)), "non-attention"),
+        (good.replace(pattern=(BlockDef("attn"),
+                               BlockDef("attn", window=8))),
+         "non-uniform"),
+        (good.replace(pattern=(BlockDef("attn"), BlockDef("attn"))),
+         "stack layout"),
+        (good.replace(prologue=(BlockDef("attn"),)), "stack layout"),
+        (good.replace(pattern=(BlockDef("attn", ffn="none"),)), "ffn"),
+        (good.replace(quant=good.quant.replace(quantize_acts=True)),
+         "activation quantization"),
+        (good.replace(quant=good.quant.replace(quantize_kv_cache=False)),
+         "wide bf16 KV pool"),
+    ]
+    for cfg, needle in cases:
+        reason = blocks.megakernel_reject_reason(cfg)
+        assert reason and needle in reason, (needle, reason)
+
+
+def test_engine_fallback_to_ragged():
+    """A config the fused stack rejects still serves — on the per-layer
+    ragged step, with the reason recorded — and emits the same tokens."""
+    cfg = _cfg(quantize_acts=True)  # rejected by the static ladder
+    reqs = _churn_reqs(np.random.default_rng(7))[:2]
+    outs = {}
+    for mode in ("ragged", "megakernel"):
+        params, _ = model.init(jax.random.PRNGKey(0), cfg)
+        eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+            step_mode=mode, max_seq=32, max_slots=2, page_size=4,
+            prefill_chunk=4))
+        ids = [eng.submit(p, m) for p, m in reqs]
+        out = eng.run()
+        outs[mode] = [out[i] for i in ids]
+        if mode == "megakernel":
+            assert not eng.megakernel
+            assert "activation quantization" in \
+                eng._megakernel_fallback_reason
+            assert eng.ragged  # fell back one rung, not all the way
+    for a, b in zip(outs["ragged"], outs["megakernel"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_fallback_to_split():
+    """Ragged prerequisites unmet (einsum decode kernel): megakernel
+    falls all the way back to split dispatches and still serves."""
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, ServeConfig(
+        step_mode="megakernel", max_seq=32, max_slots=2, page_size=4,
+        decode_kernel="einsum"))
+    assert not eng.megakernel and not eng.ragged
+    assert "ragged prerequisites" in eng._megakernel_fallback_reason
+    rid = eng.submit(np.arange(5, dtype=np.int32), 3)
+    out = eng.run()
+    assert len(out[rid]) == 8
+
+
+def test_megakernel_param_specs_head_columns():
+    """Sharded-megakernel groundwork: packed q/k/v leaves shard their
+    head-column (last) dim, the stacked layer axis stays replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import megakernel_param_specs
+    cfg = _cfg()
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    packed = model.pack_megakernel_params(params, cfg)
+    specs = megakernel_param_specs(packed)
+    for name in ("wq", "wk", "wv"):
+        assert specs["layers"][name]["w"] == P(None, None, "model")
+    assert specs["layers"]["wo"]["w"] == P()
+    assert specs["layers"]["up"]["w"] == P()
+    assert specs["embedding"] == jax.tree_util.tree_map(
+        lambda _: P(), specs["embedding"])
